@@ -1,0 +1,32 @@
+"""Fig. 14 + Table 6: effect of the target accuracy A on execution cost and
+optimization cost."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import build_queries, build_workload, csv_row, evaluate_all
+
+
+def run(quick: bool = True):
+    targets = (0.90, 0.94, 0.98) if quick else (0.90, 0.92, 0.94, 0.96, 0.98)
+    w = build_workload("twitter", 0.9, seed=15)
+    base_q = build_queries(w, 1, n_preds=(2,), seed=16)[0]
+    for A in targets:
+        q = dataclasses.replace(base_q, accuracy_target=A) if dataclasses.is_dataclass(base_q) else base_q
+        q.accuracy_target = A
+        res = evaluate_all(w, q)
+        for m in ("orig", "ns", "pp", "core"):
+            csv_row(
+                f"fig14_A{int(A*100)}_{m}", res[m]["cost_per_record_ms"] * 1e3,
+                (
+                    f"exec_ms_per_rec={res[m]['cost_per_record_ms']:.3f};"
+                    f"acc={res[m]['accuracy']:.3f};qo_ms={res[m]['qo_ms']:.0f};"
+                    f"qo_pct={100*res[m]['qo_ms']/max(res[m]['total_ms'],1e-9):.2f}%"
+                ),
+            )
+
+
+if __name__ == "__main__":
+    run()

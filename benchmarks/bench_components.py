@@ -1,0 +1,70 @@
+"""Fig. 12 + Table 5: effectiveness of CORE's components.
+
+CORE-a (accuracy allocation only, input order), CORE-h (exhaustive order
+search), CORE (branch-and-bound): execution cost should be
+CORE ~= CORE-h < CORE-a, with CORE's optimization cost well below CORE-h's.
+Also reports the node-pruning fractions (§5.3: coarse vs fine-grained tree).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import build_queries, build_workload, csv_row, evaluate_all
+from repro.core import BranchAndBound, ProxyBuilder
+
+
+def run(quick: bool = True):
+    n_q = 2 if quick else 6
+    w = build_workload("twitter", 0.9, seed=9)
+    queries = build_queries(w, n_q, n_preds=(3,), seed=10)
+    agg = {m: {"exec": [], "qo": []} for m in ("core-a", "core-h", "core")}
+    for q in queries:
+        res = evaluate_all(w, q, modes=("orig", "core-a", "core-h", "core"))
+        for m in agg:
+            agg[m]["exec"].append(res[m]["cost_per_record_ms"])
+            agg[m]["qo"].append(res[m]["qo_ms"])
+    for m in agg:
+        csv_row(
+            f"fig12_{m}", float(np.mean(agg[m]["exec"])) * 1e3,
+            (
+                f"exec_ms_per_rec={np.mean(agg[m]['exec']):.3f};"
+                f"qo_ms={np.mean(agg[m]['qo']):.0f}"
+            ),
+        )
+    # §5.3 pruning statistics: coarse vs fine-grained trees
+    for fine, label in ((False, "coarse"), (True, "fine")):
+        pruned = []
+        for q in queries:
+            b = ProxyBuilder(q, w.x_opt, seed=0)
+            bb = BranchAndBound(b, q.accuracy_target, fine_grained=fine, step=0.05)
+            _, trace = bb.run()
+            pruned.append(trace.nodes_pruned_frac)
+        csv_row(
+            f"table5_prune_{label}_tree", 0.0,
+            f"nodes_pruned_frac={np.mean(pruned):.2%}",
+        )
+
+    # §4.3/§4.4 reuse ablation: what sample + classifier reuse each save
+    variants = {
+        "full_reuse": dict(reuse_samples=True, reuse_classifiers=True),
+        "no_classifier_reuse": dict(reuse_samples=True, reuse_classifiers=False),
+        "no_sample_reuse": dict(reuse_samples=False, reuse_classifiers=True),
+    }
+    q = queries[0]
+    for label, kw in variants.items():
+        b = ProxyBuilder(q, w.x_opt, seed=0, **kw)
+        bb = BranchAndBound(b, q.accuracy_target, fine_grained=True, step=0.05)
+        bb.run()
+        st = b.stats
+        csv_row(
+            f"table5_ablation_{label}", st.qo_ms * 1e3,
+            (
+                f"labeling_ms={st.labeling_ms:.0f};training_ms={st.training_ms:.0f};"
+                f"search_ms={st.search_ms:.0f};udf_calls={sum(st.udf_calls.values())};"
+                f"n_trained={st.n_trained};n_reused={st.n_reused}"
+            ),
+        )
+
+
+if __name__ == "__main__":
+    run()

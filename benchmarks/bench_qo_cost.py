@@ -1,0 +1,48 @@
+"""Table 4: decomposition of CORE's optimization cost (labeling / training /
+searching) and its share of total processing time."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import build_queries, build_workload, csv_row, evaluate_all
+
+
+def run(quick: bool = True):
+    n_q = 2 if quick else 4
+    for name in ("twitter", "coco", "ucf101"):
+        w = build_workload(name, 0.9, seed=7)
+        queries = build_queries(w, n_q, seed=8)
+        rows = []
+        for qi, q in enumerate(queries):
+            res = evaluate_all(w, q, modes=("orig", "core"))
+            st = res["core"]["stats"]
+            total = res["core"]["total_ms"]
+            rows.append((st, total, res["orig"]["total_ms"], res["core"]["qo_ms"], q.n))
+            csv_row(
+                f"table4_{name}_q{qi}", res["core"]["qo_ms"] * 1e3,
+                (
+                    f"n_preds={q.n};labeling_ms={st.get('labeling_ms',0):.0f};"
+                    f"training_ms={st.get('training_ms',0):.0f};"
+                    f"search_ms={st.get('search_ms',0):.0f};"
+                    f"qo_pct={100*res['core']['qo_ms']/max(total,1e-9):.2f}%;"
+                    f"reduction={(1-total/res['orig']['total_ms']):.1%}"
+                ),
+            )
+        lab = np.mean([r[0].get("labeling_ms", 0) for r in rows])
+        trn = np.mean([r[0].get("training_ms", 0) for r in rows])
+        srch = np.mean([r[0].get("search_ms", 0) for r in rows])
+        qo = np.mean([r[3] for r in rows])
+        tot = np.mean([r[1] for r in rows])
+        orig = np.mean([r[2] for r in rows])
+        csv_row(
+            f"table4_{name}_avg", qo * 1e3,
+            (
+                f"labeling_ms={lab:.0f};training_ms={trn:.0f};search_ms={srch:.0f};"
+                f"qo_ms={qo:.0f};qo_pct={100*qo/max(tot,1e-9):.2f}%;"
+                f"total_reduction={(1-tot/orig):.1%}"
+            ),
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,24 @@
+"""Fig. 13: scalability — total processing time vs input size."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import build_queries, build_workload, csv_row, evaluate_all
+
+
+def run(quick: bool = True):
+    sizes = (10_000, 20_000, 40_000) if quick else (10_000, 20_000, 40_000, 80_000)
+    for n in sizes:
+        w = build_workload("twitter", 0.9, seed=13, n_override=n)
+        q = build_queries(w, 1, n_preds=(2,), seed=14)[0]
+        res = evaluate_all(w, q)
+        for m in ("orig", "ns", "pp", "core"):
+            csv_row(
+                f"fig13_n{n}_{m}",
+                res[m]["total_ms"] / n * 1e3,
+                f"total_s={res[m]['total_ms']/1e3:.1f};acc={res[m]['accuracy']:.3f}",
+            )
+
+
+if __name__ == "__main__":
+    run()

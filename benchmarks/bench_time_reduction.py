@@ -1,0 +1,45 @@
+"""Fig. 10/11 + §6.3: total processing time (QO + execution) per dataset.
+
+Reports, per dataset family (twitter/coco/ucf101 stand-ins): total times for
+ORIG/NS/PP/CORE with percentiles across queries, average total-time
+reduction vs ORIG (Fig 10 b/d/f), and the per-query breakdown (Fig 11).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import build_queries, build_workload, csv_row, evaluate_all
+
+
+def run(quick: bool = True):
+    n_q = 2 if quick else 10
+    for name in ("twitter", "coco", "ucf101"):
+        w = build_workload(name, 0.9, seed=5)
+        queries = build_queries(w, n_q, seed=6)
+        totals = {m: [] for m in ("orig", "ns", "pp", "core")}
+        accs = {m: [] for m in totals}
+        for qi, q in enumerate(queries):
+            res = evaluate_all(w, q)
+            for m in totals:
+                totals[m].append(res[m]["total_ms"])
+                accs[m].append(res[m]["accuracy"])
+            csv_row(
+                f"fig11_{name}_q{qi}", res["core"]["cost_per_record_ms"] * 1e3,
+                ";".join(f"{m}_total_s={res[m]['total_ms']/1e3:.1f}" for m in totals),
+            )
+        orig_mean = np.mean(totals["orig"])
+        for m in ("ns", "pp", "core"):
+            arr = np.asarray(totals[m])
+            red = 1 - arr.mean() / orig_mean
+            csv_row(
+                f"fig10_{name}_{m}", float(arr.mean()) * 1e3 / max(len(w.x_exec), 1),
+                (
+                    f"total_reduction_vs_orig={red:.1%};"
+                    f"p1={np.percentile(arr,1)/1e3:.1f}s;median={np.median(arr)/1e3:.1f}s;"
+                    f"p99={np.percentile(arr,99)/1e3:.1f}s;mean_acc={np.mean(accs[m]):.3f}"
+                ),
+            )
+
+
+if __name__ == "__main__":
+    run()

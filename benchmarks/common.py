@@ -1,0 +1,105 @@
+"""Shared workload construction for the benchmark suite.
+
+Three synthetic stand-ins mirror the paper's datasets (offline container —
+see DESIGN.md assumption log): feature dim / UDF cost ratios / selectivities
+follow the paper's setup (text: cheap NLP UDFs; image: heavier detector;
+video: heaviest).  Correlation is the controlled variable.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import execute_plan, optimize, orig_plan, ns_plan, pp_plan, plan_accuracy
+from repro.data.synthetic import Dataset, make_dataset, make_query, make_udfs
+
+DATASET_PROFILES = {
+    # name: (n, n_features, udf_cost_ms, cost_scale, k_frac)
+    "twitter": dict(n=40_000, n_features=64, udf_cost=20.0, k_frac=0.05),
+    "coco": dict(n=20_000, n_features=128, udf_cost=80.0, k_frac=0.08),
+    "ucf101": dict(n=8_000, n_features=96, udf_cost=200.0, k_frac=0.15),
+}
+
+
+@dataclass
+class Workload:
+    ds: Dataset
+    udfs: list
+    k: int  # optimization-sample size
+
+    @property
+    def x_opt(self):
+        return self.ds.x[: self.k]
+
+    @property
+    def x_exec(self):
+        return self.ds.x[self.k :]
+
+
+@lru_cache(maxsize=16)
+def build_workload(name: str, correlation: float, seed: int = 0,
+                   n_override: int = 0) -> Workload:
+    prof = DATASET_PROFILES[name]
+    n = n_override or prof["n"]
+    ds = make_dataset(
+        name=name, n=n, n_features=prof["n_features"], n_columns=4,
+        correlation=correlation, feature_noise=1.1, label_noise=0.25, seed=seed,
+    )
+    udfs = make_udfs(
+        ds, hidden=48, depth=2, train_rows=3000, seed=seed,
+        declared_cost_ms=prof["udf_cost"],
+        cost_scale={0: 1.0, 1: 3.0, 2: 0.3, 3: 1.5},
+    )
+    return Workload(ds=ds, udfs=udfs, k=int(prof["k_frac"] * n))
+
+
+def build_queries(w: Workload, n_queries: int, *, n_preds=(2, 3), A=0.9, seed=0):
+    rng = np.random.RandomState(seed)
+    queries = []
+    for qi in range(n_queries):
+        k = n_preds[qi % len(n_preds)]
+        cols = tuple(sorted(rng.choice(4, k, replace=False)))
+        sel = float(rng.uniform(0.35, 0.6))
+        queries.append(
+            make_query(w.ds, w.udfs, columns=list(cols), target_selectivity=sel,
+                       accuracy_target=A, seed=seed + qi)
+        )
+    return queries
+
+
+def evaluate_all(w: Workload, query, *, modes=("orig", "ns", "pp", "core"), step=0.02):
+    """Optimize + execute each mode; returns {mode: result dict}."""
+    out = {}
+    orig = orig_plan(query)
+    orig_res = execute_plan(orig, w.x_exec)
+    for mode in modes:
+        t0 = time.perf_counter()
+        if mode == "orig":
+            plan = orig
+        elif mode == "ns":
+            plan = ns_plan(query, w.x_opt)
+        elif mode == "pp":
+            plan = pp_plan(query, w.x_opt, step=step)
+        else:
+            plan = optimize(query, w.x_opt, mode=mode, step=step)
+        qo_ms = (time.perf_counter() - t0) * 1e3
+        res = orig_res if mode == "orig" else execute_plan(plan, w.x_exec)
+        out[mode] = {
+            "plan": plan,
+            "qo_ms": qo_ms,
+            "exec_cost_ms": res.model_cost_ms,
+            "cost_per_record_ms": res.cost_per_record(len(w.x_exec)),
+            "wall_ms": res.wall_ms,
+            "accuracy": plan_accuracy(res, orig_res),
+            "total_ms": qo_ms + res.model_cost_ms,
+            "stats": plan.meta.get("stats", {}),
+        }
+    return out
+
+
+def csv_row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.3f},{derived}")

@@ -1,0 +1,48 @@
+"""Roofline table: reads the dry-run JSON cache and prints the per-cell
+compute/memory/collective terms, dominant bottleneck, and MODEL_FLOPS
+ratios (assignment deliverable g)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load_cells(mesh_tag: str = "pod16x16"):
+    out = []
+    d = RESULTS / mesh_tag
+    if not d.exists():
+        return out
+    for f in sorted(d.glob("*.json")):
+        out.append(json.loads(f.read_text()))
+    return out
+
+
+def run(quick: bool = True, mesh_tag: str = "pod16x16"):
+    cells = load_cells(mesh_tag)
+    if not cells:
+        print(f"# no dry-run results under {RESULTS/mesh_tag}; run "
+              "`python -m repro.launch.dryrun --all` first")
+        return
+    print(f"# Roofline ({mesh_tag}): terms in seconds per step, per-device program")
+    print("cell,us_per_call,derived")
+    for c in cells:
+        name = f"roofline_{c['arch']}__{c['shape']}"
+        if c["status"] != "ok":
+            print(f"{name},0,status={c['status']}")
+            continue
+        r = c["roofline"]
+        t_bound = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        print(
+            f"{name},{t_bound*1e6:.1f},"
+            f"dom={r['dominant']};t_comp={r['t_compute_s']:.3g};"
+            f"t_mem={r['t_memory_s']:.3g};t_coll={r['t_collective_s']:.3g};"
+            f"useful_flops_ratio={r['useful_flops_ratio']:.3f};"
+            f"roofline_fraction={r['roofline_fraction']:.4f};"
+            f"mem_eff={r.get('memory_efficiency', 0):.4f}"
+        )
+
+
+if __name__ == "__main__":
+    run()

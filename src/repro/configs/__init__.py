@@ -1,0 +1,5 @@
+from repro.configs.base import (
+    AttentionConfig, EncoderConfig, HybridConfig, ModelConfig, MoEConfig,
+    SSMConfig, SHAPES, WorkloadShape, supports_shape,
+)
+from repro.configs.registry import ARCHS, cells, get_config, list_archs, reduced_config

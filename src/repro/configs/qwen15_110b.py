@@ -1,0 +1,4 @@
+"""Config module for --arch: re-exports the canonical config from archs.py."""
+from repro.configs.archs import QWEN15_110B as CONFIG
+
+__all__ = ["CONFIG"]

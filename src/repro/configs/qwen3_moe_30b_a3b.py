@@ -1,0 +1,4 @@
+"""Config module for --arch: re-exports the canonical config from archs.py."""
+from repro.configs.archs import QWEN3_MOE_30B_A3B as CONFIG
+
+__all__ = ["CONFIG"]

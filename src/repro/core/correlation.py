@@ -1,0 +1,41 @@
+"""CORDS chi-squared correlation score (paper section 2.2).
+
+kappa^2 = 1 / (n (min(d1,d2)-1)) * sum_ij (n_ij - n_i. n_.j / n)^2 / (n_i. n_.j / n)
+
+i.e. Cramer's-V-squared measured on a sample (CORDS uses 10K rows).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def correlation_score(col1: np.ndarray, col2: np.ndarray, sample: int = 10_000,
+                      seed: int = 0) -> float:
+    n_total = len(col1)
+    if n_total > sample:
+        idx = np.random.RandomState(seed).choice(n_total, sample, replace=False)
+        col1, col2 = col1[idx], col2[idx]
+    n = len(col1)
+    v1, inv1 = np.unique(col1, return_inverse=True)
+    v2, inv2 = np.unique(col2, return_inverse=True)
+    d1, d2 = len(v1), len(v2)
+    if min(d1, d2) < 2:
+        return 0.0
+    counts = np.zeros((d1, d2))
+    np.add.at(counts, (inv1, inv2), 1)
+    row = counts.sum(axis=1, keepdims=True)
+    col = counts.sum(axis=0, keepdims=True)
+    expected = row * col / n
+    with np.errstate(divide="ignore", invalid="ignore"):
+        chi2 = np.where(expected > 0, (counts - expected) ** 2 / expected, 0.0).sum()
+    return float(chi2 / (n * (min(d1, d2) - 1)))
+
+
+def query_correlation(label_columns: np.ndarray) -> float:
+    """Max pairwise kappa^2 over a query's predicate columns (n, k)."""
+    k = label_columns.shape[1]
+    best = 0.0
+    for i in range(k):
+        for j in range(i + 1, k):
+            best = max(best, correlation_score(label_columns[:, i], label_columns[:, j]))
+    return best

@@ -1,0 +1,58 @@
+"""Cost model: Eq. 3.1 execution cost and Lemma-4 bounds.
+
+C(sigma_hat_i, alpha_i) = (prod_{j<i} s_j alpha_j) * (c_hat_i + (1-r_i) c_i)
+
+All costs are per-raw-input-record (the prefix product converts stage-local
+per-record cost into raw-input units).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence
+
+
+def stage_cost(prefix_frac: float, proxy_cost: float, udf_cost: float,
+               reduction: float) -> float:
+    return prefix_frac * (proxy_cost + (1.0 - reduction) * udf_cost)
+
+
+def plan_cost(alphas: Sequence[float], reductions: Sequence[float],
+              selectivities: Sequence[float], proxy_costs: Sequence[float],
+              udf_costs: Sequence[float]) -> float:
+    total, prefix = 0.0, 1.0
+    for a, r, s, ch, c in zip(alphas, reductions, selectivities, proxy_costs, udf_costs):
+        total += stage_cost(prefix, ch, c, r)
+        prefix *= s * a
+    return total
+
+
+@dataclass
+class Bounds:
+    lower: float
+    upper: float
+
+    def overlaps(self, other: "Bounds") -> bool:
+        return self.lower <= other.upper and other.lower <= self.upper
+
+    @property
+    def mean(self) -> float:
+        return 0.5 * (self.lower + self.upper)
+
+
+def node_bounds(depth: int, accuracy_target: float, proxy_cost: float,
+                udf_cost: float, *, known_prefix: float = None,
+                s_bounds=(0.0, 1.0), r_bounds=(0.0, 1.0)) -> Bounds:
+    """Lemma 4: lower bound uses alpha^l=A, s^l, r^u; upper uses alpha^u=1,
+    s^u, r^l.  ``known_prefix`` fixes the prefix product when ancestors have
+    been built (update_node tightening)."""
+    A = accuracy_target
+    s_l, s_u = s_bounds
+    r_l, r_u = r_bounds
+    if known_prefix is not None:
+        lo_prefix = hi_prefix = known_prefix
+    else:
+        lo_prefix = (s_l * A) ** depth
+        hi_prefix = (s_u * 1.0) ** depth
+    lower = lo_prefix * (proxy_cost + (1.0 - r_u) * udf_cost)
+    upper = hi_prefix * (proxy_cost + (1.0 - r_l) * udf_cost)
+    return Bounds(lower, upper)

@@ -1,0 +1,112 @@
+"""Batched cascade executor (TPU-native adaptation of the paper's
+row-stream executor — see DESIGN.md §3).
+
+Executes a PhysicalPlan over a record stream in fixed-size microbatches:
+proxy scores gate each expensive UDF; survivors are compacted so the UDF
+always processes dense batches.  Cost is accounted both as measured wall
+time and via the per-record cost model (ms/record), which is what the
+paper's figures report.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.query import PhysicalPlan, Query
+
+
+@dataclass
+class StageStats:
+    pred_idx: int
+    n_in: int = 0
+    n_proxy_kept: int = 0
+    n_udf: int = 0
+    n_pass: int = 0
+    proxy_ms: float = 0.0
+    udf_ms: float = 0.0
+
+    @property
+    def empirical_reduction(self) -> float:
+        return 1.0 - self.n_proxy_kept / max(self.n_in, 1)
+
+
+@dataclass
+class ExecResult:
+    passed: np.ndarray  # indices of records returned by the plan
+    stages: List[StageStats]
+    wall_ms: float
+    model_cost_ms: float  # per-record cost model total (paper's metric)
+
+    def cost_per_record(self, n: int) -> float:
+        return self.model_cost_ms / max(n, 1)
+
+
+def execute_plan(
+    plan: PhysicalPlan,
+    x: np.ndarray,
+    *,
+    batch_size: int = 8192,
+    use_kernel: bool = False,
+) -> ExecResult:
+    """Run the cascade over ``x`` (N, F).  Returns passing record indices."""
+    n = x.shape[0]
+    stages = [StageStats(pred_idx=s.pred_idx) for s in plan.stages]
+    t_start = time.perf_counter()
+    model_cost = 0.0
+    passed: List[np.ndarray] = []
+
+    scorer = None
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        scorer = kops.proxy_score_batch
+
+    for start in range(0, n, batch_size):
+        idx = np.arange(start, min(start + batch_size, n))
+        alive = idx
+        for si, stage in enumerate(plan.stages):
+            st = stages[si]
+            st.n_in += len(alive)
+            if len(alive) == 0:
+                continue
+            if stage.proxy is not None:
+                t0 = time.perf_counter()
+                if scorer is not None and stage.proxy.kind == "svm":
+                    keep = scorer(stage.proxy.params, x[alive], stage.threshold)
+                else:
+                    keep = stage.proxy.score(x[alive]) >= stage.threshold
+                st.proxy_ms += (time.perf_counter() - t0) * 1e3
+                model_cost += len(alive) * stage.proxy.cost
+                alive = alive[np.asarray(keep)]
+            st.n_proxy_kept += len(alive)
+            if len(alive) == 0:
+                continue
+            pred = plan.query.predicates[stage.pred_idx]
+            t0 = time.perf_counter()
+            labels = pred.udf(x[alive])
+            st.udf_ms += (time.perf_counter() - t0) * 1e3
+            model_cost += len(alive) * pred.udf.cost
+            st.n_udf += len(alive)
+            alive = alive[pred.evaluate(labels)]
+            st.n_pass += len(alive)
+        passed.append(alive)
+
+    return ExecResult(
+        passed=np.concatenate(passed) if passed else np.empty(0, np.int64),
+        stages=stages,
+        wall_ms=(time.perf_counter() - t_start) * 1e3,
+        model_cost_ms=model_cost,
+    )
+
+
+def plan_accuracy(result: ExecResult, orig: ExecResult) -> float:
+    """Fraction of the original query's output kept by the optimized plan
+    (the paper's definition of A)."""
+    orig_set = set(orig.passed.tolist())
+    if not orig_set:
+        return 1.0
+    kept = sum(1 for i in result.passed.tolist() if i in orig_set)
+    return kept / len(orig_set)

@@ -1,0 +1,87 @@
+"""CORE optimizer entry points.
+
+``optimize(query, x_sample, ...)`` builds proxy models ONLINE on the k%
+optimization sample and returns a PhysicalPlan:
+
+* mode="core"    — branch-and-bound over orders (Alg. 2, fine-grained tree)
+                   + accuracy allocation (Alg. 1).           [the paper]
+* mode="core-a"  — input order, accuracy allocation only.    [§6.5 CORE-a]
+* mode="core-h"  — exhaustive order search.                  [§6.5 CORE-h]
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.accuracy import Allocation, accuracy_allocation
+from repro.core.bnb import BranchAndBound, SearchTrace
+from repro.core.builder import ProxyBuilder
+from repro.core.query import PhysicalPlan, PlanStage, Query, all_orders
+
+
+def _plan_from_allocation(query: Query, alloc: Allocation, meta: dict) -> PhysicalPlan:
+    stages = []
+    for i, p in enumerate(alloc.order):
+        proxy = alloc.proxies[i]
+        stages.append(
+            PlanStage(
+                pred_idx=p,
+                proxy=proxy,
+                alpha=alloc.alphas[i],
+                threshold=proxy.r_curve.threshold_for(alloc.alphas[i]),
+                est_reduction=alloc.reductions[i],
+                est_selectivity=alloc.selectivities[i],
+                est_cost=alloc.stage_costs[i],
+            )
+        )
+    return PhysicalPlan(query=query, stages=stages, est_total_cost=alloc.total_cost, meta=meta)
+
+
+def optimize(
+    query: Query,
+    x_sample: np.ndarray,
+    *,
+    mode: str = "core",
+    kind: str = "svm",
+    step: float = 0.02,
+    eps: float = 0.1,
+    framework: str = "exhaustive",
+    fine_grained: bool = True,
+    seed: int = 0,
+    builder: Optional[ProxyBuilder] = None,
+) -> PhysicalPlan:
+    t_start = time.perf_counter()
+    A = query.accuracy_target
+    builder = builder or ProxyBuilder(query, x_sample, kind=kind, eps=eps, seed=seed)
+    trace: Optional[SearchTrace] = None
+    if mode == "core-a":
+        alloc = accuracy_allocation(builder, tuple(range(query.n)), A, step=step,
+                                    framework=framework)
+    elif mode == "core-h":
+        best = None
+        for order in all_orders(query.n):
+            alloc = accuracy_allocation(builder, order, A, step=step, framework=framework)
+            if best is None or alloc.total_cost < best.total_cost:
+                best = alloc
+        alloc = best
+    elif mode == "core":
+        bb = BranchAndBound(builder, A, step=step, fine_grained=fine_grained,
+                            framework=framework)
+        alloc, trace = bb.run()
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    meta = {
+        "mode": mode,
+        "stats": builder.stats.as_dict(),
+        "wall_ms": (time.perf_counter() - t_start) * 1e3,
+    }
+    if trace is not None:
+        meta["trace"] = {
+            "nodes_total": trace.nodes_total,
+            "nodes_visited": trace.nodes_visited,
+            "nodes_pruned_frac": trace.nodes_pruned_frac,
+            "plans_pruned": trace.plans_pruned,
+        }
+    return _plan_from_allocation(query, alloc, meta)

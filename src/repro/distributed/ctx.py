@@ -1,0 +1,120 @@
+"""Ambient mesh context for activation sharding constraints.
+
+Model code is mesh-agnostic: it calls ``constrain(x, spec_kind)`` which is a
+no-op when no mesh is active (CPU tests, single device) and a
+``with_sharding_constraint`` under the production mesh.  Without these
+anchors GSPMD propagation picks pathological layouts (e.g. batch-replicated
+attention) for the 256/512-device dry-run.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+# residual-stream (B, S, D) anchor: dim kinds per axis.  Default shards the
+# batch; decode under 2-D tensor-parallel serving instead shards d_model so
+# weights stay stationary and only (tiny) activations move.
+_TOKEN_SPEC: tuple = ("batch", None, None)
+# §Perf opt: also anchor the residual after EVERY sub-block (attention and
+# MLP separately) — stops GSPMD drift that inserts redundant all-gathers of
+# the residual in the backward pass.
+_MID_ANCHORS: bool = False
+# §Perf opt: expert-parallel MoE via shard_map (see models.moe.moe_apply_ep)
+_EP: bool = False
+# §Perf opt: sequence-shard attention scores when q-heads are not divisible
+# by the TP degree (e.g. deepseek-coder's 56 heads on a 16-way model axis);
+# without it GSPMD all-reduces the full (S, S) score tensor per layer.
+_ATTN_SEQ: bool = False
+
+
+def set_mesh(mesh: Optional[Mesh], token_spec: tuple = ("batch", None, None),
+             mid_anchors: bool = False, ep: bool = False, attn_seq: bool = False):
+    global _MESH, _TOKEN_SPEC, _MID_ANCHORS, _EP, _ATTN_SEQ
+    _MESH = mesh
+    _TOKEN_SPEC = token_spec
+    _MID_ANCHORS = mid_anchors
+    _EP = ep
+    _ATTN_SEQ = attn_seq
+
+
+def ep_enabled() -> bool:
+    return _EP and _MESH is not None
+
+
+def attn_seq_enabled() -> bool:
+    return _ATTN_SEQ and _MESH is not None
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+@contextmanager
+def use_mesh(mesh: Mesh, token_spec: tuple = ("batch", None, None),
+             mid_anchors: bool = False, ep: bool = False, attn_seq: bool = False):
+    prev = (_MESH, _TOKEN_SPEC, _MID_ANCHORS, _EP, _ATTN_SEQ)
+    set_mesh(mesh, token_spec, mid_anchors, ep, attn_seq)
+    try:
+        yield
+    finally:
+        set_mesh(*prev)
+
+
+def _batch_axes(mesh: Mesh):
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _maybe(mesh: Mesh, dim: int, axes):
+    if axes is None:
+        return None
+    names = (axes,) if isinstance(axes, str) else axes
+    size = 1
+    for a in names:
+        size *= mesh.shape[a]
+    return axes if dim % size == 0 else None
+
+
+def constrain(x, *dim_kinds: Optional[str]):
+    """Apply a sharding constraint; dim kinds: "batch" | "model" | None.
+
+    Silently degrades per-dim when sizes don't divide the axis.
+    """
+    mesh = _MESH
+    if mesh is None:
+        return x
+    spec = []
+    for i, kind in enumerate(dim_kinds):
+        if kind == "batch":
+            spec.append(_maybe(mesh, x.shape[i], _batch_axes(mesh)))
+        elif kind == "model":
+            spec.append(_maybe(mesh, x.shape[i], "model"))
+        elif kind == "data":
+            spec.append(_maybe(mesh, x.shape[i], "data"))
+        elif kind == "pod":
+            spec.append(
+                _maybe(mesh, x.shape[i], "pod") if "pod" in mesh.axis_names else None
+            )
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def constrain_tokens(x):
+    """Residual stream (B, S, D): anchored per the active token spec."""
+    return constrain(x, *_TOKEN_SPEC)
+
+
+def constrain_mid(x):
+    """Sub-block residual anchor (only under the §Perf opt variant)."""
+    if not _MID_ANCHORS:
+        return x
+    return constrain(x, *_TOKEN_SPEC)
+
+
+def constrain_logits(x):
+    """(B, S, V): batch over data axes, vocab over model."""
+    return constrain(x, "batch", None, "model")

@@ -1,0 +1,204 @@
+"""Sharding rules: parameter/optimizer/cache/batch PartitionSpecs per mode.
+
+Modes
+-----
+* ``train``      — ZeRO-style FSDP + TP: matmul weights shard
+                   (second-to-last dim over the batch axes, last over
+                   "model"); optimizer states follow params.
+* ``serve_tp``   — inference TP: column-parallel weights shard their output
+                   dim over "model", row-parallel their input dim; experts
+                   shard over "model" (EP).
+* ``serve_2d``   — big-model serving (params/chip would exceed HBM under
+                   plain TP): TP plus the other matmul dim over the batch
+                   axes (weight-gathered serving).  Picked automatically by
+                   ``serve_mode_for``.
+
+Every rule degrades to replication when a dim is not divisible by the axis
+size (``_maybe``), so any (arch x mesh) combination lowers.
+Intermediate activations are left to GSPMD propagation; the §Perf hillclimb
+adds explicit constraints where propagation is weak.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+
+# weights whose LAST dim is the parallel (output) dim under TP
+_COL_PARALLEL = {
+    "wq", "wk", "wv", "wg", "wi", "wkv_a", "wkv_b", "in_proj", "wx", "wgate",
+    "wa",
+}
+# weights whose FIRST matmul dim is the parallel (input) dim under TP
+_ROW_PARALLEL = {"wo", "out_proj"}
+_EXPERT_STACKED = 4  # (L, E, d, f)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _maybe(mesh: Mesh, dim: int, axes):
+    """axes if dim divides evenly, else None (replicate)."""
+    if axes is None:
+        return None
+    return axes if dim % _axis_size(mesh, axes) == 0 else None
+
+
+def serve_mode_for(cfg, mesh: Mesh) -> str:
+    """Choose TP vs 2-D serving sharding from the per-chip footprint."""
+    tp = mesh.shape["model"]
+    per_chip_gb = cfg.n_params() * 2 / tp / 1e9
+    return "serve_2d" if per_chip_gb > 6.0 else "serve_tp"
+
+
+def param_spec(path_names: Tuple[str, ...], shape: Tuple[int, ...], mesh: Mesh,
+               mode: str) -> P:
+    name = path_names[-1] if path_names else ""
+    fsdp = batch_axes(mesh)
+    ndim = len(shape)
+    if ndim <= 1 or name in ("conv_w", "conv_b"):
+        return P()
+    is_expert = name in ("wg", "wi", "wo") and ndim == _EXPERT_STACKED
+    if mode == "train":
+        # FSDP x TP with col/row orientation: contractions stay local to the
+        # "model" axis (true tensor-parallel compute); the batch axes shard
+        # the other matmul dim ZeRO-style (weights all-gathered per layer).
+        if name == "embed":
+            # vocab over model only: a 2-D-sharded table turns the embedding
+            # gather/scatter-add into SPMD "involuntary full remat"
+            return P(_maybe(mesh, shape[0], "model"), None)
+        if name == "lm_head":
+            return P(_maybe(mesh, shape[-2], fsdp), _maybe(mesh, shape[-1], "model"))
+        if is_expert:
+            spec = [None] * ndim
+            spec[1] = _maybe(mesh, shape[1], "model")  # EP for experts
+            spec[-1] = _maybe(mesh, shape[-1], fsdp)
+            return P(*spec)
+        spec = [None] * ndim
+        if name in _ROW_PARALLEL:
+            spec[-2] = _maybe(mesh, shape[-2], "model")
+            spec[-1] = _maybe(mesh, shape[-1], fsdp)
+        else:
+            spec[-2] = _maybe(mesh, shape[-2], fsdp)
+            spec[-1] = _maybe(mesh, shape[-1], "model")
+        return P(*spec)
+    # serving modes
+    data = fsdp if mode == "serve_2d" else None
+    if name == "embed":
+        return P(_maybe(mesh, shape[0], "model"),
+                 _maybe(mesh, shape[1], data) if data else None)
+    if name == "lm_head":
+        return P(_maybe(mesh, shape[0], data) if data else None,
+                 _maybe(mesh, shape[1], "model"))
+    if is_expert:
+        spec = [None] * ndim
+        spec[1] = _maybe(mesh, shape[1], "model")  # experts over model (EP)
+        return P(*spec)
+    if name in _ROW_PARALLEL:
+        spec = [None] * ndim
+        spec[-2] = _maybe(mesh, shape[-2], "model")
+        if data:
+            spec[-1] = _maybe(mesh, shape[-1], data)
+        return P(*spec)
+    if name in _COL_PARALLEL or name == "router":
+        spec = [None] * ndim
+        spec[-1] = _maybe(mesh, shape[-1], "model")
+        if data:
+            spec[-2] = _maybe(mesh, shape[-2], data)
+        return P(*spec)
+    spec = [None] * ndim
+    spec[-1] = _maybe(mesh, shape[-1], "model")
+    return P(*spec)
+
+
+def _names_of(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            names.append(str(k.key))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            names.append(k.name)
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            names.append(str(k.idx))
+    return tuple(names)
+
+
+def params_shardings(params_tree, mesh: Mesh, mode: str):
+    """NamedSharding pytree matching ``params_tree`` (works on eval_shape
+    abstract trees too)."""
+
+    def f(path, leaf):
+        spec = param_spec(_names_of(path), leaf.shape, mesh, mode)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(f, params_tree)
+
+
+def opt_shardings(opt_state_tree, mesh: Mesh, mode: str = "train"):
+    """Optimizer states (mu/nu) mirror the param rules; scalars replicate."""
+
+    def f(path, leaf):
+        names = _names_of(path)
+        if len(leaf.shape) == 0:
+            return NamedSharding(mesh, P())
+        spec = param_spec(names, leaf.shape, mesh, mode)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(f, opt_state_tree)
+
+
+# ------------------------------------------------------------ data / cache
+def batch_sharding(batch_tree, mesh: Mesh):
+    """Shard the leading (batch) dim of every input over the batch axes."""
+    fsdp = batch_axes(mesh)
+
+    def f(leaf):
+        if not leaf.shape:
+            return NamedSharding(mesh, P())
+        spec = [None] * len(leaf.shape)
+        spec[0] = _maybe(mesh, leaf.shape[0], fsdp)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(f, batch_tree)
+
+
+def cache_sharding(cache_tree, mesh: Mesh, *, seq_axis_by_len: bool = True):
+    """KV/state cache sharding for decode.
+
+    Layout per leaf (L, B, T, ...):
+      * B over the batch axes when divisible;
+      * the longest remaining dim (sequence T for KV, heads/width for SSM
+        state) over "model" when divisible — flash-decode style
+        sequence-sharded KV.
+    Scalars (pos counters) replicate.
+    """
+    fsdp = batch_axes(mesh)
+
+    def f(leaf):
+        shape = leaf.shape
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        spec = [None] * len(shape)
+        b_dim = 1 if len(shape) >= 2 else 0
+        spec[b_dim] = _maybe(mesh, shape[b_dim], fsdp)
+        # pick the largest dim after batch for the model axis
+        cand = [i for i in range(len(shape)) if i > b_dim]
+        if cand:
+            i_big = max(cand, key=lambda i: shape[i])
+            spec[i_big] = _maybe(mesh, shape[i_big], "model")
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(f, cache_tree)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,111 @@
+"""Jit'd wrappers around the Pallas kernels.
+
+On TPU the kernels run compiled (interpret=False); in this CPU container
+they run in interpret mode, which executes the kernel body in Python for
+correctness validation — the BlockSpec tiling is identical either way.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.proxy_score import proxy_score
+from repro.kernels.ssd_scan import ssd_chunk
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def interpret_default() -> bool:
+    return not _on_tpu()
+
+
+# ----------------------------------------------------------- proxy scoring
+def fold_standardizer(params):
+    """Fold (x - mean)/scale into (w, b): the kernel then applies a single
+    affine map.  params: LinearParams."""
+    w = np.asarray(params.w) / np.asarray(params.scale)
+    b = float(params.b) - float(np.asarray(params.mean) @ w)
+    return w.astype(np.float32), np.float32(b)
+
+
+def proxy_score_batch(params, x, threshold: float):
+    """Single-proxy convenience used by the executor: returns keep mask."""
+    w, b = fold_standardizer(params)
+    _scores, mask = proxy_score(
+        jnp.asarray(x, jnp.float32),
+        jnp.asarray(w)[:, None],
+        jnp.asarray([b]),
+        jnp.asarray([threshold], jnp.float32),
+        interpret=interpret_default(),
+    )
+    return np.asarray(mask[:, 0])
+
+
+def proxy_score_multi(param_list, x, thresholds):
+    """Score several linear proxies in ONE fused pass (the serving engine
+    evaluates a cascade's proxies together when profitable)."""
+    ws, bs = zip(*(fold_standardizer(p) for p in param_list))
+    w = jnp.stack([jnp.asarray(w) for w in ws], axis=1)  # (F, P)
+    b = jnp.asarray(bs)
+    scores, mask = proxy_score(
+        jnp.asarray(x, jnp.float32), w, b, jnp.asarray(thresholds, jnp.float32),
+        interpret=interpret_default(),
+    )
+    return np.asarray(scores), np.asarray(mask)
+
+
+# -------------------------------------------------------------- attention
+def attention(q, k, v, *, causal=True):
+    return flash_attention(q, k, v, causal=causal, interpret=interpret_default())
+
+
+# ------------------------------------------------------------------- SSD
+def ssd(x, dt, A_log, B, C, D, chunk: int):
+    """Full SSD forward built on the chunk kernel + jnp inter-chunk scan.
+
+    Same signature/semantics as models.ssm.ssd_chunked (b, s, h, p)...
+    Returns (y (b,s,h,p), final_state (b,h,p,n)).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    nc = s // chunk
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    dA = dt.astype(jnp.float32) * A[None, None, :]
+    xdt = (x * dt[..., None].astype(x.dtype)).reshape(b, nc, chunk, h, p)
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2).reshape(b, nc, chunk, h, n)
+    Ch = jnp.repeat(C, rep, axis=2).reshape(b, nc, chunk, h, n)
+    dAc = dA.reshape(b, nc, chunk, h)
+
+    def per_batch(args):
+        xb, dab, bb, cb = args
+        return ssd_chunk(xb, dab, bb, cb, interpret=interpret_default())
+
+    # vmap over batch: kernel grid covers (nc*h); batch handled by vmap
+    y_diag, states, chunk_decay = jax.vmap(
+        lambda xb, dab, bb, cb: ssd_chunk(xb, dab, bb, cb, interpret=interpret_default())
+    )(xdt, dAc, Bh, Ch)
+    # inter-chunk recurrence (nc steps, tiny)
+    def scan_body(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry
+
+    from jax import lax
+
+    final, prev = lax.scan(
+        scan_body,
+        jnp.zeros((b, h, p, n), jnp.float32),
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev = prev.transpose(1, 0, 2, 3, 4)  # (b, nc, h, p, n)
+    cum = jnp.cumsum(dAc.transpose(0, 3, 1, 2), axis=-1)  # (b, h, nc, Q)
+    state_decay_out = jnp.exp(cum)
+    y_off = jnp.einsum("bcqhn,bchpn,bhcq->bcqhp", Ch.astype(jnp.float32), prev, state_decay_out)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(x.dtype), final

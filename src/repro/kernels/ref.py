@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def proxy_score_ref(x, w, b, thresholds):
+    """x: (N, F); w: (F, P); b: (P,); thresholds: (P,).
+    Returns (scores (N, P) f32, mask (N, P) bool)."""
+    scores = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return scores, scores >= thresholds.astype(jnp.float32)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q: (B, Sq, H, D); k/v: (B, Sk, K, D) with H % K == 0.  fp32 softmax."""
+    B, Sq, H, D = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Sq, K, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k, preferred_element_type=jnp.float32) * scale
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+    return o.reshape(B, Sq, H, D)
+
+
+def ssd_chunk_ref(x, dA, B, C):
+    """Per-chunk SSD terms (the kernel computes these for every chunk):
+
+    x: (nc, Q, H, P) inputs (pre-multiplied by dt)
+    dA: (nc, Q, H) per-step log-decay (dt * A, negative)
+    B, C: (nc, Q, H, N) input/output projections (groups pre-broadcast)
+
+    Returns:
+      y_diag: (nc, Q, H, P) intra-chunk output
+      states: (nc, H, P, N) per-chunk end state contribution
+      chunk_decay: (nc, H) exp(sum dA) per chunk
+    """
+    dAc = jnp.moveaxis(dA.astype(jnp.float32), -1, 1)  # (nc, H, Q)
+    cum = jnp.cumsum(dAc, axis=-1)  # (nc, H, Q)
+    Q = x.shape[1]
+    seg = cum[..., :, None] - cum[..., None, :]  # (nc, H, Q, Q)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(mask, jnp.exp(seg), 0.0)
+    scores = jnp.einsum("cqhn,cshn->chqs", C.astype(jnp.float32), B.astype(jnp.float32))
+    y_diag = jnp.einsum("chqs,chqs,cshp->cqhp", scores, L, x.astype(jnp.float32))
+    decay_states = jnp.exp(cum[..., -1:] - cum)  # (nc, H, Q)
+    states = jnp.einsum(
+        "cqhn,chq,cqhp->chpn", B.astype(jnp.float32), decay_states, x.astype(jnp.float32)
+    )
+    return y_diag, states, jnp.exp(cum[..., -1])

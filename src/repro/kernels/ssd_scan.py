@@ -1,0 +1,82 @@
+"""Mamba-2 SSD chunk kernel: the intra-chunk (quadratic) block of the
+state-space-duality decomposition.
+
+Per (batch, head, chunk) tile, computes in VMEM:
+  * L = exp(segsum(dA))                  (Q, Q) decay matrix
+  * y_diag = (C B^T * L) x               intra-chunk output
+  * state  = B^T (decay * x)             the chunk's contribution to the
+                                         inter-chunk recurrence
+  * chunk_decay = exp(sum dA)
+
+The O(nc) inter-chunk recurrence is tiny and stays in jnp (``ops.ssd``),
+mirroring the real mamba2 kernel split (chunk_scan / chunk_state kernels +
+host-level state passing).  Q (chunk length) is the VMEM tile: 64..256 keeps
+(Q,Q)+(Q,N)+(Q,P) well under VMEM for N=P=128 at fp32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, dA_ref, b_ref, c_ref, y_ref, st_ref, dec_ref):
+    x = x_ref[...].astype(jnp.float32)  # (Q, P)
+    dA = dA_ref[...].astype(jnp.float32)  # (Q,)
+    Bm = b_ref[...].astype(jnp.float32)  # (Q, N)
+    Cm = c_ref[...].astype(jnp.float32)  # (Q, N)
+    Q = x.shape[0]
+    cum = jnp.cumsum(dA)  # (Q,)
+    seg = cum[:, None] - cum[None, :]
+    tri = jnp.tril(jnp.ones((Q, Q), jnp.bool_))
+    L = jnp.where(tri, jnp.exp(seg), 0.0)
+    scores = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32) * L  # (Q, Q)
+    y_ref[...] = jnp.dot(scores, x, preferred_element_type=jnp.float32)
+    decay_states = jnp.exp(cum[-1] - cum)  # (Q,)
+    st_ref[...] = jnp.dot(Bm.T, x * decay_states[:, None],
+                          preferred_element_type=jnp.float32)  # (N, P)
+    dec_ref[0] = jnp.exp(cum[-1])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(x, dA, B, C, *, interpret: bool = True):
+    """Batched intra-chunk SSD.
+
+    x: (nc, Q, H, P); dA: (nc, Q, H); B, C: (nc, Q, H, N) (groups already
+    broadcast to heads).  Returns (y_diag (nc,Q,H,P), states (nc,H,P,N),
+    chunk_decay (nc,H)) — all fp32.
+    """
+    nc, Q, H, P = x.shape
+    N = B.shape[-1]
+    xt = x.transpose(0, 2, 1, 3).reshape(nc * H, Q, P)
+    dAt = dA.transpose(0, 2, 1).reshape(nc * H, Q)
+    Bt = B.transpose(0, 2, 1, 3).reshape(nc * H, Q, N)
+    Ct = C.transpose(0, 2, 1, 3).reshape(nc * H, Q, N)
+
+    y, st, dec = pl.pallas_call(
+        _kernel,
+        grid=(nc * H,),
+        in_specs=[
+            pl.BlockSpec((None, Q, P), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, Q), lambda i: (i, 0)),
+            pl.BlockSpec((None, Q, N), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, Q, N), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, Q, P), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, N, P), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nc * H, Q, P), jnp.float32),
+            jax.ShapeDtypeStruct((nc * H, N, P), jnp.float32),
+            jax.ShapeDtypeStruct((nc * H, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xt, dAt, Bt, Ct)
+    y_diag = y.reshape(nc, H, Q, P).transpose(0, 2, 1, 3)
+    states = st.reshape(nc, H, N, P).transpose(0, 1, 3, 2)  # (nc, H, P, N)
+    chunk_decay = dec.reshape(nc, H)
+    return y_diag, states, chunk_decay

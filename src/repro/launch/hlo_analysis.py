@@ -1,0 +1,361 @@
+"""HLO-text analyzer: FLOPs / HBM bytes / collective bytes with loop
+trip-count multipliers.
+
+Why not ``compiled.cost_analysis()`` alone?  XLA's cost analysis reports the
+partitioned module's costs but counts every while-loop BODY ONCE — and our
+models keep the layer stack inside ``lax.scan`` (essential for multi-device
+compile time), so ~100% of the real cost sits inside while bodies.  This
+module parses ``compiled.as_text()`` (post-optimization, post-SPMD), builds
+the computation call graph (while bodies/conditions, fusions, calls),
+extracts constant trip counts from while conditions, and accumulates:
+
+  * dot FLOPs       : 2 * prod(out_shape) * prod(contracting dims)
+  * HBM bytes       : kernel-boundary traffic — for every top-level op in an
+                      executed computation, output bytes + operand bytes
+                      (fusions appear as single ops, so this is
+                      fusion-aware); parameters/GTE/bitcast/tuple are free
+  * collective bytes: by op kind (all-gather / all-reduce / reduce-scatter /
+                      all-to-all / collective-permute), output-shape bytes
+
+All values are PER-DEVICE (the SPMD module is the per-device program).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[a-z0-9].*?\)?)\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*\S.*\{\s*$")
+_CALL_ATTR_RE = re.compile(r"(?:calls|body|condition|branch_computations|to_apply)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "bitcast", "tuple",
+             "after-all", "iota"}
+
+
+def shape_bytes(type_str: str) -> float:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)  # value name -> type str
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    current: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        m = _COMP_START_RE.match(line)
+        if m and "=" not in line.split("(")[0]:
+            current = Computation(name=m.group(1))
+            comps[current.name] = current
+            if line.lstrip().startswith("ENTRY"):
+                entry = current.name
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        if current is None:
+            continue
+        d = _DEF_RE.match(line)
+        if not d:
+            continue
+        name, type_str, opcode = d.group(1), d.group(2), d.group(3)
+        # operands: inside the first (...) after the opcode
+        after = line[d.end():]
+        depth = 1
+        args = []
+        for i, ch in enumerate(after):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args = _OPERAND_RE.findall(after[:i])
+                    break
+        op = Op(name=name, type_str=type_str, opcode=opcode, line=line, operands=args)
+        current.ops.append(op)
+        current.shapes[name] = type_str
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> int:
+    """Max s32 constant in a while condition ~= the scan length."""
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant" and op.type_str.strip().startswith(("s32[]", "u32[]", "s64[]")):
+            m = re.search(r"constant\((\d+)\)", op.line)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _multipliers(comps: Dict[str, Computation], entry: str) -> Dict[str, float]:
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    # BFS through call edges, accumulating multipliers
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps[cname]
+        m = mult[cname]
+        for op in comp.ops:
+            attrs = _CALL_ATTR_RE.findall(op.line)
+            if not attrs:
+                continue
+            if op.opcode == "while":
+                body = cond = None
+                bm = re.search(r"body=%?([\w.\-]+)", op.line)
+                cm = re.search(r"condition=%?([\w.\-]+)", op.line)
+                if bm:
+                    body = bm.group(1)
+                if cm:
+                    cond = cm.group(1)
+                trips = _trip_count(comps[cond]) if cond and cond in comps else 1
+                if body and body in comps:
+                    mult[body] += m * trips
+                    if body not in seen:
+                        seen.add(body)
+                        order.append(body)
+                continue
+            for group in attrs:
+                for target in re.split(r",\s*%?", group):
+                    target = target.strip().lstrip("%")
+                    if target in comps and target != cname:
+                        mult[target] += m
+                        if target not in seen:
+                            seen.add(target)
+                            order.append(target)
+    return dict(mult)
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems = 1
+    for d in _shape_dims(op.type_str):
+        out_elems *= d
+    lhs_dims_m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    contracting = 1
+    if lhs_dims_m and op.operands:
+        lhs_shape = _shape_dims(comp.shapes.get(op.operands[0], ""))
+        if lhs_dims_m.group(1):
+            for idx in lhs_dims_m.group(1).split(","):
+                i = int(idx)
+                if i < len(lhs_shape):
+                    contracting *= lhs_shape[i]
+    return 2.0 * out_elems * contracting
+
+
+@dataclass
+class HloCosts:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_count: Dict[str, int] = field(default_factory=dict)
+    while_trip_counts: List[int] = field(default_factory=list)
+    # op-level breakdowns: (bytes*mult, opcode, op_name metadata, type, mult)
+    top_collectives: List[tuple] = field(default_factory=list)
+    top_hbm: List[tuple] = field(default_factory=list)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _op_label(op: Op) -> str:
+    m = _OPNAME_RE.search(op.line)
+    return m.group(1) if m else op.name
+
+
+_CONTROL_OPS = {"while", "conditional", "call", "optimization-barrier"}
+
+
+def _fusion_targets(comps) -> set:
+    targets = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            m = re.search(r"calls=%?([\w.\-]+)", op.line)
+            if m:
+                targets.add(m.group(1))
+            m = re.search(r"to_apply=%?([\w.\-]+)", op.line)
+            if m:
+                targets.add(m.group(1))
+    return targets
+
+
+def _param_ops_by_index(comp: Computation):
+    out = {}
+    for op in comp.ops:
+        if op.opcode == "parameter":
+            m = re.search(r"parameter\((\d+)\)", op.line)
+            if m:
+                out[int(m.group(1))] = op
+    return out
+
+
+_PASSTHROUGH = {"convert", "bitcast", "copy", "reshape", "transpose"}
+
+
+def _param_slice_bytes(p_name: str, target: Computation) -> float:
+    """Effective read bytes of a fusion parameter, following pass-through
+    chains (convert/bitcast/...) until a real consumer:
+
+    * dynamic-slice / gather      -> the slice's bytes
+    * dynamic-update-slice dest   -> 0 (in-place destination, aliased)
+    * anything else               -> full parameter bytes
+    Returns the max over consumer paths (conservative)."""
+    full = shape_bytes(target.shapes.get(p_name, ""))
+    frontier = {p_name}
+    best = 0.0
+    visited = set()
+    while frontier:
+        nxt = set()
+        for o in target.ops:
+            if o.name in visited:
+                continue
+            hits = [x for x in o.operands if x in frontier]
+            if not hits:
+                continue
+            visited.add(o.name)
+            if o.opcode in _PASSTHROUGH:
+                nxt.add(o.name)
+            elif o.opcode in ("dynamic-slice", "gather"):
+                best = max(best, shape_bytes(o.type_str))
+            elif o.opcode == "dynamic-update-slice" and o.operands and o.operands[0] in frontier:
+                # destination buffer of an in-place update: pass through so a
+                # later real reader is still detected
+                nxt.add(o.name)
+            else:
+                return full
+        frontier = nxt
+    return best
+
+
+def _fusion_hbm_bytes(op: Op, comp: Computation, comps) -> float:
+    """HBM traffic of a fusion call at the kernel boundary, slice/in-place/
+    pass-through aware (mirrors TPU fusion semantics where convert chains
+    fuse away and donated DUS buffers update in place)."""
+    m = re.search(r"calls=%?([\w.\-]+)", op.line)
+    target = comps.get(m.group(1)) if m else None
+    out_b = shape_bytes(op.type_str)
+    if target is None:
+        return out_b + sum(shape_bytes(comp.shapes.get(o, "")) for o in op.operands)
+    params = _param_ops_by_index(target)
+    dus_ops = [o for o in target.ops if o.opcode == "dynamic-update-slice"]
+    if dus_ops:
+        # output traffic ~= bytes actually written (update regions)
+        out_b = sum(shape_bytes(target.shapes.get(d.operands[1], "")) for d in dus_ops
+                    if len(d.operands) > 1)
+    total = out_b
+    for i, operand in enumerate(op.operands):
+        p = params.get(i)
+        full = shape_bytes(comp.shapes.get(operand, ""))
+        if p is None:
+            total += full
+            continue
+        total += min(_param_slice_bytes(p.name, target), full)
+    return total
+
+
+def analyze(text: str) -> HloCosts:
+    comps, entry = parse_module(text)
+    if entry is None:
+        return HloCosts()
+    mult = _multipliers(comps, entry)
+    fusion_targets = _fusion_targets(comps)
+    costs = HloCosts()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "while":
+                cm = re.search(r"condition=%?([\w.\-]+)", op.line)
+                if cm and cm.group(1) in comps:
+                    costs.while_trip_counts.append(_trip_count(comps[cm.group(1)]))
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for op in comp.ops:
+            if op.opcode in ("dot", "convolution"):
+                costs.flops += m * _dot_flops(op, comp)
+            for coll in COLLECTIVE_OPS:
+                if op.opcode == coll or op.opcode == f"{coll}-start":
+                    b = shape_bytes(op.type_str)
+                    costs.collective_bytes[coll] = costs.collective_bytes.get(coll, 0.0) + m * b
+                    costs.collective_count[coll] = costs.collective_count.get(coll, 0) + 1
+                    costs.top_collectives.append(
+                        (m * b, coll, _op_label(op), op.type_str[:48], m)
+                    )
+                    break
+            # ---- kernel-boundary HBM traffic.  Only control-flow-executed
+            # computations count; fusion interiors are priced at call sites.
+            if cname in fusion_targets:
+                continue
+            if op.opcode in _FREE_OPS or op.opcode in _CONTROL_OPS:
+                continue
+            if op.opcode == "fusion":
+                b = _fusion_hbm_bytes(op, comp, comps)
+            elif op.opcode == "dynamic-slice":
+                b = 2 * shape_bytes(op.type_str)
+            elif op.opcode == "dynamic-update-slice":
+                upd = shape_bytes(comp.shapes.get(op.operands[1], "")) if len(op.operands) > 1 else 0.0
+                b = 2 * upd
+            else:
+                out_b = shape_bytes(op.type_str)
+                in_b = sum(shape_bytes(comp.shapes.get(o, "")) for o in op.operands)
+                b = out_b + in_b
+            costs.hbm_bytes += m * b
+            costs.top_hbm.append((m * b, op.opcode, _op_label(op), op.type_str[:48], m))
+    costs.top_collectives.sort(reverse=True)
+    costs.top_hbm.sort(reverse=True)
+    costs.top_collectives = costs.top_collectives[:40]
+    costs.top_hbm = costs.top_hbm[:40]
+    return costs

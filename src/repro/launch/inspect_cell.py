@@ -1,0 +1,58 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+# ruff: noqa: E402
+"""Profiler for the dry-run: recompiles one cell and prints the top
+collective / HBM contributors with op_name provenance — the 'profile' the
+§Perf hillclimbing iterates on (no real-TPU timings in this container).
+
+    PYTHONPATH=src python -m repro.launch.inspect_cell --arch X --shape Y [--multi-pod]
+"""
+import argparse
+
+import jax
+
+from repro.distributed import ctx
+from repro.launch.dryrun import build_cell
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import make_production_mesh
+
+
+def inspect(arch: str, shape: str, multi_pod: bool = False, top: int = 18, variant: str = "baseline"):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fn, args, in_sh, out_sh, donate, ctx_kw = build_cell(arch, shape, mesh, variant)
+    kw = {"in_shardings": in_sh}
+    if out_sh is not None:
+        kw["out_shardings"] = out_sh
+    if donate is not None:
+        kw["donate_argnums"] = donate
+    jitted = jax.jit(fn, **kw)
+    with ctx.use_mesh(mesh, **ctx_kw):
+        compiled = jitted.lower(*args).compile()
+    costs = analyze(compiled.as_text())
+    ma = compiled.memory_analysis()
+    print(f"== {arch} x {shape} ==")
+    print(f"flops/dev {costs.flops:.3e}  hbm/dev {costs.hbm_bytes/1e9:.1f} GB  "
+          f"coll/dev {costs.total_collective_bytes/1e9:.1f} GB  "
+          f"temp {getattr(ma, 'temp_size_in_bytes', 0)/1e9:.1f} GB")
+    print("-- top collectives (bytes x loop-mult) --")
+    for b, kind, label, t, m in costs.top_collectives[:top]:
+        print(f"  {b/1e9:10.2f} GB  {kind:19s} x{m:5.0f}  {t:40s} {label[:80]}")
+    print("-- top HBM ops --")
+    for b, kind, label, t, m in costs.top_hbm[:top]:
+        print(f"  {b/1e9:10.2f} GB  {kind:19s} x{m:5.0f}  {t:40s} {label[:80]}")
+    return costs
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=18)
+    ap.add_argument("--variant", default="baseline")
+    a = ap.parse_args()
+    inspect(a.arch, a.shape, a.multi_pod, a.top, a.variant)

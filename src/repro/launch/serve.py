@@ -1,0 +1,58 @@
+"""Serving launcher: build a CORE-optimized cascade for an ML inference
+query and serve a record stream with continuous batching.
+
+    PYTHONPATH=src python -m repro.launch.serve --n 20000 --correlation 0.9 \\
+        --accuracy 0.9 --mode core
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core import execute_plan, ns_plan, optimize, orig_plan, plan_accuracy, pp_plan
+from repro.data.synthetic import make_dataset, make_query, make_udfs
+from repro.serving.engine import CascadeServer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20_000)
+    ap.add_argument("--correlation", type=float, default=0.9)
+    ap.add_argument("--accuracy", type=float, default=0.9)
+    ap.add_argument("--mode", default="core", choices=["core", "core-a", "core-h", "pp", "ns", "orig"])
+    ap.add_argument("--preds", type=int, default=2)
+    ap.add_argument("--tile", type=int, default=1024)
+    ap.add_argument("--udf-cost-ms", type=float, default=20.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    ds = make_dataset(n=args.n, correlation=args.correlation, seed=args.seed)
+    udfs = make_udfs(ds, hidden=64, depth=2, train_rows=3000, seed=args.seed,
+                     declared_cost_ms=args.udf_cost_ms)
+    q = make_query(ds, udfs, columns=list(range(args.preds)),
+                   target_selectivity=0.5, accuracy_target=args.accuracy,
+                   seed=args.seed + 1)
+    print("query:", " AND ".join(q.names()), f"A={args.accuracy}")
+    k = max(1000, int(0.05 * args.n))
+    if args.mode == "orig":
+        plan = orig_plan(q)
+    elif args.mode == "ns":
+        plan = ns_plan(q, ds.x[:k])
+    elif args.mode == "pp":
+        plan = pp_plan(q, ds.x[:k])
+    else:
+        plan = optimize(q, ds.x[:k], mode=args.mode)
+    print(plan.describe())
+
+    server = CascadeServer(plan, tile=args.tile, use_kernel=True)
+    stats = server.run_stream(ds.x[k:])
+    orig_res = execute_plan(orig_plan(q), ds.x[k:])
+    res = execute_plan(plan, ds.x[k:])
+    print(f"\nserved {len(ds.x) - k} records in {stats.wall_ms:.0f} ms wall; "
+          f"emitted {stats.emitted}")
+    print(f"cost model: {res.cost_per_record(len(ds.x)-k):.3f} ms/rec "
+          f"(ORIG {orig_res.cost_per_record(len(ds.x)-k):.3f}); "
+          f"accuracy {plan_accuracy(res, orig_res):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,198 @@
+"""Encoder-decoder family (seamless-m4t-medium backbone).
+
+The audio frontend is a STUB per the assignment: ``input_specs()`` supplies
+precomputed frame embeddings (B, enc_len, d_model) where
+enc_len = seq_len // frame_ratio.  Encoder layers are bidirectional; decoder
+layers are causal self-attention + cross-attention to the encoder memory.
+RoPE replaces the original relative-position bias (TPU-idiomatic; see
+DESIGN.md assumption log).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed import ctx
+from repro.models import layers as L
+
+
+def enc_len_for(cfg, seq_len: int) -> int:
+    return max(1, seq_len // cfg.encoder.frame_ratio)
+
+
+def init_enc_layer(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_rms_for(cfg, cfg.d_model),
+        "attn": L.init_gqa(k1, cfg),
+        "ln2": L.init_rms_for(cfg, cfg.d_model),
+        "mlp": L.init_mlp(k2, cfg),
+    }
+
+
+def init_dec_layer(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_rms_for(cfg, cfg.d_model),
+        "self_attn": L.init_gqa(k1, cfg),
+        "ln_x": L.init_rms_for(cfg, cfg.d_model),
+        "cross_attn": L.init_gqa(k2, cfg),
+        "ln2": L.init_rms_for(cfg, cfg.d_model),
+        "mlp": L.init_mlp(k3, cfg),
+    }
+
+
+def init(key, cfg):
+    k_emb, k_enc, k_dec = jax.random.split(key, 3)
+    params = L.init_embed(k_emb, cfg)
+    params["enc_layers"] = L.stack_init(lambda k: init_enc_layer(k, cfg), k_enc, cfg.encoder.num_layers)
+    params["dec_layers"] = L.stack_init(lambda k: init_dec_layer(k, cfg), k_dec, cfg.num_layers)
+    params["enc_norm"] = L.init_rms_for(cfg, cfg.d_model)
+    params["final_norm"] = L.init_rms_for(cfg, cfg.d_model)
+    return params
+
+
+def encode(params, cfg, frames):
+    """frames: (B, E, d_model) precomputed frame embeddings."""
+    B, E, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(E, dtype=jnp.int32)[None], (B, E))
+
+    def body(h, lp):
+        hn = L.apply_norm(cfg, h, lp["ln1"])
+        h = h + L.gqa_attend(lp["attn"], cfg, hn, positions, causal=False)
+        hn = L.apply_norm(cfg, h, lp["ln2"])
+        return h + L.mlp_apply(lp["mlp"], cfg, hn)
+
+    x = L.scan_layers(body, frames.astype(L.param_dtype(cfg)), params["enc_layers"],
+                      remat=cfg.remat)
+    return L.apply_norm(cfg, x, params["enc_norm"])
+
+
+def _cross_kv(lp, cfg, memory):
+    """Project encoder memory to per-layer cross K/V."""
+    a = cfg.attention
+    B, E, _ = memory.shape
+    k = (memory @ lp["wk"]).reshape(B, E, a.num_kv_heads, a.head_dim)
+    v = (memory @ lp["wv"]).reshape(B, E, a.num_kv_heads, a.head_dim)
+    if a.qkv_bias:
+        k, v = k + lp["bk"].reshape(1, 1, a.num_kv_heads, a.head_dim), v + lp["bv"].reshape(
+            1, 1, a.num_kv_heads, a.head_dim
+        )
+    return k, v
+
+
+def _dec_layer(lp, cfg, x, positions, memory, mem_positions):
+    h = L.apply_norm(cfg, x, lp["ln1"])
+    x = x + L.gqa_attend(lp["self_attn"], cfg, h, positions, causal=True)
+    h = L.apply_norm(cfg, x, lp["ln_x"])
+    ck, cv = _cross_kv(lp["cross_attn"], cfg, memory)
+    x = x + L.gqa_attend(
+        lp["cross_attn"], cfg, h, positions, causal=False, rope=False,
+        kv_override=(ck, cv), kv_positions=mem_positions,
+    )
+    h = L.apply_norm(cfg, x, lp["ln2"])
+    return x + L.mlp_apply(lp["mlp"], cfg, h)
+
+
+def forward(params, cfg, batch):
+    tokens = batch["tokens"]
+    frames = batch["frames"]
+    B, S = tokens.shape
+    memory = encode(params, cfg, frames)
+    E = memory.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    mem_positions = jnp.broadcast_to(jnp.arange(E, dtype=jnp.int32)[None], (B, E))
+    x = L.embed_tokens(params, cfg, tokens)
+
+    def body(h, lp):
+        return _dec_layer(lp, cfg, h, positions, memory, mem_positions)
+
+    x = L.scan_layers(body, x, params["dec_layers"], remat=cfg.remat)
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    return L.lm_logits(params, cfg, x)
+
+
+def loss(params, cfg, batch):
+    logits = forward(params, cfg, batch)
+    return L.cross_entropy(logits, batch["labels"], batch.get("loss_mask")), {}
+
+
+# --------------------------------------------------------------- serving
+def init_cache(cfg, batch: int, max_len: int):
+    a = cfg.attention
+    dt = L.param_dtype(cfg)
+    E = enc_len_for(cfg, max_len)
+    Ld = cfg.num_layers
+    return {
+        "k": jnp.zeros((Ld, batch, max_len, a.num_kv_heads, a.head_dim), dt),
+        "v": jnp.zeros((Ld, batch, max_len, a.num_kv_heads, a.head_dim), dt),
+        "xk": jnp.zeros((Ld, batch, E, a.num_kv_heads, a.head_dim), dt),
+        "xv": jnp.zeros((Ld, batch, E, a.num_kv_heads, a.head_dim), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, cfg, batch):
+    """Encode the source + run the decoder prompt, capturing caches."""
+    tokens = batch["tokens"]
+    frames = batch["frames"]
+    B, S = tokens.shape
+    a = cfg.attention
+    memory = encode(params, cfg, frames)
+    E = memory.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    mem_positions = jnp.broadcast_to(jnp.arange(E, dtype=jnp.int32)[None], (B, E))
+    x = L.embed_tokens(params, cfg, tokens)
+
+    def body(h, lp):
+        hn = L.apply_norm(cfg, h, lp["ln1"])
+        q, k, v = L.gqa_project_qkv(lp["self_attn"], cfg, hn)
+        q = L.apply_rope(q, positions, a.rope_theta)
+        k = L.apply_rope(k, positions, a.rope_theta)
+        out = L.mha(q, k, v, causal=True, q_positions=positions, kv_positions=positions)
+        h = h + out.reshape(B, S, -1) @ lp["self_attn"]["wo"]
+        hn = L.apply_norm(cfg, h, lp["ln_x"])
+        xk, xv = _cross_kv(lp["cross_attn"], cfg, memory)
+        out = L.gqa_attend(
+            lp["cross_attn"], cfg, hn, positions, causal=False, rope=False,
+            kv_override=(xk, xv), kv_positions=mem_positions,
+        )
+        h = h + out
+        hn = L.apply_norm(cfg, h, lp["ln2"])
+        return ctx.constrain_tokens(h + L.mlp_apply(lp["mlp"], cfg, hn)), (k, v, xk, xv)
+
+    x, (ks, vs, xks, xvs) = lax.scan(body, x, params["dec_layers"])
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    logits = L.lm_logits(params, cfg, x[:, -1:, :])
+    cache = {"k": ks, "v": vs, "xk": xks, "xv": xvs, "pos": jnp.asarray(S, jnp.int32)}
+    return logits[:, 0], cache
+
+
+def decode_step(params, cfg, cache, tokens):
+    B = tokens.shape[0]
+    a = cfg.attention
+    pos = cache["pos"]
+    x = L.embed_tokens(params, cfg, tokens[:, None])
+    E = cache["xk"].shape[2]
+    mem_positions = jnp.broadcast_to(jnp.arange(E, dtype=jnp.int32)[None], (B, E))
+
+    def body(h, xs):
+        lp, ck, cv, xk, xv = xs
+        hn = L.apply_norm(cfg, h, lp["ln1"])
+        out, ck, cv = L.gqa_decode(lp["self_attn"], cfg, hn, ck, cv, pos)
+        h = h + out
+        hn = L.apply_norm(cfg, h, lp["ln_x"])
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        out = L.gqa_attend(
+            lp["cross_attn"], cfg, hn, positions, causal=False, rope=False,
+            kv_override=(xk, xv), kv_positions=mem_positions,
+        )
+        h = h + out
+        hn = L.apply_norm(cfg, h, lp["ln2"])
+        return ctx.constrain_tokens(h + L.mlp_apply(lp["mlp"], cfg, hn)), (ck, cv)
+
+    x, (ks, vs) = lax.scan(body, x, (params["dec_layers"], cache["k"], cache["v"], cache["xk"], cache["xv"]))
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    logits = L.lm_logits(params, cfg, x)
+    return logits[:, 0], {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"], "pos": pos + 1}

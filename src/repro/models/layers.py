@@ -1,0 +1,306 @@
+"""Shared model building blocks (pure JAX, explicit param pytrees).
+
+Conventions
+-----------
+* Params are nested dicts of jnp arrays; layer stacks carry a leading ``L``
+  dim and are iterated with ``lax.scan`` (small HLO, fast multi-device
+  compile — essential for the 512-device dry-run).
+* Matmul params stored in ``cfg.dtype`` (bf16); norms/softmax/rope run in
+  fp32; attention logits accumulate in fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def param_dtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, in_axis: int = -2, dtype=jnp.bfloat16):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+# ----------------------------------------------------------------- RMSNorm
+def rms_norm(x, w, eps: float, plus_one: bool = False):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    scale = w.astype(jnp.float32)
+    if plus_one:
+        scale = scale + 1.0
+    return (y * scale).astype(x.dtype)
+
+
+def init_rms(d: int, dtype=jnp.float32):
+    return jnp.ones((d,), dtype)
+
+
+def init_rms_for(cfg, d: int):
+    # gemma-style norms are stored as zeros and applied as (1 + w)
+    if cfg.gemma_scaling:
+        return jnp.zeros((d,), jnp.float32)
+    return jnp.ones((d,), jnp.float32)
+
+
+def apply_norm(cfg, x, w):
+    return rms_norm(x, w, cfg.norm_eps, plus_one=cfg.gemma_scaling)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float):
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponents)  # (head_dim/2,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------- attention
+def _use_pallas_attention(q, k, causal, window, kv_valid) -> bool:
+    """On TPU with plain-causal full-length attention, dispatch to the
+    flash-attention Pallas kernel (REPRO_USE_PALLAS=0 disables)."""
+    import os
+
+    if os.environ.get("REPRO_USE_PALLAS", "1") != "1":
+        return False
+    if jax.default_backend() != "tpu":
+        return False  # interpret mode is for tests, not the serving path
+    return causal and window == 0 and kv_valid is None and q.shape[1] == k.shape[1]
+
+
+def mha(q, k, v, *, causal: bool, q_positions, kv_positions, kv_valid=None,
+        window: int = 0, logit_dtype=jnp.float32):
+    """Grouped-query attention.
+
+    q: (B, S, H, hd); k/v: (B, T, K, hd_k/hd_v).  H must be a multiple of K.
+    ``q_positions``/``kv_positions``: (B, S) / (B, T) absolute positions used
+    for causal/window masking.  ``kv_valid``: optional (B, T) bool mask for
+    cache slots beyond the current length.
+    """
+    if _use_pallas_attention(q, k, causal, window, kv_valid) and q.shape[-1] == v.shape[-1]:
+        from repro.kernels.flash_attention import flash_attention
+
+        return flash_attention(q, k, v, causal=True, interpret=False)
+    from repro.distributed import ctx
+
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd)
+    if ctx.attn_seq_enabled():
+        mesh = ctx.get_mesh()
+        tp = mesh.shape["model"]
+        if H % tp != 0 and S % tp == 0:
+            # head sharding unavailable (e.g. 56 heads on a 16-way TP axis):
+            # sequence-shard Q BEFORE the contraction so the (S, T) score
+            # tensor is born sequence-sharded — otherwise GSPMD partially
+            # shards heads and all-reduces the full score tensor per layer
+            qg = ctx.constrain(qg, None, "model", None, None, None)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k, preferred_element_type=logit_dtype)
+    scores = scores / math.sqrt(hd)
+    mask = jnp.ones((B, S, T), bool)
+    if causal:
+        mask &= q_positions[:, :, None] >= kv_positions[:, None, :]
+    if window:
+        mask &= q_positions[:, :, None] - kv_positions[:, None, :] < window
+    if kv_valid is not None:
+        mask &= kv_valid[:, None, :]
+    scores = jnp.where(mask[:, None, None, :, :], scores, jnp.finfo(logit_dtype).min)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(v.dtype), v)
+    return out.reshape(B, S, H, v.shape[-1])
+
+
+# ------------------------------------------------------------ GQA block
+def init_gqa(key, cfg, d_model: Optional[int] = None):
+    a = cfg.attention
+    d = d_model or cfg.d_model
+    dt = param_dtype(cfg)
+    ks = jax.random.split(key, 4)
+    qd, kvd = a.num_heads * a.head_dim, a.num_kv_heads * a.head_dim
+    p = {
+        "wq": dense_init(ks[0], (d, qd), dtype=dt),
+        "wk": dense_init(ks[1], (d, kvd), dtype=dt),
+        "wv": dense_init(ks[2], (d, kvd), dtype=dt),
+        "wo": dense_init(ks[3], (qd, d), dtype=dt),
+    }
+    if a.qkv_bias:
+        p["bq"] = jnp.zeros((qd,), dt)
+        p["bk"] = jnp.zeros((kvd,), dt)
+        p["bv"] = jnp.zeros((kvd,), dt)
+    if a.qk_norm:
+        p["q_norm"] = jnp.ones((a.head_dim,), jnp.float32)
+        p["k_norm"] = jnp.ones((a.head_dim,), jnp.float32)
+    return p
+
+
+def gqa_project_qkv(p, cfg, x):
+    a = cfg.attention
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if a.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, a.num_heads, a.head_dim)
+    k = k.reshape(B, S, a.num_kv_heads, a.head_dim)
+    v = v.reshape(B, S, a.num_kv_heads, a.head_dim)
+    if a.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def gqa_attend(p, cfg, x, positions, *, causal=True, rope=True,
+               kv_override=None, kv_positions=None, kv_valid=None):
+    """Full (training/prefill) attention.  ``kv_override``: (k, v) for
+    cross-attention."""
+    a = cfg.attention
+    q, k, v = gqa_project_qkv(p, cfg, x)
+    if kv_override is not None:
+        k, v = kv_override
+    if rope and kv_override is None:
+        q = apply_rope(q, positions, a.rope_theta)
+        k = apply_rope(k, positions, a.rope_theta)
+    kv_pos = kv_positions if kv_positions is not None else positions
+    out = mha(q, k, v, causal=causal, q_positions=positions, kv_positions=kv_pos,
+              kv_valid=kv_valid, window=a.window if a.kind == "local" else 0)
+    B, S = x.shape[:2]
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def gqa_decode(p, cfg, x, cache_k, cache_v, pos, *, rope=True, window: int = 0):
+    """One-token decode against a preallocated KV cache.
+
+    x: (B, 1, d); cache_k/v: (B, T, K, hd); pos: scalar int32 current length.
+    Returns (out (B,1,d), new_k, new_v).
+    """
+    a = cfg.attention
+    B = x.shape[0]
+    q, k, v = gqa_project_qkv(p, cfg, x)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    if rope:
+        q = apply_rope(q, positions, a.rope_theta)
+        k = apply_rope(k, positions, a.rope_theta)
+    T = cache_k.shape[1]
+    if window and T >= window:
+        # cache is sized exactly to the window -> ring buffer indexing
+        slot = jnp.mod(pos, window)
+        cache_k = lax.dynamic_update_slice(cache_k, k, (0, slot, 0, 0))
+        cache_v = lax.dynamic_update_slice(cache_v, v, (0, slot, 0, 0))
+        # ring buffer: slot i holds position pos-slot+i (i<=slot) else one
+        # window earlier
+        Tw = cache_k.shape[1]
+        idx = jnp.arange(Tw)[None, :]
+        kv_positions = jnp.where(idx <= slot, idx + (pos - slot), idx + (pos - slot) - Tw)
+        kv_positions = jnp.broadcast_to(kv_positions, (B, Tw)).astype(jnp.int32)
+        kv_valid = (kv_positions >= 0) & (kv_positions <= pos)
+    else:
+        cache_k = lax.dynamic_update_slice(cache_k, k, (0, pos, 0, 0))
+        cache_v = lax.dynamic_update_slice(cache_v, v, (0, pos, 0, 0))
+        kv_positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+        kv_valid = kv_positions <= pos
+        kv_positions = kv_positions.astype(jnp.int32)
+    out = mha(q, cache_k, cache_v, causal=False, q_positions=positions,
+              kv_positions=kv_positions, kv_valid=kv_valid)
+    return out.reshape(B, 1, -1) @ p["wo"], cache_k, cache_v
+
+
+# --------------------------------------------------------------- gated MLP
+def init_mlp(key, cfg, d_ff: Optional[int] = None, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = param_dtype(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wg": dense_init(k1, (d, f), dtype=dt),
+        "wi": dense_init(k2, (d, f), dtype=dt),
+        "wo": dense_init(k3, (f, d), dtype=dt),
+    }
+
+
+def mlp_apply(p, cfg, x):
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    return (act(x @ p["wg"]) * (x @ p["wi"])) @ p["wo"]
+
+
+# ------------------------------------------------------------- embeddings
+def init_embed(key, cfg):
+    dt = param_dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {"embed": dense_init(k1, (cfg.vocab_size, cfg.d_model), in_axis=-1, dtype=dt)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k2, (cfg.d_model, cfg.vocab_size), dtype=dt)
+    return p
+
+
+def embed_tokens(p, cfg, tokens):
+    from repro.distributed import ctx
+
+    x = p["embed"][tokens]
+    if cfg.gemma_scaling:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return ctx.constrain_tokens(x)
+
+
+def lm_logits(p, cfg, x):
+    from repro.distributed import ctx
+
+    w = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w, preferred_element_type=jnp.float32)
+    return ctx.constrain_logits(logits)
+
+
+def cross_entropy(logits, labels, mask=None):
+    """logits (B,S,V) fp32, labels (B,S) int32; mask optional (B,S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ------------------------------------------------------------- scan helper
+def scan_layers(fn, x, stacked_params, *extra, remat: bool = False, length=None):
+    """Run ``fn(x, layer_params, *extra_slice) -> x`` over a stacked layer dim.
+
+    The carry (residual stream) is re-anchored to the batch sharding every
+    layer so GSPMD propagation cannot drift under the production mesh."""
+    from repro.distributed import ctx
+
+    def anchored(carry, *xs):
+        return ctx.constrain_tokens(fn(carry, *xs))
+
+    f = jax.checkpoint(anchored) if remat else anchored
+
+    def body(carry, xs):
+        return f(carry, *xs), None
+
+    out, _ = lax.scan(body, x, (stacked_params, *extra), length=length)
+    return out
+
+
+def stack_init(init_fn, key, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)

@@ -1,0 +1,102 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+Prefill/train use the naive (materialized K/V) form; decode uses the
+*absorbed* form that attends directly in the compressed latent space, so the
+KV cache stores only (kv_lora_rank + rope_dim) per token — the arch's
+signature serving optimization (93% KV reduction vs dense GQA).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+
+
+def init_mla(key, cfg):
+    a = cfg.attention
+    d = cfg.d_model
+    dt = L.param_dtype(cfg)
+    ks = jax.random.split(key, 5)
+    nope, rope_d, vh = a.qk_nope_head_dim, a.qk_rope_head_dim, a.v_head_dim
+    H = a.num_heads
+    p = {
+        # q: dense (V2-Lite has no q-lora)
+        "wq": L.dense_init(ks[0], (d, H * (nope + rope_d)), dtype=dt),
+        # joint kv down-projection: -> [c_kv (rank), k_rope (rope_d, shared)]
+        "wkv_a": L.dense_init(ks[1], (d, a.kv_lora_rank + rope_d), dtype=dt),
+        "kv_norm": jnp.ones((a.kv_lora_rank,), jnp.float32),
+        # up-projection: rank -> per-head [k_nope, v]
+        "wkv_b": L.dense_init(ks[2], (a.kv_lora_rank, H * (nope + vh)), dtype=dt),
+        "wo": L.dense_init(ks[3], (H * vh, d), dtype=dt),
+    }
+    return p
+
+
+def _project_common(p, cfg, x, positions):
+    a = cfg.attention
+    B, S, _ = x.shape
+    H, nope, rope_d = a.num_heads, a.qk_nope_head_dim, a.qk_rope_head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = L.apply_rope(q_rope, positions, a.rope_theta)
+    kv_a = x @ p["wkv_a"]
+    c_kv = L.rms_norm(kv_a[..., : a.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = L.apply_rope(kv_a[..., None, a.kv_lora_rank:], positions, a.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope[..., 0, :]
+
+
+def mla_attend(p, cfg, x, positions):
+    """Naive MLA for train/prefill: materialize per-head K/V."""
+    a = cfg.attention
+    B, S, _ = x.shape
+    H, nope, rope_d, vh = a.num_heads, a.qk_nope_head_dim, a.qk_rope_head_dim, a.v_head_dim
+    q_nope, q_rope, c_kv, k_rope = _project_common(p, cfg, x, positions)
+    kv = (c_kv @ p["wkv_b"]).reshape(B, S, H, nope + vh)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, rope_d))], axis=-1)
+    out = L.mha(q, k, v, causal=True, q_positions=positions, kv_positions=positions)
+    return out.reshape(B, S, H * vh) @ p["wo"]
+
+
+def mla_prefill(p, cfg, x, positions):
+    """Prefill: returns output and the latent cache entries (c_kv, k_rope)."""
+    out = mla_attend(p, cfg, x, positions)
+    a = cfg.attention
+    kv_a = x @ p["wkv_a"]
+    c_kv = L.rms_norm(kv_a[..., : a.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = L.apply_rope(kv_a[..., None, a.kv_lora_rank:], positions, a.rope_theta)[..., 0, :]
+    return out, c_kv, k_rope
+
+
+def mla_decode(p, cfg, x, cache_ckv, cache_krope, pos):
+    """Absorbed-matrix decode: attention scores/values in latent space.
+
+    cache_ckv: (B, T, rank); cache_krope: (B, T, rope_d); x: (B, 1, d).
+    """
+    a = cfg.attention
+    B = x.shape[0]
+    H, nope, rope_d, vh = a.num_heads, a.qk_nope_head_dim, a.qk_rope_head_dim, a.v_head_dim
+    rank = a.kv_lora_rank
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope, c_kv_new, k_rope_new = _project_common(p, cfg, x, positions)
+    cache_ckv = lax.dynamic_update_slice(cache_ckv, c_kv_new, (0, pos, 0))
+    cache_krope = lax.dynamic_update_slice(cache_krope, k_rope_new, (0, pos, 0))
+    wkv_b = p["wkv_b"].reshape(rank, H, nope + vh)
+    w_uk, w_uv = wkv_b[..., :nope], wkv_b[..., nope:]
+    # absorb W_uk into q: q_lat (B,1,H,rank)
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)
+    T = cache_ckv.shape[1]
+    scores = jnp.einsum("bshr,btr->bhst", q_lat, cache_ckv, preferred_element_type=jnp.float32)
+    scores += jnp.einsum("bshn,btn->bhst", q_rope, cache_krope, preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(nope + rope_d)
+    valid = (jnp.arange(T)[None, :] <= pos)[:, None, None, :]
+    scores = jnp.where(valid, scores, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    ctx_lat = jnp.einsum("bhst,btr->bshr", probs.astype(cache_ckv.dtype), cache_ckv)
+    out = jnp.einsum("bshr,rhn->bshn", ctx_lat, w_uv).reshape(B, 1, H * vh)
+    return out @ p["wo"], cache_ckv, cache_krope

@@ -1,0 +1,80 @@
+"""Family registry + uniform batch/spec construction.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, no device allocation) — the
+multi-pod dry-run lowers against these.  ``make_batch`` builds small concrete
+batches for CPU smoke tests and examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, WorkloadShape
+from repro.models import encdec, moe, rglru, ssm, transformer, vlm
+
+FAMILIES = {
+    "dense": transformer,
+    "moe": moe,
+    "ssm": ssm,
+    "hybrid": rglru,
+    "encdec": encdec,
+    "vlm": vlm,
+}
+
+
+def get_family(cfg: ModelConfig):
+    return FAMILIES[cfg.family]
+
+
+def _token_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Text-token length such that the total processed sequence == seq_len."""
+    if cfg.family == "vlm":
+        return max(1, seq_len - cfg.encoder.num_prefix)
+    return seq_len
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq_len: int, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    S = _token_len(cfg, seq_len)
+    b = {
+        "tokens": jax.random.randint(k1, (batch, S), 0, cfg.vocab_size, jnp.int32),
+        "labels": jax.random.randint(k2, (batch, S), 0, cfg.vocab_size, jnp.int32),
+    }
+    if cfg.family == "encdec":
+        E = encdec.enc_len_for(cfg, seq_len)
+        b["frames"] = jax.random.normal(k3, (batch, E, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        P = cfg.encoder.num_prefix
+        b["patches"] = jax.random.normal(k3, (batch, P, cfg.d_model), jnp.bfloat16)
+    return b
+
+
+def input_specs(cfg: ModelConfig, shape: WorkloadShape):
+    """ShapeDtypeStruct stand-ins for a workload shape (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        St = _token_len(cfg, S)
+        specs = {
+            "tokens": sds((B, St), jnp.int32),
+        }
+        if shape.kind == "train":
+            specs["labels"] = sds((B, St), jnp.int32)
+        if cfg.family == "encdec":
+            specs["frames"] = sds((B, encdec.enc_len_for(cfg, S), cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            specs["patches"] = sds((B, cfg.encoder.num_prefix, cfg.d_model), jnp.bfloat16)
+        return specs
+    # decode: one new token against a seq_len-sized cache
+    fam = get_family(cfg)
+    cache = jax.eval_shape(lambda: fam.init_cache(cfg, B, S))
+    return {"tokens": sds((B,), jnp.int32), "cache": cache}
+
+
+def params_spec(cfg: ModelConfig, key=None):
+    """Abstract params pytree (eval_shape over init; no allocation)."""
+    fam = get_family(cfg)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: fam.init(k, cfg), key)

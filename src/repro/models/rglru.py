@@ -1,0 +1,247 @@
+"""RecurrentGemma / Griffin hybrid family: RG-LRU recurrent blocks + local
+(sliding-window) MQA in a 1:2 pattern (rec, rec, attn).
+
+Train/prefill runs the RG-LRU linear recurrence with
+``lax.associative_scan`` (parallel, O(S log S)); decode is the O(1)
+recurrent step + ring-buffer window KV, which is why ``long_500k`` is
+runnable for this arch.
+
+Layers have heterogeneous structure, so the stack is an unrolled Python loop
+over per-layer param dicts (26 layers, small d_model — HLO stays modest) with
+optional per-layer remat.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed import ctx
+from repro.models import layers as L
+
+_C = 8.0  # RG-LRU exponent scale (Griffin paper)
+
+
+# --------------------------------------------------------------- RG-LRU
+def init_rglru(key, cfg):
+    h = cfg.hybrid
+    d, w = cfg.d_model, h.lru_width
+    dt = L.param_dtype(cfg)
+    ks = jax.random.split(key, 6)
+    # Lambda init so a = sigmoid-ish decay in [0.9, 0.999]
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log u / c)
+    return {
+        "wx": L.dense_init(ks[1], (d, w), dtype=dt),
+        "wgate": L.dense_init(ks[2], (d, w), dtype=dt),
+        "conv_w": L.dense_init(ks[3], (h.conv_width, w), dtype=dt) * 0.1,
+        "conv_b": jnp.zeros((w,), dt),
+        "wa": L.dense_init(ks[4], (w, w), dtype=dt),
+        "ba": jnp.zeros((w,), jnp.float32),
+        "wi": L.dense_init(ks[5], (w, w), dtype=dt),
+        "bi": jnp.zeros((w,), jnp.float32),
+        "lambda": lam,
+        "wo": L.dense_init(jax.random.fold_in(key, 7), (w, d), dtype=dt),
+    }
+
+
+def _lru_gates(p, x):
+    """x: (..., w) post-conv activations -> (log_a, gated_input) fp32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["wa"].astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid(xf @ p["wi"].astype(jnp.float32) + p["bi"])
+    log_a = -_C * jax.nn.softplus(p["lambda"]) * r  # (..., w)
+    a2 = jnp.exp(2.0 * log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i * xf)
+    return log_a, b
+
+
+def _conv1d(x, w, b):
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + pad[:, i : i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def rglru_seq(p, cfg, x):
+    """Full-sequence recurrent branch. x: (B,S,D) -> (B,S,D)."""
+    gate = jax.nn.gelu((x @ p["wgate"]).astype(jnp.float32))
+    xi = _conv1d(x @ p["wx"], p["conv_w"], p["conv_b"])
+    log_a, bseq = _lru_gates(p, xi)
+    a = jnp.exp(log_a)
+
+    def combine(u, v):
+        a1, b1 = u
+        a2, b2 = v
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = lax.associative_scan(combine, (a, bseq), axis=1)
+    y = (h * gate).astype(x.dtype)
+    return y @ p["wo"]
+
+
+def rglru_step(p, cfg, x, conv_state, h_state):
+    """Single-token step. x: (B,1,D); conv_state: (B,K-1,w); h_state: (B,w)."""
+    gate = jax.nn.gelu((x[:, 0] @ p["wgate"]).astype(jnp.float32))
+    xi_raw = x[:, 0] @ p["wx"]
+    full = jnp.concatenate([conv_state, xi_raw[:, None, :]], axis=1)
+    xi = jnp.einsum("bkc,kc->bc", full, p["conv_w"]) + p["conv_b"]
+    new_conv = full[:, 1:]
+    log_a, b = _lru_gates(p, xi)
+    h_new = jnp.exp(log_a) * h_state + b
+    y = (h_new * gate).astype(x.dtype)
+    return (y @ p["wo"])[:, None, :], new_conv, h_new
+
+
+# --------------------------------------------------------------- blocks
+def init_block(key, cfg, kind: str):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": L.init_rms_for(cfg, cfg.d_model), "ln2": L.init_rms_for(cfg, cfg.d_model)}
+    if kind == "rec":
+        p["rec"] = init_rglru(k1, cfg)
+    else:
+        p["attn"] = L.init_gqa(k1, cfg)
+    p["mlp"] = L.init_mlp(k2, cfg)
+    return p
+
+
+def init(key, cfg):
+    kinds = cfg.layer_kinds()
+    k_emb, k_blocks = jax.random.split(key)
+    params = L.init_embed(k_emb, cfg)
+    keys = jax.random.split(k_blocks, cfg.num_layers)
+    params["blocks"] = tuple(init_block(keys[i], cfg, kinds[i]) for i in range(cfg.num_layers))
+    params["final_norm"] = L.init_rms_for(cfg, cfg.d_model)
+    return params
+
+
+def _block_fwd(bp, cfg, kind, x, positions):
+    h = L.apply_norm(cfg, x, bp["ln1"])
+    if kind == "rec":
+        x = x + rglru_seq(bp["rec"], cfg, h)
+    else:
+        x = x + L.gqa_attend(bp["attn"], cfg, h, positions, causal=True)
+    h = L.apply_norm(cfg, x, bp["ln2"])
+    return ctx.constrain_tokens(x + L.mlp_apply(bp["mlp"], cfg, h))
+
+
+def forward(params, cfg, batch):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = L.embed_tokens(params, cfg, tokens)
+    kinds = cfg.layer_kinds()
+    for bp, kind in zip(params["blocks"], kinds):
+        f = (lambda xx, b=bp, k=kind: _block_fwd(b, cfg, k, xx, positions))
+        x = jax.checkpoint(f)(x) if cfg.remat else f(x)
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    return L.lm_logits(params, cfg, x)
+
+
+def loss(params, cfg, batch):
+    logits = forward(params, cfg, batch)
+    return L.cross_entropy(logits, batch["labels"], batch.get("loss_mask")), {}
+
+
+# --------------------------------------------------------------- serving
+def init_cache(cfg, batch: int, max_len: int):
+    a, h = cfg.attention, cfg.hybrid
+    dt = L.param_dtype(cfg)
+    W = min(a.window, max_len)
+    kinds = cfg.layer_kinds()
+    cache = []
+    for kind in kinds:
+        if kind == "rec":
+            cache.append(
+                {
+                    "conv": jnp.zeros((batch, h.conv_width - 1, h.lru_width), dt),
+                    "h": jnp.zeros((batch, h.lru_width), jnp.float32),
+                }
+            )
+        else:
+            cache.append(
+                {
+                    "k": jnp.zeros((batch, W, a.num_kv_heads, a.head_dim), dt),
+                    "v": jnp.zeros((batch, W, a.num_kv_heads, a.head_dim), dt),
+                }
+            )
+    return {"blocks": tuple(cache), "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, cfg, batch):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    a = cfg.attention
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = L.embed_tokens(params, cfg, tokens)
+    kinds = cfg.layer_kinds()
+    W = min(a.window, S)
+    new_cache = []
+    for bp, kind in zip(params["blocks"], kinds):
+        h = L.apply_norm(cfg, x, bp["ln1"])
+        if kind == "rec":
+            hp = bp["rec"]
+            gate = jax.nn.gelu((h @ hp["wgate"]).astype(jnp.float32))
+            xi_raw = h @ hp["wx"]
+            xi = _conv1d(xi_raw, hp["conv_w"], hp["conv_b"])
+            log_a, bseq = _lru_gates(hp, xi)
+            aa = jnp.exp(log_a)
+
+            def combine(u, v):
+                return u[0] * v[0], v[0] * u[1] + v[1]
+
+            _, hs = lax.associative_scan(combine, (aa, bseq), axis=1)
+            y = (hs * gate).astype(x.dtype)
+            x = x + y @ hp["wo"]
+            conv_tail = jnp.concatenate(
+                [jnp.zeros((B, cfg.hybrid.conv_width - 1, xi_raw.shape[-1]), xi_raw.dtype), xi_raw],
+                axis=1,
+            )[:, -(cfg.hybrid.conv_width - 1) :]
+            new_cache.append({"conv": conv_tail, "h": hs[:, -1]})
+        else:
+            q, k, v = L.gqa_project_qkv(bp["attn"], cfg, h)
+            q = L.apply_rope(q, positions, a.rope_theta)
+            k = L.apply_rope(k, positions, a.rope_theta)
+            out = L.mha(q, k, v, causal=True, q_positions=positions, kv_positions=positions,
+                        window=a.window)
+            x = x + out.reshape(B, S, -1) @ bp["attn"]["wo"]
+            # keep the last W positions, arranged so slot (pos % W) is correct
+            kW, vW = k[:, -W:], v[:, -W:]
+            if S >= W:
+                shift = S % W
+                idx = (jnp.arange(W) - shift) % W
+                kW, vW = kW[:, idx], vW[:, idx]
+            new_cache.append({"k": kW, "v": vW})
+        h = L.apply_norm(cfg, x, bp["ln2"])
+        x = ctx.constrain_tokens(x + L.mlp_apply(bp["mlp"], cfg, h))
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    logits = L.lm_logits(params, cfg, x[:, -1:, :])
+    return logits[:, 0], {"blocks": tuple(new_cache), "pos": jnp.asarray(S, jnp.int32)}
+
+
+def decode_step(params, cfg, cache, tokens):
+    B = tokens.shape[0]
+    a = cfg.attention
+    pos = cache["pos"]
+    x = L.embed_tokens(params, cfg, tokens[:, None])
+    kinds = cfg.layer_kinds()
+    new_cache = []
+    for bp, kind, c in zip(params["blocks"], kinds, cache["blocks"]):
+        h = L.apply_norm(cfg, x, bp["ln1"])
+        if kind == "rec":
+            out, conv, hs = rglru_step(bp["rec"], cfg, h, c["conv"], c["h"])
+            x = x + out
+            new_cache.append({"conv": conv, "h": hs})
+        else:
+            out, ck, cv = L.gqa_decode(bp["attn"], cfg, h, c["k"], c["v"], pos, window=a.window)
+            x = x + out
+            new_cache.append({"k": ck, "v": cv})
+        h = L.apply_norm(cfg, x, bp["ln2"])
+        x = ctx.constrain_tokens(x + L.mlp_apply(bp["mlp"], cfg, h))
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    logits = L.lm_logits(params, cfg, x)
+    return logits[:, 0], {"blocks": tuple(new_cache), "pos": pos + 1}

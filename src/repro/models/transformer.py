@@ -1,0 +1,140 @@
+"""Dense decoder-only transformer (llama/qwen/deepseek-dense style).
+
+Implements the uniform family API used by the launcher and the serving
+engine:
+
+    init(key, cfg)                       -> params
+    forward(params, cfg, batch)          -> logits (B,S,V) fp32
+    loss(params, cfg, batch)             -> (scalar, aux)
+    init_cache(cfg, batch, max_len)      -> cache pytree
+    prefill(params, cfg, batch)          -> (last_logits, cache)
+    decode_step(params, cfg, cache, tok) -> (logits, cache)
+
+The layer stack is scanned (stacked params, leading L dim).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed import ctx
+from repro.models import layers as L
+
+
+def init_layer(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_rms_for(cfg, cfg.d_model),
+        "attn": L.init_gqa(k1, cfg),
+        "ln2": L.init_rms_for(cfg, cfg.d_model),
+        "mlp": L.init_mlp(k2, cfg),
+    }
+
+
+def init(key, cfg):
+    k_emb, k_layers = jax.random.split(key)
+    params = L.init_embed(k_emb, cfg)
+    params["layers"] = L.stack_init(lambda k: init_layer(k, cfg), k_layers, cfg.num_layers)
+    params["final_norm"] = L.init_rms_for(cfg, cfg.d_model)
+    return params
+
+
+def _layer_fwd(cfg, x, lp, positions):
+    h = L.apply_norm(cfg, x, lp["ln1"])
+    x = ctx.constrain_mid(x + L.gqa_attend(lp["attn"], cfg, h, positions, causal=True))
+    h = L.apply_norm(cfg, x, lp["ln2"])
+    x = x + L.mlp_apply(lp["mlp"], cfg, h)
+    return x
+
+
+def backbone(params, cfg, x, positions):
+    """x: (B,S,d) embeddings -> (B,S,d) final-normed activations."""
+
+    def body(h, lp):
+        return _layer_fwd(cfg, h, lp, positions)
+
+    x = L.scan_layers(body, x, params["layers"], remat=cfg.remat)
+    return L.apply_norm(cfg, x, params["final_norm"])
+
+
+def forward(params, cfg, batch):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = L.embed_tokens(params, cfg, tokens)
+    x = backbone(params, cfg, x, positions)
+    return L.lm_logits(params, cfg, x)
+
+
+def loss(params, cfg, batch):
+    logits = forward(params, cfg, batch)
+    return L.cross_entropy(logits, batch["labels"], batch.get("loss_mask")), {}
+
+
+# -------------------------------------------------------------- serving
+def init_cache(cfg, batch: int, max_len: int):
+    a = cfg.attention
+    window = a.window if a.kind == "local" else 0
+    T = min(max_len, window) if window else max_len
+    dt = L.param_dtype(cfg)
+    shape = (cfg.num_layers, batch, T, a.num_kv_heads, a.head_dim)
+    return {
+        "k": jnp.zeros(shape, dt),
+        "v": jnp.zeros(shape, dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, cfg, batch):
+    """Processes the full prompt, returns logits at the last position and a
+    populated cache sized to the prompt (caller may re-pad)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = L.embed_tokens(params, cfg, tokens)
+    a = cfg.attention
+
+    cache_k = []
+    cache_v = []
+
+    def body(h, lp):
+        hn = L.apply_norm(cfg, h, lp["ln1"])
+        q, k, v = L.gqa_project_qkv(lp["attn"], cfg, hn)
+        q = L.apply_rope(q, positions, a.rope_theta)
+        k = L.apply_rope(k, positions, a.rope_theta)
+        out = L.mha(q, k, v, causal=True, q_positions=positions, kv_positions=positions,
+                    window=a.window if a.kind == "local" else 0)
+        h = h + out.reshape(B, S, -1) @ lp["attn"]["wo"]
+        hn = L.apply_norm(cfg, h, lp["ln2"])
+        h = h + L.mlp_apply(lp["mlp"], cfg, hn)
+        return ctx.constrain_tokens(h), (k, v)
+
+    x, (ks, vs) = lax.scan(lambda c, lp: body(c, lp), x, params["layers"])
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    logits = L.lm_logits(params, cfg, x[:, -1:, :])
+    cache = {"k": ks, "v": vs, "pos": jnp.asarray(S, jnp.int32)}
+    return logits[:, 0], cache
+
+
+def decode_step(params, cfg, cache, tokens):
+    """tokens: (B,) int32 -> (logits (B,V) fp32, new cache)."""
+    B = tokens.shape[0]
+    a = cfg.attention
+    x = L.embed_tokens(params, cfg, tokens[:, None])
+    pos = cache["pos"]
+    window = a.window if a.kind == "local" else 0
+
+    def body(h, xs):
+        lp, ck, cv = xs
+        hn = L.apply_norm(cfg, h, lp["ln1"])
+        out, ck, cv = L.gqa_decode(lp["attn"], cfg, hn, ck, cv, pos, window=window)
+        h = h + out
+        hn = L.apply_norm(cfg, h, lp["ln2"])
+        h = h + L.mlp_apply(lp["mlp"], cfg, hn)
+        return ctx.constrain_tokens(h), (ck, cv)
+
+    x, (ks, vs) = lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    logits = L.lm_logits(params, cfg, x)
+    return logits[:, 0], {"k": ks, "v": vs, "pos": pos + 1}

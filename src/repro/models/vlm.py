@@ -1,0 +1,63 @@
+"""VLM family (paligemma-3b): gemma decoder backbone with a vision-patch
+prefix.  The SigLIP tower is a STUB per the assignment — ``input_specs()``
+supplies precomputed patch embeddings (B, P, d_model) which are prepended to
+the token embeddings.  Loss is computed on text positions only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+
+init = T.init  # same backbone params as the dense family
+init_cache = T.init_cache
+decode_step = T.decode_step
+
+
+def _prefixed_embeddings(params, cfg, batch):
+    tokens = batch["tokens"]
+    patches = batch["patches"].astype(L.param_dtype(cfg))
+    B, S = tokens.shape
+    P = patches.shape[1]
+    tok_emb = L.embed_tokens(params, cfg, tokens)
+    x = jnp.concatenate([patches, tok_emb], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(P + S, dtype=jnp.int32)[None], (B, P + S))
+    return x, positions, P
+
+
+def forward(params, cfg, batch):
+    """Returns logits for the TEXT positions only: (B, S, V)."""
+    x, positions, P = _prefixed_embeddings(params, cfg, batch)
+    x = T.backbone(params, cfg, x, positions)
+    return L.lm_logits(params, cfg, x[:, P:, :])
+
+
+def loss(params, cfg, batch):
+    logits = forward(params, cfg, batch)
+    return L.cross_entropy(logits, batch["labels"], batch.get("loss_mask")), {}
+
+
+def prefill(params, cfg, batch):
+    """Prefill over [patches ; prompt tokens]; cache covers the full prefix."""
+    from jax import lax
+
+    a = cfg.attention
+    x, positions, P = _prefixed_embeddings(params, cfg, batch)
+    B, Stot, _ = x.shape
+
+    def body(h, lp):
+        hn = L.apply_norm(cfg, h, lp["ln1"])
+        q, k, v = L.gqa_project_qkv(lp["attn"], cfg, hn)
+        q = L.apply_rope(q, positions, a.rope_theta)
+        k = L.apply_rope(k, positions, a.rope_theta)
+        out = L.mha(q, k, v, causal=True, q_positions=positions, kv_positions=positions)
+        h = h + out.reshape(B, Stot, -1) @ lp["attn"]["wo"]
+        hn = L.apply_norm(cfg, h, lp["ln2"])
+        return h + L.mlp_apply(lp["mlp"], cfg, hn), (k, v)
+
+    x, (ks, vs) = lax.scan(body, x, params["layers"])
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    logits = L.lm_logits(params, cfg, x[:, -1:, :])
+    return logits[:, 0], {"k": ks, "v": vs, "pos": jnp.asarray(Stot, jnp.int32)}

@@ -1,0 +1,116 @@
+"""Batched cascade serving engine (continuous batching over the proxy
+cascade).
+
+The paper's executor streams rows; on TPU we keep static shapes (DESIGN.md
+§3):
+
+  * every cascade stage has a fixed-size device microbatch;
+  * proxy scoring runs the fused Pallas kernel over full tiles;
+  * survivors are pushed to the next stage's HOST queue; the scheduler
+    drains whichever stage has a full tile ready (UDFs always run dense);
+  * a final drain pass flushes partial tiles at end-of-stream.
+
+Nothing is dropped: a hypothesis property test asserts conservation
+(every record is either rejected by some stage or emitted).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional
+
+import numpy as np
+
+from repro.core.query import PhysicalPlan
+
+
+@dataclass
+class ServeStats:
+    stage_in: List[int]
+    stage_udf_batches: List[int]
+    stage_kept: List[int]
+    emitted: int = 0
+    rejected: int = 0
+    wall_ms: float = 0.0
+    model_cost_ms: float = 0.0
+
+
+class CascadeServer:
+    """Continuous-batching executor for a compiled cascade plan."""
+
+    def __init__(self, plan: PhysicalPlan, *, tile: int = 1024, use_kernel: bool = True):
+        self.plan = plan
+        self.tile = tile
+        self.use_kernel = use_kernel
+        n = len(plan.stages)
+        self.queues: List[deque] = [deque() for _ in range(n)]  # (idx, row) pending per stage
+        self.emitted: List[int] = []
+        self.stats = ServeStats(
+            stage_in=[0] * n, stage_udf_batches=[0] * n, stage_kept=[0] * n
+        )
+        self._scorer = None
+        if use_kernel:
+            try:
+                from repro.kernels.ops import proxy_score_batch
+
+                self._scorer = proxy_score_batch
+            except Exception:  # pragma: no cover - kernel optional
+                self._scorer = None
+
+    # ------------------------------------------------------------- plumbing
+    def submit(self, indices: np.ndarray, rows: np.ndarray):
+        for i, r in zip(indices, rows):
+            self.queues[0].append((int(i), r))
+
+    def _run_stage_batch(self, si: int, batch: List):
+        stage = self.plan.stages[si]
+        idxs = np.asarray([b[0] for b in batch])
+        x = np.stack([b[1] for b in batch])
+        self.stats.stage_in[si] += len(batch)
+        if stage.proxy is not None:
+            if self._scorer is not None and stage.proxy.kind == "svm":
+                keep = self._scorer(stage.proxy.params, x, stage.threshold)
+            else:
+                keep = stage.proxy.score(x) >= stage.threshold
+            self.stats.model_cost_ms += len(x) * stage.proxy.cost
+            idxs, x = idxs[keep], x[keep]
+        if len(idxs) == 0:
+            return
+        pred = self.plan.query.predicates[stage.pred_idx]
+        labels = pred.udf(x)
+        self.stats.model_cost_ms += len(x) * pred.udf.cost
+        self.stats.stage_udf_batches[si] += 1
+        passed = pred.evaluate(labels)
+        self.stats.stage_kept[si] += int(passed.sum())
+        survivors = [(int(i), r) for i, r, p in zip(idxs, x, passed) if p]
+        if si + 1 < len(self.plan.stages):
+            self.queues[si + 1].extend(survivors)
+        else:
+            self.emitted.extend(i for i, _ in survivors)
+            self.stats.emitted += len(survivors)
+
+    def pump(self, *, drain: bool = False):
+        """Run every stage whose queue holds >= one full tile.  Steady state
+        drains later stages first (keeps output latency low); the end-of-
+        stream drain runs FORWARD so survivors flow through every stage."""
+        n = len(self.plan.stages)
+        order = range(n) if drain else reversed(range(n))
+        for si in order:
+            q = self.queues[si]
+            while len(q) >= self.tile or (drain and q):
+                take = min(self.tile, len(q))
+                batch = [q.popleft() for _ in range(take)]
+                self._run_stage_batch(si, batch)
+
+    def run_stream(self, x: np.ndarray, *, chunk: int = 4096) -> ServeStats:
+        t0 = time.perf_counter()
+        n = x.shape[0]
+        for s in range(0, n, chunk):
+            idx = np.arange(s, min(s + chunk, n))
+            self.submit(idx, x[idx])
+            self.pump()
+        self.pump(drain=True)
+        self.stats.wall_ms = (time.perf_counter() - t0) * 1e3
+        self.stats.rejected = n - self.stats.emitted
+        return self.stats

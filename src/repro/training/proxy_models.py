@@ -1,0 +1,132 @@
+"""Proxy-model trainers: linear SVM (hinge) and shallow NN, pure JAX.
+
+These are the cheap classifiers M inside a proxy model sigma-hat.  Training
+is a jitted full-batch GD ``lax.scan`` — milliseconds per proxy — replacing
+the paper's scikit-learn / keras step.  Class imbalance is handled with
+inverse-frequency loss weights (the paper re-samples; weighting is the
+deterministic equivalent).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class LinearParams(NamedTuple):
+    w: jnp.ndarray  # (F,)
+    b: jnp.ndarray  # ()
+    mean: jnp.ndarray  # (F,) feature standardization
+    scale: jnp.ndarray  # (F,)
+
+
+class MLPParams(NamedTuple):
+    w1: jnp.ndarray
+    b1: jnp.ndarray
+    w2: jnp.ndarray
+    b2: jnp.ndarray
+    mean: jnp.ndarray
+    scale: jnp.ndarray
+
+
+def _standardizer(x):
+    mean = jnp.mean(x, axis=0)
+    scale = jnp.std(x, axis=0) + 1e-6
+    return mean, scale
+
+
+@partial(jax.jit, static_argnames=("steps",))
+def train_linear_svm(x, y, *, steps: int = 200, lr: float = 0.1, l2: float = 1e-4):
+    """x: (N, F) float32; y: (N,) in {-1, +1}.  Returns LinearParams."""
+    mean, scale = _standardizer(x)
+    xs = (x - mean) / scale
+    n_pos = jnp.maximum(jnp.sum(y > 0), 1)
+    n_neg = jnp.maximum(jnp.sum(y < 0), 1)
+    wts = jnp.where(y > 0, x.shape[0] / (2.0 * n_pos), x.shape[0] / (2.0 * n_neg))
+
+    def loss_fn(p):
+        w, b = p
+        margin = y * (xs @ w + b)
+        hinge = jnp.maximum(0.0, 1.0 - margin)
+        return jnp.mean(wts * hinge) + l2 * jnp.sum(w * w)
+
+    def step(carry, _):
+        p, m = carry
+        g = jax.grad(loss_fn)(p)
+        m = jax.tree.map(lambda mm, gg: 0.9 * mm + gg, m, g)
+        p = jax.tree.map(lambda pp, mm: pp - lr * mm, p, m)
+        return (p, m), None
+
+    w0 = jnp.zeros(x.shape[1], jnp.float32)
+    p0 = (w0, jnp.zeros((), jnp.float32))
+    m0 = jax.tree.map(jnp.zeros_like, p0)
+    (p, _), _ = jax.lax.scan(step, (p0, m0), None, length=steps)
+    return LinearParams(w=p[0], b=p[1], mean=mean, scale=scale)
+
+
+@jax.jit
+def linear_score(params: LinearParams, x):
+    xs = (x - params.mean) / params.scale
+    return xs @ params.w + params.b
+
+
+@partial(jax.jit, static_argnames=("steps", "hidden"))
+def train_mlp(x, y, key, *, steps: int = 300, hidden: int = 32, lr: float = 0.05):
+    """Shallow NN proxy: 1 hidden layer, BCE loss.  y in {-1, +1}."""
+    mean, scale = _standardizer(x)
+    xs = (x - mean) / scale
+    yb = (y > 0).astype(jnp.float32)
+    n_pos = jnp.maximum(jnp.sum(yb), 1.0)
+    n_neg = jnp.maximum(jnp.sum(1 - yb), 1.0)
+    wts = jnp.where(yb > 0, x.shape[0] / (2 * n_pos), x.shape[0] / (2 * n_neg))
+    k1, k2 = jax.random.split(key)
+    F = x.shape[1]
+    p0 = (
+        jax.random.normal(k1, (F, hidden)) / jnp.sqrt(F),
+        jnp.zeros(hidden),
+        jax.random.normal(k2, (hidden,)) / jnp.sqrt(hidden),
+        jnp.zeros(()),
+    )
+
+    def logits_fn(p, xx):
+        w1, b1, w2, b2 = p
+        h = jax.nn.relu(xx @ w1 + b1)
+        return h @ w2 + b2
+
+    def loss_fn(p):
+        lg = logits_fn(p, xs)
+        ce = jnp.maximum(lg, 0) - lg * yb + jnp.log1p(jnp.exp(-jnp.abs(lg)))
+        return jnp.mean(wts * ce)
+
+    def step(carry, _):
+        p, m = carry
+        g = jax.grad(loss_fn)(p)
+        m = jax.tree.map(lambda mm, gg: 0.9 * mm + gg, m, g)
+        p = jax.tree.map(lambda pp, mm: pp - lr * mm, p, m)
+        return (p, m), None
+
+    m0 = jax.tree.map(jnp.zeros_like, p0)
+    (p, _), _ = jax.lax.scan(step, (p0, m0), None, length=steps)
+    return MLPParams(w1=p[0], b1=p[1], w2=p[2], b2=p[3], mean=mean, scale=scale)
+
+
+@jax.jit
+def mlp_score(params: MLPParams, x):
+    xs = (x - params.mean) / params.scale
+    h = jax.nn.relu(xs @ params.w1 + params.b1)
+    return h @ params.w2 + params.b2
+
+
+def f1_score(scores: np.ndarray, y: np.ndarray, threshold: float = 0.0) -> float:
+    """F1 of sign(score - threshold) vs y in {-1,+1} (used by the
+    epsilon-approximate classifier-reuse test, Eq. 4.7)."""
+    pred = scores >= threshold
+    pos = y > 0
+    tp = float(np.sum(pred & pos))
+    fp = float(np.sum(pred & ~pos))
+    fn = float(np.sum(~pred & pos))
+    denom = 2 * tp + fp + fn
+    return 2 * tp / denom if denom else 1.0

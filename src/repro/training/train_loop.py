@@ -1,0 +1,76 @@
+"""Generic train step across all model families.
+
+``make_train_step`` builds a jittable ``train_step(params, opt_state, batch)``
+with gradient accumulation (``cfg.accum_steps`` microbatches via lax.scan) —
+this bounds live activation memory for the 100B+-class dry-run cells.  Grads
+are accumulated in fp32; the optimizer update happens once per global step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.registry import get_family
+from repro.training import optim
+
+
+def make_loss_fn(cfg):
+    fam = get_family(cfg)
+
+    def loss_fn(params, batch):
+        l, aux = fam.loss(params, cfg, batch)
+        return l, aux
+
+    return loss_fn
+
+
+def make_train_step(cfg, *, lr=1e-4, weight_decay=0.0):
+    loss_fn = make_loss_fn(cfg)
+    accum = max(1, cfg.accum_steps)
+    acc_dtype = jnp.dtype(cfg.grad_accum_dtype)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, _aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            # reshape leading batch dim into (accum, B/accum, ...)
+            def split(x):
+                return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            gzero = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype), params)
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                (l, _aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(acc_dtype), gsum, g)
+                return (gsum, lsum + l), None
+
+            (gsum, lsum), _ = lax.scan(body, (gzero, jnp.zeros((), jnp.float32)), micro)
+            # divide in the accumulation dtype; optimizers upcast per-leaf, so
+            # no full-size f32 grads tree is ever materialized
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+        if cfg.optimizer == "adafactor":
+            new_params, new_opt = optim.adafactor_update(params, grads, opt_state, lr=lr)
+        else:
+            new_params, new_opt = optim.adamw_update(
+                params, grads, opt_state, lr=lr, weight_decay=weight_decay
+            )
+        return new_params, new_opt, {"loss": loss}
+
+    return train_step
+
+
+def init_opt_state(cfg, params):
+    if cfg.optimizer == "adafactor":
+        return optim.adafactor_init(params)
+    return optim.adamw_init(params)
+
+
+def init_train_state(cfg, key):
+    fam = get_family(cfg)
+    params = fam.init(key, cfg)
+    return params, init_opt_state(cfg, params)

@@ -1,0 +1,139 @@
+"""System/integration tests for CORE: Theorem-1 commutativity, builder
+reuse, allocation/B&B consistency, end-to-end accuracy + speedup."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BranchAndBound,
+    ProxyBuilder,
+    accuracy_allocation,
+    execute_plan,
+    ns_plan,
+    optimize,
+    orig_plan,
+    plan_accuracy,
+    pp_plan,
+)
+from repro.data.synthetic import make_dataset, make_query, make_udfs
+
+
+@pytest.fixture(scope="module")
+def workload():
+    ds = make_dataset(n=12000, correlation=0.9, feature_noise=1.0, label_noise=0.2, seed=3)
+    udfs = make_udfs(ds, hidden=32, depth=2, train_rows=2500, seed=3,
+                     declared_cost_ms=10.0, cost_scale={0: 1.0, 1: 2.0, 2: 0.5})
+    q = make_query(ds, udfs, columns=[0, 1, 2], target_selectivity=0.5,
+                   accuracy_target=0.9, seed=4)
+    return ds, udfs, q
+
+
+# ----------------------------------------------------- Theorem 1 (property)
+@given(seed=st.integers(0, 10_000), alpha_q=st.floats(0.05, 0.95))
+@settings(max_examples=30, deadline=None)
+def test_commutativity_of_fixed_proxy_and_sigma(seed, alpha_q):
+    """A trained sigma-hat with a FIXED threshold commutes with sigma:
+    filtering order does not change the surviving set (Lemma 2)."""
+    rng = np.random.RandomState(seed)
+    n = 500
+    scores = rng.randn(n)
+    sigma = rng.rand(n) < 0.5
+    thr = np.quantile(scores, alpha_q)
+    keep_hat = scores >= thr
+    a = np.flatnonzero(keep_hat & sigma)  # sigma-hat then sigma
+    b = np.flatnonzero(sigma & keep_hat)  # sigma then sigma-hat
+    assert np.array_equal(a, b)
+
+
+def test_builder_sample_reuse_and_lazy_labeling(workload):
+    ds, udfs, q = workload
+    b = ProxyBuilder(q, ds.x[:1000], seed=0)
+    r01 = b.rows_after_sigmas((0, 1))
+    calls_after = dict(b.stats.udf_calls)
+    # same set, different order: no new UDF calls (Theorem-1 set keying)
+    r10 = b.rows_after_sigmas((1, 0))
+    assert np.array_equal(np.sort(r01), np.sort(r10))
+    assert b.stats.udf_calls == calls_after
+    # pred 0 labeled on all 1000 rows; pred 1 only on sigma_0 survivors
+    assert b.stats.udf_calls[0] == 1000
+    assert b.stats.udf_calls[1] < 1000
+    # relabeling is memoized
+    b.sigma_mask(0, np.arange(1000))
+    assert b.stats.udf_calls[0] == 1000
+
+
+def test_classifier_reuse_on_similar_samples(workload):
+    ds, udfs, q = workload
+    b = ProxyBuilder(q, ds.x[:1500], eps=0.2, seed=0)
+    p1, rows1 = b.get_proxy(1, (0,), ())
+    p0, _ = b.get_proxy(0, (), ())
+    n_trained = b.stats.n_trained
+    # same relation refined by a high-accuracy prefix proxy -> eps-similar
+    p2, rows2 = b.get_proxy(1, (0,), [(p0, 0.98)])
+    assert b.stats.n_reused >= 1
+    assert b.stats.n_trained == n_trained  # no retrain happened
+
+
+def test_accuracy_allocation_product_constraint(workload):
+    ds, udfs, q = workload
+    b = ProxyBuilder(q, ds.x[:1500], seed=0)
+    alloc = accuracy_allocation(b, (0, 1, 2), 0.9, step=0.05)
+    prod = np.prod(alloc.alphas)
+    assert prod >= 0.9 - 1e-9
+    assert alloc.total_cost > 0
+    assert len(alloc.proxies) == 3
+
+
+def test_bnb_matches_exhaustive_plan_quality(workload):
+    """B&B (Alg. 2) should find a plan within a few % of CORE-h (§6.5)."""
+    ds, udfs, q = workload
+    xs = ds.x[:1500]
+    plan_h = optimize(q, xs, mode="core-h", step=0.05, seed=0)
+    plan_bb = optimize(q, xs, mode="core", step=0.05, seed=0)
+    assert plan_bb.est_total_cost <= plan_h.est_total_cost * 1.10
+    tr = plan_bb.meta["trace"]
+    assert tr["nodes_visited"] <= tr["nodes_total"]
+
+
+def test_bnb_visits_fewer_nodes_than_exhaustive(workload):
+    ds, udfs, q = workload
+    b = ProxyBuilder(q, ds.x[:1500], seed=0)
+    bb = BranchAndBound(b, 0.9, step=0.05, fine_grained=True)
+    _alloc, trace = bb.run()
+    # exhaustive visits all 15 nodes (n=3: 3+6+6); pruning must bite
+    assert trace.nodes_visited < trace.nodes_total
+
+
+# ------------------------------------------------------------- end-to-end
+def test_core_meets_accuracy_and_beats_orig(workload):
+    ds, udfs, q = workload
+    k = 2000
+    xs, xrest = ds.x[:k], ds.x[k:]
+    plan = optimize(q, xs, mode="core", seed=0)
+    orig = execute_plan(orig_plan(q), xrest)
+    res = execute_plan(plan, xrest)
+    acc = plan_accuracy(res, orig)
+    assert acc >= q.accuracy_target - 0.03, f"empirical accuracy {acc}"
+    assert res.model_cost_ms < orig.model_cost_ms, "CORE should cut cost vs ORIG"
+
+
+def test_all_optimizers_produce_runnable_plans(workload):
+    ds, udfs, q = workload
+    xs, xrest = ds.x[:1500], ds.x[1500:4000]
+    orig = execute_plan(orig_plan(q), xrest)
+    for plan in (ns_plan(q, xs), pp_plan(q, xs), optimize(q, xs, mode="core-a")):
+        res = execute_plan(plan, xrest)
+        assert plan_accuracy(res, orig) > 0.75
+        assert len(res.stages) == len(plan.stages)
+
+
+def test_executor_bookkeeping(workload):
+    ds, udfs, q = workload
+    xrest = ds.x[2000:6000]
+    res = execute_plan(orig_plan(q), xrest)
+    st0 = res.stages[0]
+    assert st0.n_in == len(xrest)
+    assert st0.n_udf == st0.n_proxy_kept == st0.n_in  # no proxy on ORIG
+    # monotone shrink through the cascade
+    for a, b in zip(res.stages, res.stages[1:]):
+        assert b.n_in <= a.n_pass or b.n_in == a.n_pass

@@ -1,0 +1,117 @@
+"""Unit tests for the CORE optimizer machinery."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.accuracy import alpha_frontier
+from repro.core.cost import Bounds, node_bounds, plan_cost, stage_cost
+from repro.core.correlation import correlation_score
+from repro.core.proxy import build_r_curve
+
+
+# ------------------------------------------------------------- cost model
+def test_stage_cost_matches_paper_example():
+    """Paper §4.4: C(sigma1,alpha1) = 0.01 + (1 - 80/200)*20 = 12.01."""
+    c = stage_cost(1.0, 0.01, 20.0, 80.0 / 200.0)
+    assert abs(c - 12.01) < 1e-9
+
+
+def test_eq_3_2_figure5_bookkeeping():
+    """Figure 5: alpha1*delta1*alpha2*delta2 == A == 54/60."""
+    alpha1, alpha2 = 96 / 100, 54 / 56
+    s2, s2bar = 56 / 96, 60 / 100
+    delta1, delta2 = 1.0, s2 / s2bar
+    assert abs(alpha1 * delta1 * alpha2 * delta2 - 54 / 60) < 1e-9
+
+
+def test_plan_cost_prefix_product():
+    # two identical stages: second stage scaled by s1*alpha1
+    c = plan_cost([0.9, 0.9], [0.5, 0.5], [0.5, 0.5], [0.01, 0.01], [10.0, 10.0])
+    stage1 = 0.01 + 0.5 * 10
+    stage2 = (0.5 * 0.9) * stage1
+    assert abs(c - (stage1 + stage2)) < 1e-9
+
+
+def test_lemma4_bounds_ordering():
+    b = node_bounds(2, 0.9, 0.01, 10.0)
+    assert b.lower <= b.upper
+    assert b.lower >= 0
+    # depth-0 node: prefix product is 1 for both bounds
+    b0 = node_bounds(0, 0.9, 0.01, 10.0)
+    assert abs(b0.lower - 0.01) < 1e-9  # r^u = 1 discards everything
+    assert abs(b0.upper - 10.01) < 1e-9  # r^l = 0 discards nothing
+
+
+def test_bounds_overlap():
+    assert Bounds(0, 2).overlaps(Bounds(1, 3))
+    assert not Bounds(0, 1).overlaps(Bounds(2, 3))
+
+
+# ---------------------------------------------------------- alpha frontier
+@given(
+    n=st.integers(1, 4),
+    A=st.floats(0.8, 0.98),
+    step=st.sampled_from([0.02, 0.05]),
+)
+@settings(max_examples=25, deadline=None)
+def test_alpha_frontier_products_near_target(n, A, step):
+    cands = alpha_frontier(n, A, step)
+    assert len(cands) > 0
+    prods = np.prod(cands, axis=1)
+    assert np.all(prods >= A - 1e-9)
+    # tight shell: products below A/(1-step)
+    assert np.all(prods < A / (1 - step) + 1e-9)
+    # all coordinates within [A, 1]
+    assert np.all(cands >= A - 1e-9) and np.all(cands <= 1.0 + 1e-9)
+
+
+def test_alpha_frontier_contains_balanced():
+    cands = alpha_frontier(2, 0.9, 0.02)
+    bal = np.sqrt(0.9)
+    d = np.abs(cands - bal).sum(axis=1).min()
+    assert d < 0.06  # a near-balanced point exists on the grid
+
+
+# ---------------------------------------------------------------- R curve
+def test_r_curve_monotone_and_thresholds():
+    rng = np.random.RandomState(0)
+    scores = np.concatenate([rng.normal(1, 1, 500), rng.normal(-1, 1, 500)])
+    labels = np.concatenate([np.ones(500, bool), np.zeros(500, bool)])
+    curve = build_r_curve(scores, labels, conf_z=0.0)
+    # reduction non-increasing as alpha rises
+    assert np.all(np.diff(curve.reductions) >= -1e-9)
+    # semantic check: keeping >= threshold(alpha) keeps >= alpha of positives
+    for a in (0.9, 0.95, 0.99):
+        thr = curve.threshold_for(a)
+        kept = np.mean(scores[labels] >= thr)
+        assert kept >= a - 1e-9, (a, kept)
+
+
+def test_r_curve_confidence_margin_is_conservative():
+    rng = np.random.RandomState(1)
+    scores = np.concatenate([rng.normal(1, 1, 200), rng.normal(-1, 1, 200)])
+    labels = np.concatenate([np.ones(200, bool), np.zeros(200, bool)])
+    plain = build_r_curve(scores, labels, conf_z=0.0)
+    safe = build_r_curve(scores, labels, conf_z=1.5)
+    for a in (0.85, 0.9, 0.95):
+        assert safe.threshold_for(a) <= plain.threshold_for(a) + 1e-12
+        assert safe.reduction_for(a) <= plain.reduction_for(a) + 1e-12
+
+
+# -------------------------------------------------------------- CORDS
+def test_correlation_score_orders_dependence():
+    rng = np.random.RandomState(0)
+    a = rng.randint(0, 4, 20000)
+    b_ind = rng.randint(0, 4, 20000)
+    noise = rng.rand(20000) < 0.2
+    b_dep = np.where(noise, rng.randint(0, 4, 20000), a)
+    k_ind = correlation_score(a, b_ind)
+    k_dep = correlation_score(a, b_dep)
+    assert k_dep > 5 * k_ind
+    assert 0 <= k_ind < 0.05
+    assert k_dep > 0.3
+
+
+def test_correlation_score_perfect_dependence():
+    a = np.tile(np.arange(4), 2500)
+    assert correlation_score(a, a) > 0.95

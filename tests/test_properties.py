@@ -1,0 +1,117 @@
+"""Hypothesis property tests on the system's invariants (deliverable c)."""
+import numpy as np
+import pytest
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core.accuracy import alpha_frontier
+from repro.core.cost import plan_cost
+from repro.core.proxy import build_r_curve
+
+
+# ---------------------------------------------------------------- R curves
+@given(
+    n_pos=st.integers(10, 400),
+    n_neg=st.integers(10, 400),
+    sep=st.floats(0.0, 3.0),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=40, deadline=None)
+def test_r_curve_keep_rate_property(n_pos, n_neg, sep, seed):
+    """For ANY score distribution, keeping >= threshold(alpha) keeps at least
+    alpha of the positives it was measured on (Figure 4 semantics)."""
+    rng = np.random.RandomState(seed)
+    scores = np.concatenate([rng.normal(sep, 1, n_pos), rng.normal(0, 1, n_neg)])
+    labels = np.concatenate([np.ones(n_pos, bool), np.zeros(n_neg, bool)])
+    curve = build_r_curve(scores, labels, conf_z=0.0)
+    for a in (0.8, 0.9, 0.95, 1.0):
+        thr = curve.threshold_for(a)
+        kept = np.mean(scores[labels] >= thr)
+        assert kept >= a - 1e-9
+    # reduction never exceeds the fraction of records below the max score
+    assert np.all(curve.reductions <= 1.0)
+    assert np.all(curve.reductions >= 0.0)
+
+
+# ------------------------------------------------------------ cost model
+@given(
+    n=st.integers(1, 4),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=40, deadline=None)
+def test_plan_cost_monotone_in_reduction(n, seed):
+    """More reduction at any stage never increases the plan cost."""
+    rng = np.random.RandomState(seed)
+    alphas = rng.uniform(0.9, 1.0, n)
+    sels = rng.uniform(0.2, 0.9, n)
+    pc = rng.uniform(1e-4, 1e-2, n)
+    uc = rng.uniform(1.0, 50.0, n)
+    reds = rng.uniform(0.0, 0.9, n)
+    base = plan_cost(alphas, reds, sels, pc, uc)
+    i = rng.randint(n)
+    reds2 = reds.copy()
+    reds2[i] = min(1.0, reds2[i] + 0.05)
+    assert plan_cost(alphas, reds2, sels, pc, uc) <= base + 1e-12
+
+
+@given(n=st.integers(1, 3), A=st.floats(0.85, 0.98), seed=st.integers(0, 500))
+@settings(max_examples=30, deadline=None)
+def test_plan_cost_monotone_in_alpha(n, A, seed):
+    """With fixed reductions/selectivities, raising any alpha never lowers
+    cost (the Lemma-1 premise; justifies searching the tight frontier)."""
+    rng = np.random.RandomState(seed)
+    alphas = rng.uniform(A, 1.0, n)
+    sels = rng.uniform(0.2, 0.9, n)
+    pc = rng.uniform(1e-4, 1e-2, n)
+    uc = rng.uniform(1.0, 50.0, n)
+    reds = rng.uniform(0.0, 0.9, n)
+    base = plan_cost(alphas, reds, sels, pc, uc)
+    i = rng.randint(n)
+    a2 = alphas.copy()
+    a2[i] = min(1.0, a2[i] + 0.02)
+    assert plan_cost(a2, reds, sels, pc, uc) >= base - 1e-12
+
+
+# --------------------------------------------------------- builder invariants
+@given(seed=st.integers(0, 50))
+@settings(max_examples=5, deadline=None)
+def test_builder_never_labels_more_than_sample(seed):
+    from repro.core.builder import ProxyBuilder
+    from repro.data.synthetic import make_dataset, make_query, make_udfs
+
+    ds = make_dataset(n=4000, correlation=0.8, seed=seed % 3)
+    udfs = make_udfs(ds, hidden=16, depth=1, train_rows=800, seed=seed % 3)
+    q = make_query(ds, udfs, columns=[0, 1], seed=seed)
+    b = ProxyBuilder(q, ds.x[:500], seed=seed)
+    # exercise several relations in both orders
+    b.rows_after_sigmas((0, 1))
+    b.rows_after_sigmas((1, 0))
+    b.rows_after_sigmas((1,))
+    for pred, count in b.stats.udf_calls.items():
+        assert count <= b.n, "lazy labeling must never exceed the sample size"
+
+
+# ----------------------------------------------------------- serving engine
+@given(
+    tile=st.integers(16, 600),
+    chunk=st.integers(50, 900),
+    n=st.integers(200, 1200),
+)
+@settings(max_examples=8, deadline=None)
+def test_cascade_conservation_property(tile, chunk, n):
+    """No record lost or duplicated for ANY (tile, chunk, n) combination."""
+    from repro.serving.engine import CascadeServer
+    from repro.core.query import MLUDF, PhysicalPlan, PlanStage, Predicate, Query
+
+    rng = np.random.RandomState(tile + chunk + n)
+
+    def fn(x):
+        return (x[:, 0] > 0).astype(np.int64)
+
+    udf = MLUDF(name="u", fn=fn, cost=1.0)
+    q = Query([Predicate(udf=udf, values=frozenset({1}))], 0.9)
+    plan = PhysicalPlan(query=q, stages=[PlanStage(pred_idx=0, proxy=None)])
+    x = rng.randn(n, 4).astype(np.float32)
+    server = CascadeServer(plan, tile=tile, use_kernel=False)
+    stats = server.run_stream(x, chunk=chunk)
+    assert stats.emitted + stats.rejected == n
+    assert sorted(server.emitted) == sorted(np.flatnonzero(fn(x) == 1).tolist())

@@ -1,0 +1,45 @@
+"""The paper's two reuse mechanisms must actually save work (§4.3/§4.4)."""
+import numpy as np
+import pytest
+
+from repro.core import BranchAndBound, ProxyBuilder
+from repro.data.synthetic import make_dataset, make_query, make_udfs
+
+
+@pytest.fixture(scope="module")
+def workload():
+    ds = make_dataset(n=6000, correlation=0.9, feature_noise=1.0, seed=21)
+    udfs = make_udfs(ds, hidden=24, depth=1, train_rows=1200, seed=21,
+                     declared_cost_ms=10.0)
+    q = make_query(ds, udfs, columns=[0, 1, 2], seed=22)
+    return ds, q
+
+
+def _run(q, x, **kw):
+    b = ProxyBuilder(q, x, seed=0, **kw)
+    bb = BranchAndBound(b, q.accuracy_target, fine_grained=True, step=0.05)
+    bb.run()
+    return b.stats
+
+
+def test_sample_reuse_cuts_udf_calls(workload):
+    ds, q = workload
+    x = ds.x[:800]
+    with_reuse = _run(q, x)
+    without = _run(q, x, reuse_samples=False)
+    assert sum(without.udf_calls.values()) > 2 * sum(with_reuse.udf_calls.values()), (
+        with_reuse.udf_calls, without.udf_calls,
+    )
+    # with reuse, labeling never exceeds n rows per predicate
+    for c in with_reuse.udf_calls.values():
+        assert c <= 800
+
+
+def test_classifier_reuse_cuts_training(workload):
+    ds, q = workload
+    x = ds.x[:800]
+    with_reuse = _run(q, x)
+    without = _run(q, x, reuse_classifiers=False)
+    assert without.n_trained > with_reuse.n_trained
+    assert without.n_reused == 0
+    assert with_reuse.n_reused > 0
