@@ -4,16 +4,106 @@ CORE-a (accuracy allocation only, input order), CORE-h (exhaustive order
 search), CORE (branch-and-bound): execution cost should be
 CORE ~= CORE-h < CORE-a, with CORE's optimization cost well below CORE-h's.
 Also reports the node-pruning fractions (§5.3: coarse vs fine-grained tree).
+
+Additionally measures the fused whole-cascade proxy-scoring path
+(DESIGN.md §3) against the legacy one-kernel-call-per-stage path on a
+3-stage cascade and writes ``BENCH_components.json`` — the artifact
+``benchmarks/check_regression.py`` gates on.
 """
 from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
 
 import numpy as np
 
 from benchmarks.common import build_queries, build_workload, csv_row, evaluate_all
-from repro.core import BranchAndBound, ProxyBuilder
+from repro.core import BranchAndBound, ProxyBuilder, execute_plan, optimize
+from repro.data.synthetic import make_dataset, make_query, make_udfs
+
+BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_components.json"
+
+
+def bench_proxy_throughput(*, n_rows: int = 24_576, n_features: int = 64,
+                           batch_size: int = 8192, repeats: int = 3,
+                           seed: int = 5) -> dict:
+    """Fused vs per-stage proxy-scoring throughput on a 3-stage cascade.
+
+    Throughput is records streamed per second of proxy-scoring wall time
+    (``ExecResult.proxy_total_ms``), the quantity the fused path optimizes:
+    one Pallas dispatch per microbatch for ALL stages, standardizers folded
+    at plan-compile time, bucket-padded static shapes.  The per-stage
+    number is the legacy path (one dispatch per stage per microbatch on the
+    survivor set); both paths are warmed before timing so jit tracing is
+    excluded from steady-state throughput.
+    """
+    ds = make_dataset(n=n_rows + 4000, n_features=n_features, n_columns=4,
+                      correlation=0.9, feature_noise=1.1, label_noise=0.25,
+                      seed=seed)
+    udfs = make_udfs(ds, hidden=16, depth=1, train_rows=1500, seed=seed,
+                     declared_cost_ms=20.0)
+    q = make_query(ds, udfs, columns=[0, 1, 2], target_selectivity=0.5,
+                   accuracy_target=0.9, seed=seed)
+    plan = optimize(q, ds.x[:2000], mode="core-a", step=0.05)
+    x = ds.x[4000:4000 + n_rows]
+
+    def measure(fused: bool):
+        # warmup: populate jit caches / fold caches for the measured path
+        execute_plan(plan, x[:batch_size], batch_size=batch_size,
+                     use_kernel=True, fused=fused)
+        best = None
+        for _ in range(repeats):
+            res = execute_plan(plan, x, batch_size=batch_size,
+                               use_kernel=True, fused=fused)
+            ms = res.proxy_total_ms
+            if best is None or ms < best[0]:
+                best = (ms, res)
+        return best
+
+    per_ms, per_res = measure(fused=False)
+    fus_ms, fus_res = measure(fused=True)
+    assert set(per_res.passed.tolist()) == set(fus_res.passed.tolist()), \
+        "fused and per-stage paths disagree on query output"
+    assert all(s.used_kernel for s in fus_res.stages), \
+        "fused run silently fell back off the kernel path"
+    out = {
+        "n_rows": n_rows,
+        "n_features": n_features,
+        "n_stages": len(plan.stages),
+        "batch_size": batch_size,
+        "perstage_proxy_ms": per_ms,
+        "fused_proxy_ms": fus_ms,
+        "perstage_rows_per_s": n_rows / (per_ms / 1e3),
+        "fused_rows_per_s": n_rows / (fus_ms / 1e3),
+        "speedup": per_ms / fus_ms,
+        "fused_used_kernel": [s.used_kernel for s in fus_res.stages],
+        "perstage_used_kernel": [s.used_kernel for s in per_res.stages],
+    }
+    csv_row(
+        "fused_proxy_throughput", out["fused_rows_per_s"],
+        (
+            f"rows_per_s={out['fused_rows_per_s']:.0f};"
+            f"perstage_rows_per_s={out['perstage_rows_per_s']:.0f};"
+            f"speedup={out['speedup']:.2f}x"
+        ),
+    )
+    return out
+
+
+def write_bench_json(throughput: dict, path: Path = BENCH_JSON) -> None:
+    payload = {
+        "bench": "components",
+        "proxy_throughput": throughput,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }
+    path.write_text(json.dumps(payload, indent=2) + "\n")
 
 
 def run(quick: bool = True):
+    throughput = bench_proxy_throughput(
+        n_rows=24_576 if quick else 98_304)
+    write_bench_json(throughput)
     n_q = 2 if quick else 6
     w = build_workload("twitter", 0.9, seed=9)
     queries = build_queries(w, n_q, n_preds=(3,), seed=10)

@@ -1,0 +1,81 @@
+"""CI regression gate for the fused proxy-scoring hot path.
+
+Runs the components benchmark's proxy-throughput measurement on the
+synthetic dataset, writes ``BENCH_components.json`` at the repo root, and
+exits nonzero when the fused path regresses against the checked-in
+baseline (``benchmarks/baseline_components.json``):
+
+  * fused/per-stage speedup below ``min_speedup`` — the architectural
+    invariant: the fused path must beat one-kernel-call-per-stage
+    regardless of host speed, or
+  * fused throughput below an absolute rows/s floor, which is
+    host-dependent and therefore ADVISORY (a warning) by default; it
+    becomes enforcing when ``REGRESSION_MIN_ROWS_PER_S`` is set
+    explicitly for a pinned CI host.
+
+Usage: python benchmarks/check_regression.py [--quick]
+Env overrides: REGRESSION_MIN_ROWS_PER_S, REGRESSION_MIN_SPEEDUP.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.bench_components import (  # noqa: E402
+    BENCH_JSON,
+    bench_proxy_throughput,
+    write_bench_json,
+)
+
+BASELINE = Path(__file__).resolve().parent / "baseline_components.json"
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    quick = "--quick" in argv
+    throughput = bench_proxy_throughput(n_rows=24_576 if quick else 49_152)
+    write_bench_json(throughput)
+    print(f"wrote {BENCH_JSON}")
+
+    base = json.loads(BASELINE.read_text())
+    rows_env = os.environ.get("REGRESSION_MIN_ROWS_PER_S")
+    min_rows = float(rows_env) if rows_env else float(base["min_fused_rows_per_s"])
+    min_speedup = float(os.environ.get(
+        "REGRESSION_MIN_SPEEDUP", base["min_speedup"]))
+
+    failures = []
+    if throughput["fused_rows_per_s"] < min_rows:
+        msg = (
+            f"fused throughput {throughput['fused_rows_per_s']:.0f} rows/s "
+            f"< floor {min_rows:.0f}"
+        )
+        if rows_env:  # absolute floor only enforces on a pinned host
+            failures.append(msg)
+        else:
+            print(f"WARNING (advisory, host-dependent): {msg}")
+    if throughput["speedup"] < min_speedup:
+        failures.append(
+            f"fused/per-stage speedup {throughput['speedup']:.2f}x "
+            f"< floor {min_speedup:.2f}x"
+        )
+    if not all(throughput["fused_used_kernel"]):
+        failures.append(
+            f"fused run fell off the kernel path: {throughput['fused_used_kernel']}"
+        )
+    if failures:
+        print("REGRESSION:", *failures, sep="\n  ")
+        return 1
+    print(
+        f"OK: fused {throughput['fused_rows_per_s']:.0f} rows/s "
+        f"({throughput['speedup']:.2f}x over per-stage; floors: "
+        f"{min_rows:.0f} rows/s, {min_speedup:.2f}x)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

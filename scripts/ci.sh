@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Single-entry CI: tier-1 tests + fused-proxy-throughput regression gate.
+#   scripts/ci.sh           full run
+#   scripts/ci.sh --quick   smaller benchmark workload
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== fused proxy-scoring regression gate =="
+python benchmarks/check_regression.py "$@"
+
+echo "CI OK"

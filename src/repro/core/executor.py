@@ -6,6 +6,20 @@ proxy scores gate each expensive UDF; survivors are compacted so the UDF
 always processes dense batches.  Cost is accounted both as measured wall
 time and via the per-record cost model (ms/record), which is what the
 paper's figures report.
+
+Proxy scoring paths, fastest first:
+
+  * fused   — one ``CascadeScorer`` pass per microbatch scores EVERY linear
+              stage at once (standardizers folded at plan-compile time,
+              bucket-padded static shapes, on-device survivor compaction);
+              later stages just index the precomputed masks.
+  * kernel  — legacy per-stage Pallas call (``proxy_score_batch``), kept for
+              parity testing via ``fused=False``.
+  * reference — pure numpy/jnp ``proxy.score`` (MLP proxies, or
+              ``use_kernel=False``).
+
+``StageStats.used_kernel`` records which path actually gated each stage so
+benchmarks cannot silently compare reference runs against kernel runs.
 """
 from __future__ import annotations
 
@@ -27,6 +41,7 @@ class StageStats:
     n_pass: int = 0
     proxy_ms: float = 0.0
     udf_ms: float = 0.0
+    used_kernel: bool = False  # True iff the Pallas path produced the gate
 
     @property
     def empirical_reduction(self) -> float:
@@ -39,9 +54,15 @@ class ExecResult:
     stages: List[StageStats]
     wall_ms: float
     model_cost_ms: float  # per-record cost model total (paper's metric)
+    fused_score_ms: float = 0.0  # wall time in the fused whole-cascade pass
 
     def cost_per_record(self, n: int) -> float:
         return self.model_cost_ms / max(n, 1)
+
+    @property
+    def proxy_total_ms(self) -> float:
+        """Total proxy-scoring wall time (fused pass + per-stage work)."""
+        return self.fused_score_ms + sum(s.proxy_ms for s in self.stages)
 
 
 def execute_plan(
@@ -50,55 +71,84 @@ def execute_plan(
     *,
     batch_size: int = 8192,
     use_kernel: bool = False,
+    fused: bool = True,
 ) -> ExecResult:
-    """Run the cascade over ``x`` (N, F).  Returns passing record indices."""
+    """Run the cascade over ``x`` (N, F).  Returns passing record indices.
+
+    ``use_kernel=True, fused=True`` takes the fused whole-cascade scorer;
+    ``fused=False`` keeps the legacy one-kernel-call-per-stage path for
+    parity and ablation runs.
+    """
     n = x.shape[0]
     stages = [StageStats(pred_idx=s.pred_idx) for s in plan.stages]
     t_start = time.perf_counter()
     model_cost = 0.0
+    fused_ms = 0.0
     passed: List[np.ndarray] = []
 
     scorer = None
+    cascade = None
     if use_kernel:
         from repro.kernels import ops as kops
 
         scorer = kops.proxy_score_batch
+        if fused:
+            cascade = kops.CascadeScorer.from_plan(plan, max_tile=batch_size)
 
     for start in range(0, n, batch_size):
         idx = np.arange(start, min(start + batch_size, n))
-        alive = idx
+        masks = packed = None
+        if cascade is not None:
+            t0 = time.perf_counter()
+            _, masks, packed, _counts = cascade.score_compact(x[idx])
+            fused_ms += (time.perf_counter() - t0) * 1e3
+        loc = np.arange(len(idx))  # tile-local survivor positions
         for si, stage in enumerate(plan.stages):
             st = stages[si]
-            st.n_in += len(alive)
-            if len(alive) == 0:
+            st.n_in += len(loc)
+            if len(loc) == 0:
                 continue
             if stage.proxy is not None:
+                n_enter = len(loc)
                 t0 = time.perf_counter()
-                if scorer is not None and stage.proxy.kind == "svm":
-                    keep = scorer(stage.proxy.params, x[alive], stage.threshold)
+                col = cascade.stage_cols[si] if cascade is not None else None
+                if masks is not None and col is not None:
+                    if len(loc) == len(idx):
+                        # full tile: use the on-device-compacted index list
+                        # (score_compact already truncated it to counts[col])
+                        loc = packed[col]
+                    else:
+                        loc = loc[masks[loc, col]]
+                    st.used_kernel = True
+                elif scorer is not None and stage.proxy.kind == "svm":
+                    keep = scorer(stage.proxy.params, x[idx[loc]], stage.threshold)
+                    loc = loc[np.asarray(keep)]
+                    st.used_kernel = True
                 else:
-                    keep = stage.proxy.score(x[alive]) >= stage.threshold
+                    keep = stage.proxy.score(x[idx[loc]]) >= stage.threshold
+                    loc = loc[keep]
                 st.proxy_ms += (time.perf_counter() - t0) * 1e3
-                model_cost += len(alive) * stage.proxy.cost
-                alive = alive[np.asarray(keep)]
-            st.n_proxy_kept += len(alive)
-            if len(alive) == 0:
+                model_cost += n_enter * stage.proxy.cost
+            st.n_proxy_kept += len(loc)
+            if len(loc) == 0:
                 continue
             pred = plan.query.predicates[stage.pred_idx]
+            alive = idx[loc]
             t0 = time.perf_counter()
             labels = pred.udf(x[alive])
             st.udf_ms += (time.perf_counter() - t0) * 1e3
             model_cost += len(alive) * pred.udf.cost
             st.n_udf += len(alive)
-            alive = alive[pred.evaluate(labels)]
-            st.n_pass += len(alive)
-        passed.append(alive)
+            loc = loc[pred.evaluate(labels)]
+            st.n_pass += len(loc)
+        passed.append(idx[loc])
 
     return ExecResult(
         passed=np.concatenate(passed) if passed else np.empty(0, np.int64),
         stages=stages,
         wall_ms=(time.perf_counter() - t_start) * 1e3,
         model_cost_ms=model_cost,
+        fused_score_ms=fused_ms,
     )
 
 

@@ -47,10 +47,17 @@ def _axis_size(mesh: Mesh, axes) -> int:
 
 
 def _maybe(mesh: Mesh, dim: int, axes):
-    """axes if dim divides evenly, else None (replicate)."""
+    """axes if dim divides evenly, else None (replicate).  Single-axis
+    tuples are unwrapped: PartitionSpec treats ("data",) and "data" as
+    distinct entries, so specs built from batch_axes() would never compare
+    equal to hand-written ones."""
     if axes is None:
         return None
-    return axes if dim % _axis_size(mesh, axes) == 0 else None
+    if dim % _axis_size(mesh, axes) != 0:
+        return None
+    if isinstance(axes, tuple) and len(axes) == 1:
+        return axes[0]
+    return axes
 
 
 def serve_mode_for(cfg, mesh: Mesh) -> str:

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.proxy_score import proxy_score
+from repro.kernels.proxy_score import cascade_score, proxy_score
 from repro.kernels.ssd_scan import ssd_chunk
 
 
@@ -32,9 +32,30 @@ def fold_standardizer(params):
     return w.astype(np.float32), np.float32(b)
 
 
+# Folding is pure per parameter set, so memoize by object identity.  The
+# cache holds a strong reference to the params, which keeps each id() valid
+# for the lifetime of its entry; size-bounded FIFO eviction caps memory.
+_FOLD_CACHE: dict = {}
+_FOLD_CACHE_MAX = 512
+
+
+def fold_standardizer_cached(params):
+    """Memoized fold_standardizer keyed on LinearParams identity: repeated
+    scoring of the same proxy (every microbatch of every stage) folds once."""
+    key = id(params)
+    hit = _FOLD_CACHE.get(key)
+    if hit is not None and hit[0] is params:
+        return hit[1], hit[2]
+    w, b = fold_standardizer(params)
+    if len(_FOLD_CACHE) >= _FOLD_CACHE_MAX:
+        _FOLD_CACHE.pop(next(iter(_FOLD_CACHE)))
+    _FOLD_CACHE[key] = (params, w, b)
+    return w, b
+
+
 def proxy_score_batch(params, x, threshold: float):
     """Single-proxy convenience used by the executor: returns keep mask."""
-    w, b = fold_standardizer(params)
+    w, b = fold_standardizer_cached(params)
     _scores, mask = proxy_score(
         jnp.asarray(x, jnp.float32),
         jnp.asarray(w)[:, None],
@@ -48,7 +69,7 @@ def proxy_score_batch(params, x, threshold: float):
 def proxy_score_multi(param_list, x, thresholds):
     """Score several linear proxies in ONE fused pass (the serving engine
     evaluates a cascade's proxies together when profitable)."""
-    ws, bs = zip(*(fold_standardizer(p) for p in param_list))
+    ws, bs = zip(*(fold_standardizer_cached(p) for p in param_list))
     w = jnp.stack([jnp.asarray(w) for w in ws], axis=1)  # (F, P)
     b = jnp.asarray(bs)
     scores, mask = proxy_score(
@@ -56,6 +77,146 @@ def proxy_score_multi(param_list, x, thresholds):
         interpret=interpret_default(),
     )
     return np.asarray(scores), np.asarray(mask)
+
+
+class CascadeScorer:
+    """Whole-cascade fused scorer (DESIGN.md §3).
+
+    Folds every stage's standardizer ONCE at construction ("plan-compile
+    time"), keeps the stacked (F, P) weight / bias / threshold tensors on
+    device, and scores record tiles through the fused ``cascade_score``
+    Pallas pass: one kernel invocation yields every stage's keep mask plus
+    on-device-compacted survivor index lists.
+
+    Input batches are bucket-padded to a small geometric ladder of static
+    shapes so ``jax.jit`` traces a handful of programs total instead of one
+    per survivor count; batches larger than the top bucket are chunked.
+    """
+
+    def __init__(self, param_list, thresholds, *, block_m: int = 2048,
+                 interpret=None, max_tile: int = 8192):
+        if not param_list:
+            raise ValueError("CascadeScorer needs at least one linear proxy")
+        folded = [fold_standardizer_cached(p) for p in param_list]
+        self.w = jnp.stack([jnp.asarray(w) for w, _ in folded], axis=1)  # (F, P)
+        self.b = jnp.asarray(np.asarray([b for _, b in folded], np.float32))
+        self.thr = jnp.asarray(np.asarray(thresholds, np.float32))
+        self.n_proxies = len(param_list)
+        self.n_features = int(self.w.shape[0])
+        self.block_m = min(block_m, max_tile)
+        self.interpret = interpret_default() if interpret is None else interpret
+        buckets = []
+        size = self.block_m
+        while size < max_tile:
+            buckets.append(size)
+            size *= 2
+        buckets.append(max_tile)
+        self.buckets = tuple(buckets)
+        self.max_tile = max_tile
+        # stage index -> proxy column (filled by from_plan; identity default)
+        self.stage_cols = list(range(self.n_proxies))
+
+    @classmethod
+    def from_plan(cls, plan, **kw):
+        """Build a scorer over the plan's linear ("svm") proxy stages.
+
+        Returns None when no stage is linear.  ``scorer.stage_cols[si]`` maps
+        stage index to its proxy column, or None for stages the fused path
+        does not cover (no proxy, or an MLP proxy — those keep the reference
+        scorer).
+        """
+        params, thrs, cols = [], [], []
+        for stage in plan.stages:
+            if stage.proxy is not None and stage.proxy.kind == "svm":
+                cols.append(len(params))
+                params.append(stage.proxy.params)
+                thrs.append(stage.threshold)
+            else:
+                cols.append(None)
+        if not params:
+            return None
+        scorer = cls(params, thrs, **kw)
+        scorer.stage_cols = cols
+        return scorer
+
+    def covers_all(self, plan) -> bool:
+        return all(
+            col is not None
+            for col, stage in zip(self.stage_cols, plan.stages)
+            if stage.proxy is not None
+        )
+
+    def _bucket(self, n: int) -> int:
+        for size in self.buckets:
+            if n <= size:
+                return size
+        return self.max_tile
+
+    def _pad_tile(self, x_tile: np.ndarray) -> np.ndarray:
+        n = x_tile.shape[0]
+        bucket = self._bucket(n)
+        if n < bucket:  # bucket-pad: static shape -> no retrace
+            xp = np.zeros((bucket, x_tile.shape[1]), np.float32)
+            xp[:n] = x_tile
+            return xp
+        return np.ascontiguousarray(x_tile, np.float32)
+
+    def _score_tile(self, x_tile: np.ndarray, need_scores: bool,
+                    need_compaction: bool = True):
+        n = x_tile.shape[0]
+        scores, mask, packed, counts = cascade_score(
+            jnp.asarray(self._pad_tile(x_tile)), self.w, self.b, self.thr, n,
+            block_m=self.block_m, interpret=self.interpret,
+            with_scores=need_scores, with_compaction=need_compaction,
+        )
+        return (np.asarray(scores[:n]) if need_scores else None,
+                np.asarray(mask[:n]),
+                np.asarray(packed) if need_compaction else None,
+                np.asarray(counts) if need_compaction else None)
+
+    def score_compact(self, x: np.ndarray, *, need_scores: bool = False):
+        """Score every stage over ``x`` (N, F) in one fused pass per tile.
+
+        Returns (scores (N, P) | None, masks (N, P), packed, counts) where
+        ``packed[p][:counts[p]]`` are the ascending row indices surviving
+        stage p's proxy gate (dense UDF batch order).  ``scores`` is only
+        fetched off device when ``need_scores`` (the engines gate on masks).
+        """
+        x = np.asarray(x, np.float32)
+        n = x.shape[0]
+        if n <= self.max_tile:
+            scores, masks, packed, counts = self._score_tile(x, need_scores)
+            return scores, masks, [packed[p, :counts[p]] for p in
+                                   range(self.n_proxies)], counts
+        scores = np.empty((n, self.n_proxies), np.float32) if need_scores else None
+        masks = np.empty((n, self.n_proxies), bool)
+        parts = [[] for _ in range(self.n_proxies)]
+        for start in range(0, n, self.max_tile):
+            stop = min(start + self.max_tile, n)
+            s, m, pk, cnt = self._score_tile(x[start:stop], need_scores)
+            if need_scores:
+                scores[start:stop] = s
+            masks[start:stop] = m
+            for p in range(self.n_proxies):
+                parts[p].append(pk[p, :cnt[p]] + start)
+        packed = [np.concatenate(p) if p else np.empty(0, np.int32)
+                  for p in parts]
+        counts = np.asarray([len(p) for p in packed], np.int32)
+        return scores, masks, packed, counts
+
+    def score_masks(self, x: np.ndarray) -> np.ndarray:
+        """Per-stage keep masks only (N, P): skips the compaction outputs
+        and their device round-trips — the serving engine's submit-time
+        path gates on mask rows alone."""
+        x = np.asarray(x, np.float32)
+        n = x.shape[0]
+        masks = np.empty((n, self.n_proxies), bool)
+        for start in range(0, n, self.max_tile):
+            stop = min(start + self.max_tile, n)
+            _s, mask, _pk, _cnt = self._score_tile(
+                x[start:stop], need_scores=False, need_compaction=False)
+            masks[start:stop] = mask
+        return masks
 
 
 # -------------------------------------------------------------- attention

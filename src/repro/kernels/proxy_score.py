@@ -31,6 +31,43 @@ def _kernel(x_ref, w_ref, b_ref, thr_ref, score_ref, mask_ref):
     mask_ref[...] = s >= thr_ref[...][None, :]
 
 
+def _make_cascade_kernel(n_proxies, with_scores, with_compaction):
+    """Fused whole-cascade tile kernel: one GEMM scores every proxy column;
+    optionally a block-local prefix sum packs survivor positions so the
+    wrapper can assemble dense per-stage survivor index lists without a
+    host round-trip.
+
+    The prefix sum runs over the first ``n_proxies`` (real) columns only —
+    the lane-pad columns are all-False and would triple the scan cost.
+    ``with_scores`` / ``with_compaction`` drop output writes the caller
+    won't read (each is a full (block_m, P) HBM round-trip): the serving
+    engine gates on masks alone, the executor needs masks + compaction.
+    """
+
+    def kernel(x_ref, w_ref, b_ref, thr_ref, valid_ref, *out_refs):
+        x = x_ref[...]
+        w = w_ref[...]
+        s = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+        s = s + b_ref[...][None, :]
+        m = (s >= thr_ref[...][None, :]) & valid_ref[...]
+        refs = list(out_refs)
+        if with_scores:
+            refs.pop(0)[...] = s
+        refs.pop(0)[...] = m
+        if with_compaction:
+            mi = m[:, :n_proxies].astype(jnp.int32)
+            inclusive = jnp.cumsum(mi, axis=0)
+            pad = m.shape[1] - n_proxies
+            if pad:
+                inclusive = jnp.pad(inclusive, ((0, 0), (0, pad)))
+                mi = jnp.pad(mi, ((0, 0), (0, pad)))
+            refs.pop(0)[...] = inclusive - mi  # local packed slot per row
+            refs.pop(0)[...] = inclusive[-1:, :]  # block survivor totals
+
+    return kernel
+
+
 @functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
 def proxy_score(x, w, b, thresholds, *, block_m: int = 256, interpret: bool = True):
     """x: (N, F); w: (F, P); b, thresholds: (P,).
@@ -71,3 +108,96 @@ def proxy_score(x, w, b, thresholds, *, block_m: int = 256, interpret: bool = Tr
         interpret=interpret,
     )(x, w, b, thresholds)
     return scores[:N, :P], mask[:N, :P]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_m", "interpret", "with_scores", "with_compaction"))
+def cascade_score(x, w, b, thresholds, n_valid, *, block_m: int = 256,
+                  interpret: bool = True, with_scores: bool = True,
+                  with_compaction: bool = True):
+    """One fused pass over a record tile for a whole cascade.
+
+    x: (N, F) record tile (rows >= ``n_valid`` are padding and are masked
+    out of every stage); w: (F, P) stacked proxy weights, one column per
+    cascade stage; b, thresholds: (P,).
+
+    Returns:
+      scores (N, P) f32          raw proxy scores (None if not with_scores)
+      mask   (N, P) bool         per-stage keep masks (padding rows False)
+      packed (P, N) int32        compacted survivor row indices per stage:
+                                 ``packed[p, :counts[p]]`` are the rows with
+                                 ``mask[:, p]`` True, ascending; the tail
+                                 is -1 (None if not with_compaction)
+      counts (P,)  int32         survivors per stage (None likewise)
+
+    Compaction runs on device: the kernel emits block-local exclusive
+    prefix sums + per-block totals; this wrapper turns them into global
+    packed slots with an inter-block scan and a single scatter, so a dense
+    UDF batch index list exists without materialising the boolean mask on
+    the host.  ``with_scores=False`` / ``with_compaction=False`` drop the
+    outputs (and their HBM round-trips) a caller won't read — the serving
+    engine gates on masks alone.
+    """
+    N, F = x.shape
+    P = w.shape[1]
+    pad_n = (-N) % block_m
+    pad_p = (-P) % 128
+    if pad_n:
+        x = jnp.pad(x, ((0, pad_n), (0, 0)))
+    if pad_p:
+        w = jnp.pad(w, ((0, 0), (0, pad_p)))
+        b = jnp.pad(b, (0, pad_p))
+        thresholds = jnp.pad(thresholds, (0, pad_p), constant_values=jnp.inf)
+    Np, Pp = x.shape[0], w.shape[1]
+    valid = (jnp.arange(Np, dtype=jnp.int32) < n_valid)[:, None]
+
+    nb = Np // block_m
+    tile_spec = pl.BlockSpec((block_m, Pp), lambda i: (i, 0))
+    out_specs, out_shape = [], []
+    if with_scores:
+        out_specs.append(tile_spec)
+        out_shape.append(jax.ShapeDtypeStruct((Np, Pp), jnp.float32))
+    out_specs.append(tile_spec)
+    out_shape.append(jax.ShapeDtypeStruct((Np, Pp), jnp.bool_))
+    if with_compaction:
+        out_specs += [tile_spec, pl.BlockSpec((1, Pp), lambda i: (i, 0))]
+        out_shape += [jax.ShapeDtypeStruct((Np, Pp), jnp.int32),
+                      jax.ShapeDtypeStruct((nb, Pp), jnp.int32)]
+    outs = pl.pallas_call(
+        _make_cascade_kernel(P, with_scores, with_compaction),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_m, F), lambda i: (i, 0)),
+            pl.BlockSpec((F, Pp), lambda i: (0, 0)),
+            pl.BlockSpec((Pp,), lambda i: (0,)),
+            pl.BlockSpec((Pp,), lambda i: (0,)),
+            pl.BlockSpec((block_m, 1), lambda i: (i, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, w, b, thresholds, valid)
+    outs = list(outs)
+    scores = outs.pop(0) if with_scores else None
+    mask = outs.pop(0)
+    mask_p = mask[:, :P]
+    if not with_compaction:
+        return (scores[:N, :P] if with_scores else None,
+                mask_p[:N], None, None)
+    pos, cnt = outs
+
+    # inter-block exclusive scan of the per-block survivor counts gives each
+    # block its base slot; scatter rows to (stage, slot), dropping rejects.
+    # Assembly runs only over the REAL P columns — the lane-pad columns are
+    # all-False and would multiply the scatter cost ~128/P for nothing.
+    block_base = jnp.cumsum(cnt[:, :P], axis=0) - cnt[:, :P]  # (nb, P)
+    gpos = pos[:, :P] + jnp.repeat(block_base, block_m, axis=0,
+                                   total_repeat_length=Np)
+    gpos = jnp.where(mask_p, gpos, Np)  # sentinel slot -> dropped by scatter
+    rows = jnp.broadcast_to(jnp.arange(Np, dtype=jnp.int32)[:, None], (Np, P))
+    cols = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32)[None, :], (Np, P))
+    packed = jnp.full((P, Np), -1, jnp.int32).at[cols, gpos].set(
+        rows, mode="drop")
+    counts = jnp.sum(cnt[:, :P], axis=0)
+    return (scores[:N, :P] if with_scores else None,
+            mask_p[:N], packed[:, :N], counts)

@@ -10,6 +10,14 @@ The paper's executor streams rows; on TPU we keep static shapes (DESIGN.md
     drains whichever stage has a full tile ready (UDFs always run dense);
   * a final drain pass flushes partial tiles at end-of-stream.
 
+Fused hot path: when every proxied stage is linear, a ``CascadeScorer``
+scores each incoming chunk ONCE at submit time — one fused Pallas pass
+yields every stage's keep decision — and the per-record mask rows ride
+through the stage queues with the record.  Stage execution then never
+re-folds, re-scores, or re-traces: the gate is a mask lookup.  Per-stage
+``proxy_ms`` / ``used_kernel`` land in ServeStats so benchmark runs can
+prove which path they measured.
+
 Nothing is dropped: a hypothesis property test asserts conservation
 (every record is either rejected by some stage or emitted).
 """
@@ -30,51 +38,86 @@ class ServeStats:
     stage_in: List[int]
     stage_udf_batches: List[int]
     stage_kept: List[int]
+    stage_proxy_ms: List[float]
+    stage_used_kernel: List[bool]
     emitted: int = 0
     rejected: int = 0
     wall_ms: float = 0.0
     model_cost_ms: float = 0.0
+    fused_score_ms: float = 0.0  # submit-time fused whole-cascade scoring
+
+    @property
+    def proxy_total_ms(self) -> float:
+        return self.fused_score_ms + sum(self.stage_proxy_ms)
 
 
 class CascadeServer:
     """Continuous-batching executor for a compiled cascade plan."""
 
-    def __init__(self, plan: PhysicalPlan, *, tile: int = 1024, use_kernel: bool = True):
+    def __init__(self, plan: PhysicalPlan, *, tile: int = 1024, use_kernel: bool = True,
+                 fused: bool = True):
         self.plan = plan
         self.tile = tile
         self.use_kernel = use_kernel
         n = len(plan.stages)
-        self.queues: List[deque] = [deque() for _ in range(n)]  # (idx, row) pending per stage
+        # queue entries: (global idx, feature row, mask row | None)
+        self.queues: List[deque] = [deque() for _ in range(n)]
         self.emitted: List[int] = []
         self.stats = ServeStats(
-            stage_in=[0] * n, stage_udf_batches=[0] * n, stage_kept=[0] * n
+            stage_in=[0] * n, stage_udf_batches=[0] * n, stage_kept=[0] * n,
+            stage_proxy_ms=[0.0] * n, stage_used_kernel=[False] * n,
         )
         self._scorer = None
+        self._cascade = None
         if use_kernel:
             try:
-                from repro.kernels.ops import proxy_score_batch
-
+                from repro.kernels.ops import CascadeScorer, proxy_score_batch
+            except ImportError:  # pragma: no cover - kernel optional
+                CascadeScorer = proxy_score_batch = None
+            if proxy_score_batch is not None:
                 self._scorer = proxy_score_batch
-            except Exception:  # pragma: no cover - kernel optional
-                self._scorer = None
+                if fused:
+                    # a from_plan failure is a real bug — let it propagate
+                    cascade = CascadeScorer.from_plan(plan, max_tile=max(tile, 1024))
+                    # score-at-submit only pays off when every gated stage is
+                    # covered; otherwise fall back to per-stage kernel calls
+                    if cascade is not None and cascade.covers_all(plan):
+                        self._cascade = cascade
 
     # ------------------------------------------------------------- plumbing
     def submit(self, indices: np.ndarray, rows: np.ndarray):
-        for i, r in zip(indices, rows):
-            self.queues[0].append((int(i), r))
+        if self._cascade is not None and len(rows):
+            t0 = time.perf_counter()
+            masks = self._cascade.score_masks(np.asarray(rows, np.float32))
+            self.stats.fused_score_ms += (time.perf_counter() - t0) * 1e3
+            for i, r, m in zip(indices, rows, masks):
+                self.queues[0].append((int(i), r, m))
+        else:
+            for i, r in zip(indices, rows):
+                self.queues[0].append((int(i), r, None))
 
     def _run_stage_batch(self, si: int, batch: List):
         stage = self.plan.stages[si]
         idxs = np.asarray([b[0] for b in batch])
         x = np.stack([b[1] for b in batch])
+        mrows = [b[2] for b in batch]
         self.stats.stage_in[si] += len(batch)
         if stage.proxy is not None:
-            if self._scorer is not None and stage.proxy.kind == "svm":
+            t0 = time.perf_counter()
+            col = self._cascade.stage_cols[si] if self._cascade is not None else None
+            if col is not None and mrows[0] is not None:
+                # fused path: the gate was computed once at submit time
+                keep = np.asarray([m[col] for m in mrows], bool)
+                self.stats.stage_used_kernel[si] = True
+            elif self._scorer is not None and stage.proxy.kind == "svm":
                 keep = self._scorer(stage.proxy.params, x, stage.threshold)
+                self.stats.stage_used_kernel[si] = True
             else:
                 keep = stage.proxy.score(x) >= stage.threshold
+            self.stats.stage_proxy_ms[si] += (time.perf_counter() - t0) * 1e3
             self.stats.model_cost_ms += len(x) * stage.proxy.cost
             idxs, x = idxs[keep], x[keep]
+            mrows = [m for m, k in zip(mrows, keep) if k]
         if len(idxs) == 0:
             return
         pred = self.plan.query.predicates[stage.pred_idx]
@@ -83,11 +126,13 @@ class CascadeServer:
         self.stats.stage_udf_batches[si] += 1
         passed = pred.evaluate(labels)
         self.stats.stage_kept[si] += int(passed.sum())
-        survivors = [(int(i), r) for i, r, p in zip(idxs, x, passed) if p]
+        survivors = [
+            (int(i), r, m) for i, r, m, p in zip(idxs, x, mrows, passed) if p
+        ]
         if si + 1 < len(self.plan.stages):
             self.queues[si + 1].extend(survivors)
         else:
-            self.emitted.extend(i for i, _ in survivors)
+            self.emitted.extend(i for i, _, _ in survivors)
             self.stats.emitted += len(survivors)
 
     def pump(self, *, drain: bool = False):

@@ -1,0 +1,201 @@
+"""Minimal, dependency-free stand-in for the `hypothesis` API surface the
+test suite uses (given / settings / assume / strategies.integers|floats|
+sampled_from).
+
+The container does not ship hypothesis and nothing may be pip-installed, so
+tests/conftest.py registers this module under ``sys.modules["hypothesis"]``
+when the real package is absent.  Sampling is deterministic: each test gets
+its own RNG seeded from the test's qualified name, so runs are reproducible
+and failures are reportable ("falsifying example" is printed before the
+exception propagates).  The real package, when installed, always wins.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume()/filter() to discard the current example."""
+
+
+def assume(condition):
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+    data_too_large = "data_too_large"
+    function_scoped_fixture = "function_scoped_fixture"
+
+    @staticmethod
+    def all():
+        return []
+
+
+class SearchStrategy:
+    def __init__(self, draw_fn, desc="strategy"):
+        self._draw = draw_fn
+        self._desc = desc
+
+    def __repr__(self):
+        return f"<{self._desc}>"
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return SearchStrategy(lambda rng: fn(self._draw(rng)), f"{self._desc}.map")
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(200):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise _Unsatisfied()
+
+        return SearchStrategy(draw, f"{self._desc}.filter")
+
+
+def integers(min_value=0, max_value=None):
+    lo = int(min_value)
+    hi = int(max_value) if max_value is not None else lo + 2**31
+
+    def draw(rng):
+        u = rng.random()
+        if u < 0.05:
+            return lo
+        if u > 0.95:
+            return hi
+        return rng.randint(lo, hi)
+
+    return SearchStrategy(draw, f"integers({lo}, {hi})")
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    lo, hi = float(min_value), float(max_value)
+
+    def draw(rng):
+        u = rng.random()
+        if u < 0.05:
+            return lo
+        if u > 0.95:
+            return hi
+        return lo + (hi - lo) * rng.random()
+
+    return SearchStrategy(draw, f"floats({lo}, {hi})")
+
+
+def sampled_from(elements):
+    elems = list(elements)
+
+    def draw(rng):
+        return elems[rng.randrange(len(elems))]
+
+    return SearchStrategy(draw, f"sampled_from({elems!r})")
+
+
+def booleans():
+    return sampled_from([False, True])
+
+
+def just(value):
+    return SearchStrategy(lambda rng: value, f"just({value!r})")
+
+
+def tuples(*strategies):
+    return SearchStrategy(lambda rng: tuple(s.draw(rng) for s in strategies), "tuples")
+
+
+def lists(elements, min_size=0, max_size=10, **_kw):
+    def draw(rng):
+        k = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(k)]
+
+    return SearchStrategy(draw, "lists")
+
+
+def settings(*_args, **kw):
+    """Decorator recording max_examples etc.; other knobs are ignored."""
+
+    def deco(fn):
+        merged = dict(getattr(fn, "_shim_settings", {}))
+        merged.update(kw)
+        fn._shim_settings = merged
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(func):
+        sig = inspect.signature(func)
+        names = list(sig.parameters)
+        # positional strategies fill the trailing parameters (hypothesis fills
+        # from the right; fixtures occupy the leading ones)
+        pos_names = names[len(names) - len(arg_strategies):] if arg_strategies else []
+        strat = dict(zip(pos_names, arg_strategies))
+        strat.update(kw_strategies)
+        remaining = [p for n, p in sig.parameters.items() if n not in strat]
+
+        @functools.wraps(func)
+        def wrapper(*fixture_args, **fixture_kwargs):
+            conf = getattr(wrapper, "_shim_settings", {})
+            n_examples = int(conf.get("max_examples") or 25)
+            seed0 = zlib.crc32(func.__qualname__.encode())
+            ran = 0
+            for i in range(n_examples * 10):
+                if ran >= n_examples:
+                    break
+                rng = random.Random(seed0 + i)
+                try:
+                    drawn = {k: s.draw(rng) for k, s in strat.items()}
+                except _Unsatisfied:
+                    continue
+                try:
+                    func(*fixture_args, **fixture_kwargs, **drawn)
+                except _Unsatisfied:
+                    continue
+                except BaseException:
+                    print(f"Falsifying example: {func.__name__}(**{drawn!r})",
+                          file=sys.stderr)
+                    raise
+                ran += 1
+            if ran == 0:
+                raise RuntimeError(
+                    f"{func.__name__}: every generated example was rejected by assume()"
+                )
+
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        wrapper.is_hypothesis_test = True
+        return wrapper
+
+    return deco
+
+
+def install():
+    """Register this shim as ``hypothesis`` if the real package is missing."""
+    if "hypothesis" in sys.modules:
+        return
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    mod.HealthCheck = HealthCheck
+    mod.__version__ = "0.0-shim"
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "sampled_from", "booleans", "just",
+                 "tuples", "lists"):
+        setattr(st_mod, name, globals()[name])
+    st_mod.SearchStrategy = SearchStrategy
+    mod.strategies = st_mod
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod

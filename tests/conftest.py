@@ -1,0 +1,13 @@
+"""Test bootstrap: fall back to the local hypothesis shim when the real
+package is not installed (the container has no network / pip)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:  # pragma: no cover - depends on environment
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import _hypothesis_shim
+
+    _hypothesis_shim.install()
