@@ -91,19 +91,36 @@ def bench_proxy_throughput(*, n_rows: int = 24_576, n_features: int = 64,
     return out
 
 
-def write_bench_json(throughput: dict, path: Path = BENCH_JSON) -> None:
+def write_bench_json(throughput: dict, adaptive: dict | None = None,
+                     path: Path = BENCH_JSON) -> None:
     payload = {
         "bench": "components",
         "proxy_throughput": throughput,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
     }
+    if adaptive is not None:
+        payload["adaptive_drift"] = adaptive
     path.write_text(json.dumps(payload, indent=2) + "\n")
 
 
 def run(quick: bool = True):
+    from benchmarks.bench_adaptive import bench_adaptive_throughput
+
     throughput = bench_proxy_throughput(
         n_rows=24_576 if quick else 98_304)
-    write_bench_json(throughput)
+    # full-size regardless of ``quick``: the gated 1.3x floor only holds
+    # on the full drifted segment (see check_regression.py)
+    adaptive = bench_adaptive_throughput()
+    write_bench_json(throughput, adaptive)
+    csv_row(
+        "adaptive_drift_throughput", adaptive["adaptive_rows_per_cost_s"],
+        (
+            f"speedup={adaptive['adaptive_speedup']:.2f}x;"
+            f"acc={adaptive['adaptive_accuracy']:.3f};"
+            f"warm_nodes={adaptive['warm_nodes']};"
+            f"cold_nodes={adaptive['cold_nodes']}"
+        ),
+    )
     n_q = 2 if quick else 6
     w = build_workload("twitter", 0.9, seed=9)
     queries = build_queries(w, n_q, n_preds=(3,), seed=10)

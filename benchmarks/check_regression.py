@@ -1,9 +1,11 @@
-"""CI regression gate for the fused proxy-scoring hot path.
+"""CI regression gate for the fused proxy-scoring hot path and the
+adaptive serving loop.
 
-Runs the components benchmark's proxy-throughput measurement on the
-synthetic dataset, writes ``BENCH_components.json`` at the repo root, and
-exits nonzero when the fused path regresses against the checked-in
-baseline (``benchmarks/baseline_components.json``):
+Runs the components benchmark's proxy-throughput measurement plus the
+drifting-stream adaptive-serving benchmark, writes
+``BENCH_components.json`` at the repo root, and exits nonzero when either
+regresses against the checked-in baseline
+(``benchmarks/baseline_components.json``):
 
   * fused/per-stage speedup below ``min_speedup`` — the architectural
     invariant: the fused path must beat one-kernel-call-per-stage
@@ -11,10 +13,16 @@ baseline (``benchmarks/baseline_components.json``):
   * fused throughput below an absolute rows/s floor, which is
     host-dependent and therefore ADVISORY (a warning) by default; it
     becomes enforcing when ``REGRESSION_MIN_ROWS_PER_S`` is set
-    explicitly for a pinned CI host.
+    explicitly for a pinned CI host, or
+  * adaptive-vs-static cost-model speedup on the drifting stream below
+    ``min_adaptive_speedup``, the adaptive plan missing the query's
+    accuracy target, or the warm-started re-search failing to visit
+    strictly fewer nodes than a cold branch-and-bound — all three are
+    cost-model invariants, host-independent by construction.
 
 Usage: python benchmarks/check_regression.py [--quick]
-Env overrides: REGRESSION_MIN_ROWS_PER_S, REGRESSION_MIN_SPEEDUP.
+Env overrides: REGRESSION_MIN_ROWS_PER_S, REGRESSION_MIN_SPEEDUP,
+REGRESSION_MIN_ADAPTIVE_SPEEDUP.
 """
 from __future__ import annotations
 
@@ -25,6 +33,7 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
+from benchmarks.bench_adaptive import bench_adaptive_throughput  # noqa: E402
 from benchmarks.bench_components import (  # noqa: E402
     BENCH_JSON,
     bench_proxy_throughput,
@@ -38,7 +47,13 @@ def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     quick = "--quick" in argv
     throughput = bench_proxy_throughput(n_rows=24_576 if quick else 49_152)
-    write_bench_json(throughput)
+    # deliberately NOT shrunk by --quick: the 1.3x floor is an acceptance
+    # invariant of the FULL drifting stream — a shorter drifted segment
+    # dilutes the stale-plan span the adaptation amortizes against
+    # (measured 1.25x at n_after=18k vs 1.38x at 30k), so a quick run
+    # would fail the gate without any code regression
+    adaptive = bench_adaptive_throughput()
+    write_bench_json(throughput, adaptive)
     print(f"wrote {BENCH_JSON}")
 
     base = json.loads(BASELINE.read_text())
@@ -46,8 +61,27 @@ def main(argv=None) -> int:
     min_rows = float(rows_env) if rows_env else float(base["min_fused_rows_per_s"])
     min_speedup = float(os.environ.get(
         "REGRESSION_MIN_SPEEDUP", base["min_speedup"]))
+    min_adaptive = float(os.environ.get(
+        "REGRESSION_MIN_ADAPTIVE_SPEEDUP", base["min_adaptive_speedup"]))
 
     failures = []
+    if adaptive["adaptive_speedup"] < min_adaptive:
+        failures.append(
+            f"adaptive/static drift speedup {adaptive['adaptive_speedup']:.2f}x "
+            f"< floor {min_adaptive:.2f}x"
+        )
+    if adaptive["adaptive_accuracy"] < adaptive["accuracy_target"]:
+        failures.append(
+            f"adaptive accuracy {adaptive['adaptive_accuracy']:.3f} misses "
+            f"target {adaptive['accuracy_target']}"
+        )
+    if adaptive["warm_nodes"] >= adaptive["cold_nodes"]:
+        failures.append(
+            f"warm-started B&B visited {adaptive['warm_nodes']} nodes, not "
+            f"strictly fewer than cold ({adaptive['cold_nodes']})"
+        )
+    if adaptive["plan_swaps"] < 1:
+        failures.append("adaptive server never re-optimized on the drifting stream")
     if throughput["fused_rows_per_s"] < min_rows:
         msg = (
             f"fused throughput {throughput['fused_rows_per_s']:.0f} rows/s "
@@ -72,7 +106,11 @@ def main(argv=None) -> int:
     print(
         f"OK: fused {throughput['fused_rows_per_s']:.0f} rows/s "
         f"({throughput['speedup']:.2f}x over per-stage; floors: "
-        f"{min_rows:.0f} rows/s, {min_speedup:.2f}x)"
+        f"{min_rows:.0f} rows/s, {min_speedup:.2f}x); adaptive drift "
+        f"{adaptive['adaptive_speedup']:.2f}x over static (floor "
+        f"{min_adaptive:.2f}x), accuracy {adaptive['adaptive_accuracy']:.3f} "
+        f">= {adaptive['accuracy_target']}, warm B&B "
+        f"{adaptive['warm_nodes']} < cold {adaptive['cold_nodes']} nodes"
     )
     return 0
 

@@ -1,16 +1,27 @@
 #!/usr/bin/env bash
-# Single-entry CI: tier-1 tests + fused-proxy-throughput regression gate.
+# Single-entry CI: tier-1 tests + regression gates (fused proxy scoring,
+# adaptive serving).
 #   scripts/ci.sh           full run
 #   scripts/ci.sh --quick   smaller benchmark workload
+#   scripts/ci.sh --fast    iteration lane: skip @slow tests, quick benchmarks
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 tests =="
-python -m pytest -x -q
+PYTEST_ARGS=()
+BENCH_ARGS=()
+for a in "$@"; do
+  case "$a" in
+    --fast) PYTEST_ARGS+=(-m "not slow"); BENCH_ARGS+=(--quick) ;;
+    *) BENCH_ARGS+=("$a") ;;
+  esac
+done
 
-echo "== fused proxy-scoring regression gate =="
-python benchmarks/check_regression.py "$@"
+echo "== tier-1 tests =="
+python -m pytest -x -q ${PYTEST_ARGS[@]+"${PYTEST_ARGS[@]}"}
+
+echo "== regression gates (fused proxy scoring + adaptive serving) =="
+python benchmarks/check_regression.py ${BENCH_ARGS[@]+"${BENCH_ARGS[@]}"}
 
 echo "CI OK"

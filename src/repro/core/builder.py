@@ -73,8 +73,12 @@ class ProxyBuilder:
         self._labels: Dict[int, np.ndarray] = {}  # pred -> sigma bool per row
         # materialized sigma-filtered samples, keyed by frozenset of preds
         self._sigma_rows: Dict[FrozenSet[int], np.ndarray] = {frozenset(): np.arange(self.n)}
-        # classifier cache: (pred, frozenset(prefix)) -> (ProxyModel, rows_used)
-        self._proxies: Dict[Tuple[int, FrozenSet[int]], Tuple[ProxyModel, np.ndarray]] = {}
+        # classifier cache: (pred, frozenset(prefix)) -> (ProxyModel, phi_star).
+        # phi_star is the scorer's F1 on the sample it was trained against,
+        # recorded at insert time, so the Eq.-4.7 eps-approx test does not
+        # reference row indices of any particular sample — the cache stays
+        # valid when transplanted onto a fresh sample via ``rebase``.
+        self._proxies: Dict[Tuple[int, FrozenSet[int]], Tuple[ProxyModel, float]] = {}
 
     # ------------------------------------------------------------- labeling
     def sigma_mask(self, pred_idx: int, rows: np.ndarray) -> np.ndarray:
@@ -144,11 +148,9 @@ class ProxyBuilder:
         key = (pred_idx, frozenset(prefix))
         labels = self.sigma_mask(pred_idx, rows)
         if key in self._proxies and self.reuse_classifiers:
-            cached, rows_star = self._proxies[key]
+            cached, phi_star = self._proxies[key]
             # epsilon-approx test (Eq. 4.7) with phi = F1 of the cached scorer
-            y_star = np.where(self.sigma_mask(pred_idx, rows_star), 1.0, -1.0)
             y_new = np.where(labels, 1.0, -1.0)
-            phi_star = f1_score(cached.score(self.x[rows_star]), y_star)
             phi_new = f1_score(cached.score(self.x[rows]), y_new) if len(rows) else phi_star
             if abs(phi_new - phi_star) <= self.eps * max(phi_star, 1e-9):
                 self.stats.n_reused += 1
@@ -160,8 +162,50 @@ class ProxyBuilder:
         )
         self.stats.training_ms += (time.perf_counter() - t0) * 1e3
         self.stats.n_trained += 1
-        self._proxies[(pred_idx, frozenset(prefix))] = (proxy, rows)
+        y_here = np.where(labels, 1.0, -1.0)
+        phi_star = f1_score(proxy.score(self.x[rows]), y_here) if len(rows) else 0.0
+        self._proxies[key] = (proxy, phi_star)
         return proxy, rows
+
+    # ----------------------------------------------------------- adaptivity
+    def rebase(
+        self,
+        x_new: np.ndarray,
+        *,
+        known_sigma: Optional[Dict[int, Tuple[np.ndarray, np.ndarray]]] = None,
+    ) -> "ProxyBuilder":
+        """Fresh builder over a new optimization sample (e.g. the serving
+        reservoir), carrying the trained-classifier cache forward so the
+        §4.4 eps-approx reuse test can skip retraining proxies that still
+        fit the drifted data.
+
+        ``known_sigma``: pred_idx -> (known_mask (M,), sigma (M,)) boolean
+        arrays pre-seeding the lazy label cache — rows the serving loop
+        already ran the UDF on (audit records) are never re-labeled.
+        """
+        nb = ProxyBuilder(
+            self.query, x_new, kind=self.kind, eps=self.eps, seed=self.seed,
+            reuse_samples=self.reuse_samples,
+            reuse_classifiers=self.reuse_classifiers,
+        )
+        nb._proxies = dict(self._proxies)
+        if known_sigma:
+            nb.seed_labels(known_sigma)
+        return nb
+
+    def seed_labels(
+        self, known_sigma: Dict[int, Tuple[np.ndarray, np.ndarray]]
+    ) -> None:
+        """Pre-populate the lazy UDF-label cache with sigma outcomes already
+        observed elsewhere (e.g. serving audit records): pred_idx ->
+        (known_mask (n,), sigma (n,)) over THIS builder's sample rows."""
+        for p, (known, sigma) in known_sigma.items():
+            known = np.asarray(known, bool)
+            if known.shape[0] != self.n:
+                raise ValueError(
+                    f"known_sigma[{p}] has {known.shape[0]} rows, sample has {self.n}")
+            self._labeled[p] = known.copy()
+            self._labels[p] = np.asarray(sigma, bool) & known
 
     # ---------------------------------------------------------- measurement
     def selectivity(self, pred_idx: int, rows: np.ndarray) -> float:

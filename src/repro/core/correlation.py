@@ -3,10 +3,72 @@
 kappa^2 = 1 / (n (min(d1,d2)-1)) * sum_ij (n_ij - n_i. n_.j / n)^2 / (n_i. n_.j / n)
 
 i.e. Cramer's-V-squared measured on a sample (CORDS uses 10K rows).
+
+``StreamingKappa2`` is the incremental form used by the adaptive serving
+loop (DESIGN.md §4): it folds label chunks into a sparse contingency table
+so the statistic is available mid-stream without re-scanning history, and
+is chunking-invariant — feeding the same rows in any split yields exactly
+the batch ``correlation_score`` value (property-tested).
 """
 from __future__ import annotations
 
+from typing import Dict, Tuple
+
 import numpy as np
+
+
+def _kappa2_from_counts(counts: np.ndarray, n: int) -> float:
+    """The CORDS statistic from a dense (d1, d2) contingency table."""
+    d1, d2 = counts.shape
+    if min(d1, d2) < 2 or n == 0:
+        return 0.0
+    row = counts.sum(axis=1, keepdims=True)
+    col = counts.sum(axis=0, keepdims=True)
+    expected = row * col / n
+    with np.errstate(divide="ignore", invalid="ignore"):
+        chi2 = np.where(expected > 0, (counts - expected) ** 2 / expected, 0.0).sum()
+    return float(chi2 / (n * (min(d1, d2) - 1)))
+
+
+class StreamingKappa2:
+    """Incremental pairwise kappa^2 over two categorical label streams.
+
+    ``update(col1, col2)`` folds a chunk of co-observed labels into a sparse
+    (value, value) -> count table; ``value()`` densifies and applies the
+    CORDS formula.  Because the statistic depends only on the accumulated
+    table, any chunking of the same rows produces the identical value as
+    ``correlation_score`` with sampling disabled.
+    """
+
+    def __init__(self):
+        self.counts: Dict[Tuple[int, int], int] = {}
+        self.n = 0
+
+    def update(self, col1: np.ndarray, col2: np.ndarray) -> None:
+        col1 = np.asarray(col1).ravel()
+        col2 = np.asarray(col2).ravel()
+        if len(col1) != len(col2):
+            raise ValueError("label chunks must be co-observed (equal length)")
+        if len(col1) == 0:
+            return
+        pairs = np.stack([col1.astype(np.int64), col2.astype(np.int64)], axis=1)
+        uniq, cnt = np.unique(pairs, axis=0, return_counts=True)
+        for (a, b), c in zip(uniq, cnt):
+            key = (int(a), int(b))
+            self.counts[key] = self.counts.get(key, 0) + int(c)
+        self.n += len(col1)
+
+    def value(self) -> float:
+        if not self.counts:
+            return 0.0
+        v1 = sorted({a for a, _ in self.counts})
+        v2 = sorted({b for _, b in self.counts})
+        i1 = {v: i for i, v in enumerate(v1)}
+        i2 = {v: i for i, v in enumerate(v2)}
+        dense = np.zeros((len(v1), len(v2)))
+        for (a, b), c in self.counts.items():
+            dense[i1[a], i2[b]] = c
+        return _kappa2_from_counts(dense, self.n)
 
 
 def correlation_score(col1: np.ndarray, col2: np.ndarray, sample: int = 10_000,
@@ -18,17 +80,9 @@ def correlation_score(col1: np.ndarray, col2: np.ndarray, sample: int = 10_000,
     n = len(col1)
     v1, inv1 = np.unique(col1, return_inverse=True)
     v2, inv2 = np.unique(col2, return_inverse=True)
-    d1, d2 = len(v1), len(v2)
-    if min(d1, d2) < 2:
-        return 0.0
-    counts = np.zeros((d1, d2))
+    counts = np.zeros((len(v1), len(v2)))
     np.add.at(counts, (inv1, inv2), 1)
-    row = counts.sum(axis=1, keepdims=True)
-    col = counts.sum(axis=0, keepdims=True)
-    expected = row * col / n
-    with np.errstate(divide="ignore", invalid="ignore"):
-        chi2 = np.where(expected > 0, (counts - expected) ** 2 / expected, 0.0).sum()
-    return float(chi2 / (n * (min(d1, d2) - 1)))
+    return _kappa2_from_counts(counts, n)
 
 
 def query_correlation(label_columns: np.ndarray) -> float:

@@ -88,19 +88,31 @@ def execute_plan(
 
     scorer = None
     cascade = None
+    compact_cols = None
     if use_kernel:
         from repro.kernels import ops as kops
 
         scorer = kops.proxy_score_batch
         if fused:
             cascade = kops.CascadeScorer.from_plan(plan, max_tile=batch_size)
+        if cascade is not None:
+            # only the FIRST gated stage ever sees a full tile, so only its
+            # packed survivor list is consumed — assemble just that column
+            # instead of computing every stage's list and discarding most
+            compact_cols = tuple(
+                col for col in (
+                    cascade.stage_cols[si]
+                    for si, st_ in enumerate(plan.stages) if st_.proxy is not None
+                ) if col is not None
+            )[:1]
 
     for start in range(0, n, batch_size):
         idx = np.arange(start, min(start + batch_size, n))
         masks = packed = None
         if cascade is not None:
             t0 = time.perf_counter()
-            _, masks, packed, _counts = cascade.score_compact(x[idx])
+            _, masks, packed, _counts = cascade.score_compact(
+                x[idx], compact_cols=compact_cols)
             fused_ms += (time.perf_counter() - t0) * 1e3
         loc = np.arange(len(idx))  # tile-local survivor positions
         for si, stage in enumerate(plan.stages):
@@ -113,7 +125,7 @@ def execute_plan(
                 t0 = time.perf_counter()
                 col = cascade.stage_cols[si] if cascade is not None else None
                 if masks is not None and col is not None:
-                    if len(loc) == len(idx):
+                    if len(loc) == len(idx) and packed[col] is not None:
                         # full tile: use the on-device-compacted index list
                         # (score_compact already truncated it to counts[col])
                         loc = packed[col]

@@ -7,11 +7,18 @@ optimization sample and returns a PhysicalPlan:
                    + accuracy allocation (Alg. 1).           [the paper]
 * mode="core-a"  — input order, accuracy allocation only.    [§6.5 CORE-a]
 * mode="core-h"  — exhaustive order search.                  [§6.5 CORE-h]
+
+``reoptimize(plan, x_sample, ...)`` is the adaptive-serving entry point
+(DESIGN.md §4): it rebuilds the plan against fresh statistics — a cheap
+re-allocation on the incumbent order, or a warm-started branch-and-bound
+``resume`` that reuses the previous search tree — carrying the previous
+builder's trained-classifier cache forward so unchanged proxies are not
+retrained.
 """
 from __future__ import annotations
 
 import time
-from typing import Optional
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -51,11 +58,16 @@ def optimize(
     fine_grained: bool = True,
     seed: int = 0,
     builder: Optional[ProxyBuilder] = None,
+    keep_state: bool = False,
 ) -> PhysicalPlan:
+    """``keep_state=True`` attaches the live builder (and B&B tree for
+    mode="core") to ``plan.meta`` so a later ``reoptimize`` can warm-start
+    instead of cold-searching — the adaptive serving loop's path."""
     t_start = time.perf_counter()
     A = query.accuracy_target
     builder = builder or ProxyBuilder(query, x_sample, kind=kind, eps=eps, seed=seed)
     trace: Optional[SearchTrace] = None
+    bb: Optional[BranchAndBound] = None
     if mode == "core-a":
         alloc = accuracy_allocation(builder, tuple(range(query.n)), A, step=step,
                                     framework=framework)
@@ -76,12 +88,90 @@ def optimize(
         "mode": mode,
         "stats": builder.stats.as_dict(),
         "wall_ms": (time.perf_counter() - t_start) * 1e3,
+        "plan_version": 0,
     }
     if trace is not None:
-        meta["trace"] = {
-            "nodes_total": trace.nodes_total,
-            "nodes_visited": trace.nodes_visited,
-            "nodes_pruned_frac": trace.nodes_pruned_frac,
-            "plans_pruned": trace.plans_pruned,
-        }
+        meta["trace"] = _trace_dict(trace)
+    if keep_state:
+        meta["builder"] = builder
+        if bb is not None:
+            meta["bnb"] = bb
+    return _plan_from_allocation(query, alloc, meta)
+
+
+def _trace_dict(trace: SearchTrace) -> dict:
+    return {
+        "nodes_total": trace.nodes_total,
+        "nodes_visited": trace.nodes_visited,
+        "nodes_pruned_frac": trace.nodes_pruned_frac,
+        "plans_pruned": trace.plans_pruned,
+    }
+
+
+def reoptimize(
+    plan: PhysicalPlan,
+    x_sample: np.ndarray,
+    *,
+    known_sigma: Optional[Dict[int, Tuple[np.ndarray, np.ndarray]]] = None,
+    mode: str = "alloc",  # "alloc" (cheap re-allocation) | "bnb" (warm resume)
+    step: float = 0.05,
+    kind: str = "svm",
+    eps: float = 0.1,
+    framework: str = "exhaustive",
+    seed: int = 0,
+    keep_state: bool = True,
+) -> PhysicalPlan:
+    """Re-optimize ``plan`` against fresh statistics (adaptive serving).
+
+    ``x_sample`` is the new optimization sample (the serving reservoir);
+    ``known_sigma`` pre-seeds UDF labels the server already observed
+    (pred_idx -> (known_mask, sigma)).  ``mode="alloc"`` re-runs Algorithm 1
+    on the incumbent stage order — the cheap path for pure selectivity /
+    threshold drift.  ``mode="bnb"`` re-searches the order space, warm-
+    starting from the previous search tree when ``plan.meta["bnb"]`` is
+    present (``optimize(keep_state=True)`` or a previous reoptimize).
+    """
+    t_start = time.perf_counter()
+    query = plan.query
+    A = query.accuracy_target
+    prev_builder: Optional[ProxyBuilder] = plan.meta.get("builder")
+    prev_bnb: Optional[BranchAndBound] = plan.meta.get("bnb")
+    if prev_builder is None and prev_bnb is not None:
+        prev_builder = prev_bnb.builder
+    if prev_builder is not None:
+        builder = prev_builder.rebase(x_sample, known_sigma=known_sigma)
+    else:
+        builder = ProxyBuilder(query, x_sample, kind=kind, eps=eps, seed=seed)
+        if known_sigma:
+            builder.seed_labels(known_sigma)
+    trace: Optional[SearchTrace] = None
+    warm = False
+    bb: Optional[BranchAndBound] = None
+    if mode == "alloc":
+        alloc = accuracy_allocation(builder, plan.order, A, step=step,
+                                    framework=framework)
+        bb = prev_bnb  # keep the tree for a later escalation
+    elif mode == "bnb":
+        if prev_bnb is not None:
+            bb = prev_bnb
+            alloc, trace = bb.resume(builder)
+            warm = True
+        else:
+            bb = BranchAndBound(builder, A, step=step, framework=framework)
+            alloc, trace = bb.run()
+    else:
+        raise ValueError(f"unknown reoptimize mode {mode!r}")
+    meta = {
+        "mode": f"reopt-{mode}",
+        "stats": builder.stats.as_dict(),
+        "wall_ms": (time.perf_counter() - t_start) * 1e3,
+        "plan_version": int(plan.meta.get("plan_version", 0)) + 1,
+        "warm_start": warm,
+    }
+    if trace is not None:
+        meta["trace"] = _trace_dict(trace)
+    if keep_state:
+        meta["builder"] = builder
+        if bb is not None:
+            meta["bnb"] = bb
     return _plan_from_allocation(query, alloc, meta)

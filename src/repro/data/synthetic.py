@@ -34,6 +34,12 @@ class Dataset:
     truth: np.ndarray  # (N, K) ground-truth label columns (latent readouts)
     directions: np.ndarray  # (K, k) latent readout directions
     n_classes: Sequence[int]
+    # generative parameters, kept so drifted continuations of the SAME
+    # process can be sampled later (make_drifting_stream)
+    w_feat: Optional[np.ndarray] = None  # (k, F) latent -> feature map
+    quantiles: Optional[List[np.ndarray]] = None  # per-column class bounds
+    feature_noise: float = 0.8
+    label_noise: float = 0.1
 
     @property
     def n(self) -> int:
@@ -76,12 +82,125 @@ def make_dataset(
 
     truth = np.empty((n, n_columns), np.int64)
     classes = []
+    quantiles = []
     for j in range(n_columns):
         score = z @ dirs[j] + label_noise * rng.randn(n).astype(np.float32)
         qs = np.quantile(score, np.linspace(0, 1, n_classes + 1)[1:-1])
         truth[:, j] = np.digitize(score, qs)
         classes.append(n_classes)
-    return Dataset(name=name, x=x, truth=truth, directions=dirs, n_classes=classes)
+        quantiles.append(qs)
+    return Dataset(name=name, x=x, truth=truth, directions=dirs, n_classes=classes,
+                   w_feat=W, quantiles=quantiles, feature_noise=feature_noise,
+                   label_noise=label_noise)
+
+
+# ------------------------------------------------------------- drift streams
+@dataclass
+class DriftingStream:
+    """A record stream whose generative distribution shifts mid-run.
+
+    ``x[:boundary]`` comes from the SAME process as the source dataset
+    (so a plan optimized on ``ds`` samples is initially well-calibrated);
+    ``x[boundary:]`` is drawn after a latent distribution shift.  The
+    UDFs trained on ``ds`` still apply unchanged — the drift lives in the
+    data, so what shifts at query time is the distribution of UDF
+    *outputs*: per-predicate selectivities and predicate-event
+    correlations, exactly the statistics a frozen plan goes stale on.
+    """
+
+    x: np.ndarray  # (n_before + n_after, F)
+    boundary: int  # first row of the drifted segment
+    truth: np.ndarray  # (N, K) latent-readout ground truth (reference only)
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def n(self) -> int:
+        return self.x.shape[0]
+
+
+def make_drifting_stream(
+    ds: Dataset,
+    n_before: int,
+    n_after: int,
+    *,
+    shift: float = 1.5,
+    shift_dirs: Sequence[int] = (0,),
+    shift_weights: Optional[Sequence[float]] = None,
+    shift_targets: Optional[Dict[int, float]] = None,
+    corr_gain: float = 1.0,
+    seed: int = 0,
+) -> DriftingStream:
+    """Sample a two-segment stream from ``ds``'s generative process.
+
+    Drift knobs (applied to the second segment's latent ``z``):
+
+    * ``shift`` — the latent mean moves ``shift`` units along the
+      (normalized) weighted sum of the readout directions named by
+      ``shift_dirs`` (weights default to 1; negative weights push a
+      predicate's readout DOWN): those predicates' class masses slide
+      across the (frozen) quantile boundaries, i.e. **selectivity
+      drift**.  Opposite-signed weights move correlated predicates in
+      opposite directions — the plan-order-inverting case.
+    * ``shift_targets`` — {column: desired readout-mean shift}.  Solves
+      ``D mu = t`` by pseudo-inverse, so each named predicate's latent
+      readout moves by EXACTLY the requested amount even when the
+      directions are strongly correlated (a normalized direction sum
+      cannot move correlated predicates independently — the common
+      component dominates).  Overrides ``shift`` / ``shift_dirs``.
+    * ``corr_gain`` — latent variance along the bisector of the first two
+      readout directions is scaled by ``corr_gain``; since the covariance
+      between readouts i and j under anisotropic z is d_i^T Sigma d_j,
+      this changes their co-occurrence structure, i.e. **correlation
+      drift** (a pure rotation would not — isotropic Gaussians are
+      rotation-invariant).
+    """
+    if ds.w_feat is None or ds.quantiles is None:
+        raise ValueError("dataset lacks generative parameters; rebuild with "
+                         "make_dataset from this revision")
+    rng = np.random.RandomState(seed + 7919)
+    k = ds.directions.shape[1]
+    n_features = ds.w_feat.shape[1]
+
+    def sample(n: int, drifted: bool):
+        z = rng.randn(n, k).astype(np.float32)
+        if drifted:
+            if corr_gain != 1.0 and ds.directions.shape[0] >= 2:
+                u = ds.directions[0] + ds.directions[1]
+                u = u / (np.linalg.norm(u) + 1e-9)
+                z = z + (corr_gain - 1.0) * (z @ u)[:, None] * u[None, :]
+            if shift_targets:
+                cols = sorted(shift_targets)
+                D = ds.directions[cols]  # (m, k)
+                t = np.asarray([shift_targets[c] for c in cols], np.float64)
+                mu, *_ = np.linalg.lstsq(D, t, rcond=None)
+                z = z + mu.astype(np.float32)[None, :]
+            else:
+                weights = ([1.0] * len(shift_dirs) if shift_weights is None
+                           else list(shift_weights))
+                mu = np.zeros(k, np.float32)
+                for d, wgt in zip(shift_dirs, weights):
+                    mu += np.float32(wgt) * ds.directions[d]
+                nrm = np.linalg.norm(mu)
+                if nrm > 0:
+                    z = z + shift * (mu / nrm)[None, :]
+        x = np.tanh(z @ ds.w_feat
+                    + ds.feature_noise * rng.randn(n, n_features).astype(np.float32))
+        truth = np.empty((n, ds.directions.shape[0]), np.int64)
+        for j in range(ds.directions.shape[0]):
+            score = z @ ds.directions[j] + ds.label_noise * rng.randn(n).astype(np.float32)
+            truth[:, j] = np.digitize(score, ds.quantiles[j])
+        return x.astype(np.float32), truth
+
+    x1, t1 = sample(n_before, False)
+    x2, t2 = sample(n_after, True)
+    return DriftingStream(
+        x=np.concatenate([x1, x2]), boundary=n_before,
+        truth=np.concatenate([t1, t2]),
+        meta={"shift": shift, "shift_dirs": tuple(shift_dirs),
+              "shift_weights": None if shift_weights is None else tuple(shift_weights),
+              "shift_targets": dict(shift_targets) if shift_targets else None,
+              "corr_gain": corr_gain, "seed": seed},
+    )
 
 
 # --------------------------------------------------------------------- UDFs

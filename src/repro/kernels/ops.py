@@ -162,46 +162,63 @@ class CascadeScorer:
         return np.ascontiguousarray(x_tile, np.float32)
 
     def _score_tile(self, x_tile: np.ndarray, need_scores: bool,
-                    need_compaction: bool = True):
+                    need_compaction: bool = True, compact_cols=None):
         n = x_tile.shape[0]
         scores, mask, packed, counts = cascade_score(
             jnp.asarray(self._pad_tile(x_tile)), self.w, self.b, self.thr, n,
             block_m=self.block_m, interpret=self.interpret,
             with_scores=need_scores, with_compaction=need_compaction,
+            compact_cols=compact_cols,
         )
         return (np.asarray(scores[:n]) if need_scores else None,
                 np.asarray(mask[:n]),
                 np.asarray(packed) if need_compaction else None,
                 np.asarray(counts) if need_compaction else None)
 
-    def score_compact(self, x: np.ndarray, *, need_scores: bool = False):
+    def score_compact(self, x: np.ndarray, *, need_scores: bool = False,
+                      compact_cols=None):
         """Score every stage over ``x`` (N, F) in one fused pass per tile.
 
         Returns (scores (N, P) | None, masks (N, P), packed, counts) where
         ``packed[p][:counts[p]]`` are the ascending row indices surviving
         stage p's proxy gate (dense UDF batch order).  ``scores`` is only
         fetched off device when ``need_scores`` (the engines gate on masks).
+
+        ``compact_cols`` restricts survivor-list assembly to the named
+        proxy columns (the executor only consumes the first full-tile
+        stage's list); unassembled entries of ``packed`` are None.  The
+        per-stage survivor ``counts`` cover every column either way.
         """
         x = np.asarray(x, np.float32)
         n = x.shape[0]
+        cols_sel = (tuple(range(self.n_proxies)) if compact_cols is None
+                    else tuple(int(c) for c in compact_cols))
+        kernel_cols = None if compact_cols is None else cols_sel
         if n <= self.max_tile:
-            scores, masks, packed, counts = self._score_tile(x, need_scores)
-            return scores, masks, [packed[p, :counts[p]] for p in
-                                   range(self.n_proxies)], counts
+            scores, masks, packed, counts = self._score_tile(
+                x, need_scores, compact_cols=kernel_cols)
+            out = [None] * self.n_proxies
+            for ci, col in enumerate(cols_sel):
+                out[col] = packed[ci, :counts[col]]
+            return scores, masks, out, counts
         scores = np.empty((n, self.n_proxies), np.float32) if need_scores else None
         masks = np.empty((n, self.n_proxies), bool)
-        parts = [[] for _ in range(self.n_proxies)]
+        parts = {col: [] for col in cols_sel}
+        counts = np.zeros(self.n_proxies, np.int32)
         for start in range(0, n, self.max_tile):
             stop = min(start + self.max_tile, n)
-            s, m, pk, cnt = self._score_tile(x[start:stop], need_scores)
+            s, m, pk, cnt = self._score_tile(
+                x[start:stop], need_scores, compact_cols=kernel_cols)
             if need_scores:
                 scores[start:stop] = s
             masks[start:stop] = m
-            for p in range(self.n_proxies):
-                parts[p].append(pk[p, :cnt[p]] + start)
-        packed = [np.concatenate(p) if p else np.empty(0, np.int32)
-                  for p in parts]
-        counts = np.asarray([len(p) for p in packed], np.int32)
+            counts += cnt
+            for ci, col in enumerate(cols_sel):
+                parts[col].append(pk[ci, :cnt[col]] + start)
+        packed = [None] * self.n_proxies
+        for col in cols_sel:
+            packed[col] = (np.concatenate(parts[col]) if parts[col]
+                           else np.empty(0, np.int32))
         return scores, masks, packed, counts
 
     def score_masks(self, x: np.ndarray) -> np.ndarray:
@@ -217,6 +234,45 @@ class CascadeScorer:
                 x[start:stop], need_scores=False, need_compaction=False)
             masks[start:stop] = mask
         return masks
+
+
+# --------------------------------------------- scorer compile cache (serving)
+# The adaptive server hot-swaps plans mid-stream and can oscillate between
+# plan versions; each CascadeScorer carries folded weights + jit programs,
+# so re-entering a previously compiled plan version must be a cache hit,
+# not a refold + retrace.  Keyed on the stages' proxy-parameter identities
+# and thresholds; values hold strong refs to the params so ids stay valid.
+_SCORER_CACHE: dict = {}
+_SCORER_CACHE_MAX = 64
+
+
+def _plan_scorer_key(plan, max_tile: int):
+    return tuple(
+        (s.pred_idx,
+         id(s.proxy.params) if s.proxy is not None else None,
+         float(s.threshold))
+        for s in plan.stages
+    ) + (int(max_tile),)
+
+
+def cascade_scorer_for_plan(plan, *, max_tile: int = 8192):
+    """Memoized ``CascadeScorer.from_plan``.
+
+    Returns (scorer | None, cache_hit).  None means the plan has no linear
+    stage (nothing to fuse) — that outcome is cached too.
+    """
+    key = _plan_scorer_key(plan, max_tile)
+    params_now = tuple(
+        s.proxy.params if s.proxy is not None else None for s in plan.stages)
+    hit = _SCORER_CACHE.get(key)
+    if hit is not None and len(hit[0]) == len(params_now) and all(
+            a is b for a, b in zip(hit[0], params_now)):
+        return hit[1], True
+    scorer = CascadeScorer.from_plan(plan, max_tile=max_tile)
+    if len(_SCORER_CACHE) >= _SCORER_CACHE_MAX:
+        _SCORER_CACHE.pop(next(iter(_SCORER_CACHE)))
+    _SCORER_CACHE[key] = (params_now, scorer)
+    return scorer, False
 
 
 # -------------------------------------------------------------- attention

@@ -21,16 +21,6 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(x_ref, w_ref, b_ref, thr_ref, score_ref, mask_ref):
-    x = x_ref[...]
-    w = w_ref[...]
-    s = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
-                preferred_element_type=jnp.float32)
-    s = s + b_ref[...][None, :]
-    score_ref[...] = s
-    mask_ref[...] = s >= thr_ref[...][None, :]
-
-
 def _make_cascade_kernel(n_proxies, with_scores, with_compaction):
     """Fused whole-cascade tile kernel: one GEMM scores every proxy column;
     optionally a block-local prefix sum packs survivor positions so the
@@ -68,53 +58,25 @@ def _make_cascade_kernel(n_proxies, with_scores, with_compaction):
     return kernel
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
 def proxy_score(x, w, b, thresholds, *, block_m: int = 256, interpret: bool = True):
     """x: (N, F); w: (F, P); b, thresholds: (P,).
 
-    Returns (scores (N, P) f32, mask (N, P) bool).  N is padded to block_m
-    and P to the 128-lane width internally.
+    Returns (scores (N, P) f32, mask (N, P) bool).  Thin wrapper over
+    ``cascade_score(with_compaction=False)`` — the pad/grid plumbing and
+    kernel body exist exactly once (ROADMAP cleanup, PR 2).
     """
-    N, F = x.shape
-    P = w.shape[1]
-    pad_n = (-N) % block_m
-    pad_p = (-P) % 128
-    if pad_n:
-        x = jnp.pad(x, ((0, pad_n), (0, 0)))
-    if pad_p:
-        w = jnp.pad(w, ((0, 0), (0, pad_p)))
-        b = jnp.pad(b, (0, pad_p))
-        thresholds = jnp.pad(thresholds, (0, pad_p), constant_values=jnp.inf)
-    Np, Pp = x.shape[0], w.shape[1]
-
-    grid = (Np // block_m,)
-    scores, mask = pl.pallas_call(
-        _kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_m, F), lambda i: (i, 0)),
-            pl.BlockSpec((F, Pp), lambda i: (0, 0)),
-            pl.BlockSpec((Pp,), lambda i: (0,)),
-            pl.BlockSpec((Pp,), lambda i: (0,)),
-        ],
-        out_specs=[
-            pl.BlockSpec((block_m, Pp), lambda i: (i, 0)),
-            pl.BlockSpec((block_m, Pp), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((Np, Pp), jnp.float32),
-            jax.ShapeDtypeStruct((Np, Pp), jnp.bool_),
-        ],
-        interpret=interpret,
-    )(x, w, b, thresholds)
-    return scores[:N, :P], mask[:N, :P]
+    scores, mask, _packed, _counts = cascade_score(
+        x, w, b, thresholds, x.shape[0], block_m=block_m, interpret=interpret,
+        with_scores=True, with_compaction=False,
+    )
+    return scores, mask
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "block_m", "interpret", "with_scores", "with_compaction"))
+    "block_m", "interpret", "with_scores", "with_compaction", "compact_cols"))
 def cascade_score(x, w, b, thresholds, n_valid, *, block_m: int = 256,
                   interpret: bool = True, with_scores: bool = True,
-                  with_compaction: bool = True):
+                  with_compaction: bool = True, compact_cols=None):
     """One fused pass over a record tile for a whole cascade.
 
     x: (N, F) record tile (rows >= ``n_valid`` are padding and are masked
@@ -124,11 +86,15 @@ def cascade_score(x, w, b, thresholds, n_valid, *, block_m: int = 256,
     Returns:
       scores (N, P) f32          raw proxy scores (None if not with_scores)
       mask   (N, P) bool         per-stage keep masks (padding rows False)
-      packed (P, N) int32        compacted survivor row indices per stage:
-                                 ``packed[p, :counts[p]]`` are the rows with
-                                 ``mask[:, p]`` True, ascending; the tail
-                                 is -1 (None if not with_compaction)
-      counts (P,)  int32         survivors per stage (None likewise)
+      packed (C, N) int32        compacted survivor row indices per
+                                 *assembled* stage: with ``compact_cols``
+                                 a static tuple of column indices, C =
+                                 len(compact_cols) and row ``c`` holds the
+                                 ascending rows where mask[:, cols[c]] is
+                                 True (tail -1); C = P when compact_cols is
+                                 None (None if not with_compaction)
+      counts (P,)  int32         survivors per stage, ALL columns (None
+                                 when not with_compaction)
 
     Compaction runs on device: the kernel emits block-local exclusive
     prefix sums + per-block totals; this wrapper turns them into global
@@ -136,7 +102,10 @@ def cascade_score(x, w, b, thresholds, n_valid, *, block_m: int = 256,
     UDF batch index list exists without materialising the boolean mask on
     the host.  ``with_scores=False`` / ``with_compaction=False`` drop the
     outputs (and their HBM round-trips) a caller won't read — the serving
-    engine gates on masks alone.
+    engine gates on masks alone.  ``compact_cols`` gates the scatter
+    assembly per column: the executor consumes the packed list only for
+    its first full-tile stage, so later columns' O(N) scatters are skipped
+    instead of computed-then-discarded.
     """
     N, F = x.shape
     P = w.shape[1]
@@ -189,14 +158,21 @@ def cascade_score(x, w, b, thresholds, n_valid, *, block_m: int = 256,
     # inter-block exclusive scan of the per-block survivor counts gives each
     # block its base slot; scatter rows to (stage, slot), dropping rejects.
     # Assembly runs only over the REAL P columns — the lane-pad columns are
-    # all-False and would multiply the scatter cost ~128/P for nothing.
-    block_base = jnp.cumsum(cnt[:, :P], axis=0) - cnt[:, :P]  # (nb, P)
-    gpos = pos[:, :P] + jnp.repeat(block_base, block_m, axis=0,
+    # all-False and would multiply the scatter cost ~128/P for nothing —
+    # and, when ``compact_cols`` names the columns a caller will actually
+    # consume, only over those.
+    cols_sel = tuple(range(P)) if compact_cols is None else tuple(compact_cols)
+    ci = jnp.asarray(cols_sel, jnp.int32)
+    C = len(cols_sel)
+    cnt_sel = cnt[:, ci]  # (nb, C)
+    block_base = jnp.cumsum(cnt_sel, axis=0) - cnt_sel
+    gpos = pos[:, ci] + jnp.repeat(block_base, block_m, axis=0,
                                    total_repeat_length=Np)
-    gpos = jnp.where(mask_p, gpos, Np)  # sentinel slot -> dropped by scatter
-    rows = jnp.broadcast_to(jnp.arange(Np, dtype=jnp.int32)[:, None], (Np, P))
-    cols = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32)[None, :], (Np, P))
-    packed = jnp.full((P, Np), -1, jnp.int32).at[cols, gpos].set(
+    mask_sel = mask_p[:, ci]
+    gpos = jnp.where(mask_sel, gpos, Np)  # sentinel slot -> dropped by scatter
+    rows = jnp.broadcast_to(jnp.arange(Np, dtype=jnp.int32)[:, None], (Np, C))
+    cols = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32)[None, :], (Np, C))
+    packed = jnp.full((C, Np), -1, jnp.int32).at[cols, gpos].set(
         rows, mode="drop")
     counts = jnp.sum(cnt[:, :P], axis=0)
     return (scores[:N, :P] if with_scores else None,

@@ -3,13 +3,17 @@ query and serve a record stream with continuous batching.
 
     PYTHONPATH=src python -m repro.launch.serve --n 20000 --correlation 0.9 \\
         --accuracy 0.9 --mode core
+
+``--drift`` serves an order-inverting drifting stream instead of held-out
+rows; add ``--adaptive`` to let the server detect the drift and
+re-optimize mid-stream (DESIGN.md §4).
 """
 from __future__ import annotations
 
 import argparse
 
-from repro.core import execute_plan, ns_plan, optimize, orig_plan, plan_accuracy, pp_plan
-from repro.data.synthetic import make_dataset, make_query, make_udfs
+from repro.core import execute_plan, ns_plan, optimize, orig_plan, pp_plan
+from repro.data.synthetic import make_dataset, make_drifting_stream, make_query, make_udfs
 from repro.serving.engine import CascadeServer
 
 
@@ -23,6 +27,10 @@ def main():
     ap.add_argument("--tile", type=int, default=1024)
     ap.add_argument("--udf-cost-ms", type=float, default=20.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--adaptive", action="store_true",
+                    help="drift-triggered online re-optimization")
+    ap.add_argument("--drift", action="store_true",
+                    help="serve a drifting stream (selectivity + correlation shift)")
     args = ap.parse_args()
 
     ds = make_dataset(n=args.n, correlation=args.correlation, seed=args.seed)
@@ -40,18 +48,46 @@ def main():
     elif args.mode == "pp":
         plan = pp_plan(q, ds.x[:k])
     else:
-        plan = optimize(q, ds.x[:k], mode=args.mode)
+        plan = optimize(q, ds.x[:k], mode=args.mode,
+                        keep_state=args.adaptive)
     print(plan.describe())
 
-    server = CascadeServer(plan, tile=args.tile, use_kernel=True)
-    stats = server.run_stream(ds.x[k:])
-    orig_res = execute_plan(orig_plan(q), ds.x[k:])
-    res = execute_plan(plan, ds.x[k:])
-    print(f"\nserved {len(ds.x) - k} records in {stats.wall_ms:.0f} ms wall; "
-          f"emitted {stats.emitted}")
-    print(f"cost model: {res.cost_per_record(len(ds.x)-k):.3f} ms/rec "
-          f"(ORIG {orig_res.cost_per_record(len(ds.x)-k):.3f}); "
-          f"accuracy {plan_accuracy(res, orig_res):.3f}")
+    if args.drift:
+        stream = make_drifting_stream(
+            ds, max(args.n // 4, 2000), args.n - k,
+            shift_targets={c: (2.8 if c != 1 else -2.6) for c in range(args.preds)},
+            corr_gain=2.5, seed=args.seed,
+        )
+        x_serve = stream.x
+        print(f"drifting stream: {stream.n} records, boundary at "
+              f"{stream.boundary}")
+    else:
+        x_serve = ds.x[k:]
+    server = CascadeServer(plan, tile=args.tile, use_kernel=True,
+                           adaptive=args.adaptive, seed=args.seed)
+    stats = server.run_stream(x_serve)
+    orig_res = execute_plan(orig_plan(q), x_serve)
+    # accuracy of what was actually SERVED (mid-stream swaps included),
+    # not a re-execution of the final plan over the whole stream
+    orig_set = set(orig_res.passed.tolist())
+    served_acc = (sum(1 for i in server.emitted if i in orig_set)
+                  / max(len(orig_set), 1))
+    print(f"\nserved {len(x_serve)} records in {stats.wall_ms:.0f} ms wall; "
+          f"emitted {stats.emitted} (+{stats.rejected} rejected)")
+    if args.adaptive:
+        print(f"adaptive: {stats.plan_swaps} plan swap(s), "
+              f"{stats.audit_records} audit records "
+              f"({stats.audit_cost_ms:.0f} ms cost), reopt "
+              f"{stats.reopt_ms:.0f} ms wall")
+        for ev in stats.drift_events:
+            print(f"  drift@{ev.at_record} [{ev.signal}] obs={ev.observed:.3f} "
+                  f"exp={ev.expected:.3f} -> "
+                  f"{'warm B&B' if ev.escalated else 're-allocation'} "
+                  f"({ev.nodes_visited} nodes), order "
+                  f"{ev.order_before} -> {ev.order_after}")
+    print(f"cost model: {stats.model_cost_ms / len(x_serve):.3f} ms/rec "
+          f"(ORIG {orig_res.cost_per_record(len(x_serve)):.3f}); "
+          f"served accuracy {served_acc:.3f}")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,5 @@
 """Batched cascade serving engine (continuous batching over the proxy
-cascade).
+cascade) with optional drift-adaptive re-optimization.
 
 The paper's executor streams rows; on TPU we keep static shapes (DESIGN.md
 §3):
@@ -14,23 +14,42 @@ Fused hot path: when every proxied stage is linear, a ``CascadeScorer``
 scores each incoming chunk ONCE at submit time — one fused Pallas pass
 yields every stage's keep decision — and the per-record mask rows ride
 through the stage queues with the record.  Stage execution then never
-re-folds, re-scores, or re-traces: the gate is a mask lookup.  Per-stage
-``proxy_ms`` / ``used_kernel`` land in ServeStats so benchmark runs can
-prove which path they measured.
+re-folds, re-scores, or re-traces: the gate is a mask lookup.
 
-Nothing is dropped: a hypothesis property test asserts conservation
-(every record is either rejected by some stage or emitted).
+Adaptive serving (DESIGN.md §4): with ``adaptive=True`` the server keeps
+streaming statistics — per-stage observed keep-rates vs the plan's
+estimates, an audited unbiased per-predicate selectivity, pairwise
+kappa^2 over audit labels, and a reservoir of recent (partially labeled)
+rows.  A CUSUM trigger on any signal re-optimizes mid-stream: a cheap
+re-allocation on the incumbent order, or a warm-started branch-and-bound
+``resume`` when the correlation structure shifted.  The new plan is
+hot-swapped behind a versioned ``_PlanState``: in-flight queue entries
+finish under the plan (and mask rows) they were scored with, so record
+conservation holds across swaps; new submissions score through the new
+plan's ``CascadeScorer`` (compile-cached per plan version).
+
+Nothing is dropped: hypothesis property tests assert conservation (every
+record is either rejected by some stage or emitted exactly once), on the
+static AND the drift-swapping paths.
 """
 from __future__ import annotations
 
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.correlation import StreamingKappa2
 from repro.core.query import PhysicalPlan
+from repro.serving.stats import (
+    AdaptivePolicy,
+    CusumDetector,
+    DriftEvent,
+    Reservoir,
+    StreamingRate,
+)
 
 
 @dataclass
@@ -45,66 +64,230 @@ class ServeStats:
     wall_ms: float = 0.0
     model_cost_ms: float = 0.0
     fused_score_ms: float = 0.0  # submit-time fused whole-cascade scoring
+    # ----- adaptive serving -----
+    plan_swaps: int = 0
+    reopt_ms: float = 0.0  # wall time inside re-optimization
+    reopt_udf_cost_ms: float = 0.0  # cost-model charge for reservoir labeling
+    audit_records: int = 0
+    audit_cost_ms: float = 0.0  # cost-model charge for audit UDF runs
+    scorer_cache_hits: int = 0
+    drift_events: List[DriftEvent] = field(default_factory=list)
 
     @property
     def proxy_total_ms(self) -> float:
         return self.fused_score_ms + sum(self.stage_proxy_ms)
 
 
-class CascadeServer:
-    """Continuous-batching executor for a compiled cascade plan."""
+class _AuditMonitor:
+    """Unconditional per-predicate selectivity watcher over audit records.
 
-    def __init__(self, plan: PhysicalPlan, *, tile: int = 1024, use_kernel: bool = True,
-                 fused: bool = True):
+    The first ``baseline_n`` audited records after a plan install define
+    the reference rate; afterwards a CUSUM accumulates sustained
+    deviation.  (Per-stage keep-rates are conditioned on the prefix, so
+    only the audit stream gives an unbiased drift signal per predicate.)
+    """
+
+    def __init__(self, policy: AdaptivePolicy):
+        self.rate = StreamingRate()
+        self.baseline: Optional[float] = None
+        self.baseline_n = policy.audit_baseline
+        self.cusum = CusumDetector(policy.slack, policy.threshold)
+        self._window: deque = deque()  # (kept, seen) batches, recent only
+        self._window_n = policy.audit_window
+
+    def update(self, kept: int, seen: int) -> bool:
+        self.rate.update(kept, seen)
+        self._window.append((kept, seen))
+        while sum(s for _, s in self._window) - self._window[0][1] >= self._window_n:
+            self._window.popleft()
+        if self.baseline is None:
+            if self.rate.seen >= self.baseline_n:
+                self.baseline = self.rate.rate
+            return False
+        return self.cusum.update(kept / seen if seen else 0.0,
+                                 self.baseline, seen)
+
+    @property
+    def recent_rate(self) -> float:
+        seen = sum(s for _, s in self._window)
+        return sum(k for k, _ in self._window) / seen if seen else 0.0
+
+
+class _PlanState:
+    """One installed plan version: its compiled scorer, its stage queues,
+    and (while current) its drift monitors.  Queue entries are
+    (global idx, feature row, mask row | None); the mask row is only ever
+    interpreted through THIS state's ``stage_cols`` — versioned masks."""
+
+    def __init__(self, version: int, plan: PhysicalPlan, cascade,
+                 policy: Optional[AdaptivePolicy]):
+        self.version = version
         self.plan = plan
+        self.cascade = cascade
+        n = len(plan.stages)
+        self.queues: List[deque] = [deque() for _ in range(n)]
+        self.stage_rate = [StreamingRate() for _ in range(n)]
+        self.stage_cusum = (
+            [CusumDetector(policy.slack, policy.threshold) for _ in range(n)]
+            if policy is not None else None
+        )
+
+    def expected_keep(self, si: int) -> float:
+        s = self.plan.stages[si]
+        return s.est_selectivity * (s.alpha if s.proxy is not None else 1.0)
+
+    def empty(self) -> bool:
+        return all(not q for q in self.queues)
+
+
+class CascadeServer:
+    """Continuous-batching executor for a compiled cascade plan.
+
+    ``adaptive=True`` turns on the drift-triggered re-optimization loop;
+    the plan should then come from ``optimize(..., keep_state=True)`` so
+    re-search can warm-start from the previous branch-and-bound tree (a
+    stateless plan still adapts, but re-search cold-starts).
+    """
+
+    def __init__(self, plan: PhysicalPlan, *, tile: int = 1024,
+                 use_kernel: bool = True, fused: bool = True,
+                 adaptive: bool = False,
+                 policy: Optional[AdaptivePolicy] = None, seed: int = 0):
+        self.query = plan.query
         self.tile = tile
         self.use_kernel = use_kernel
+        self.fused = fused
+        self.adaptive = adaptive
+        self.policy = policy or AdaptivePolicy()
         n = len(plan.stages)
-        # queue entries: (global idx, feature row, mask row | None)
-        self.queues: List[deque] = [deque() for _ in range(n)]
         self.emitted: List[int] = []
         self.stats = ServeStats(
             stage_in=[0] * n, stage_udf_batches=[0] * n, stage_kept=[0] * n,
             stage_proxy_ms=[0.0] * n, stage_used_kernel=[False] * n,
         )
-        self._scorer = None
-        self._cascade = None
+        self._scorer = None  # legacy per-stage kernel fallback
         if use_kernel:
             try:
-                from repro.kernels.ops import CascadeScorer, proxy_score_batch
+                from repro.kernels.ops import proxy_score_batch
             except ImportError:  # pragma: no cover - kernel optional
-                CascadeScorer = proxy_score_batch = None
-            if proxy_score_batch is not None:
-                self._scorer = proxy_score_batch
-                if fused:
-                    # a from_plan failure is a real bug — let it propagate
-                    cascade = CascadeScorer.from_plan(plan, max_tile=max(tile, 1024))
-                    # score-at-submit only pays off when every gated stage is
-                    # covered; otherwise fall back to per-stage kernel calls
-                    if cascade is not None and cascade.covers_all(plan):
-                        self._cascade = cascade
+                proxy_score_batch = None
+            self._scorer = proxy_score_batch
+        self._states: List[_PlanState] = []
+        self._install(plan)
+        # adaptive machinery
+        self._rng = np.random.RandomState(seed)
+        self._reservoir = Reservoir(
+            self.query.n, capacity=self.policy.reservoir_capacity,
+            stride=self.policy.reservoir_stride,
+        )
+        self._records_submitted = 0
+        self._last_swap_at = 0
+        self._drift: Optional[Tuple[str, float, float]] = None
+
+    # ------------------------------------------------------------ versioning
+    @property
+    def plan(self) -> PhysicalPlan:
+        return self._states[-1].plan
+
+    @property
+    def plan_version(self) -> int:
+        return self._states[-1].version
+
+    def _install(self, plan: PhysicalPlan):
+        cascade = None
+        if self.use_kernel and self.fused:
+            from repro.kernels.ops import cascade_scorer_for_plan
+
+            # a from_plan failure is a real bug — let it propagate
+            scorer, hit = cascade_scorer_for_plan(
+                plan, max_tile=max(self.tile, 1024))
+            # score-at-submit only pays off when every gated stage is
+            # covered; otherwise fall back to per-stage kernel calls
+            if scorer is not None and scorer.covers_all(plan):
+                cascade = scorer
+                self.stats.scorer_cache_hits += int(hit)
+        version = self._states[-1].version + 1 if self._states else 0
+        self._states.append(_PlanState(
+            version, plan, cascade, self.policy if self.adaptive else None))
+        # fresh drift baselines for the new plan
+        self._audit_mon = {p: _AuditMonitor(self.policy)
+                           for p in range(self.query.n)}
+        self._kappa: Dict[Tuple[int, int], StreamingKappa2] = {
+            (i, j): StreamingKappa2()
+            for i in range(self.query.n) for j in range(i + 1, self.query.n)
+        }
+        self._kappa_snapshot: Optional[Dict[Tuple[int, int], float]] = None
 
     # ------------------------------------------------------------- plumbing
     def submit(self, indices: np.ndarray, rows: np.ndarray):
-        if self._cascade is not None and len(rows):
+        cur = self._states[-1]
+        rows = np.asarray(rows, np.float32)
+        if cur.cascade is not None and len(rows):
             t0 = time.perf_counter()
-            masks = self._cascade.score_masks(np.asarray(rows, np.float32))
+            masks = cur.cascade.score_masks(rows)
             self.stats.fused_score_ms += (time.perf_counter() - t0) * 1e3
             for i, r, m in zip(indices, rows, masks):
-                self.queues[0].append((int(i), r, m))
+                cur.queues[0].append((int(i), r, m))
         else:
             for i, r in zip(indices, rows):
-                self.queues[0].append((int(i), r, None))
+                cur.queues[0].append((int(i), r, None))
+        if self.adaptive and len(rows):
+            self._observe_chunk(np.asarray(indices), rows)
+        self._records_submitted += len(rows)
 
-    def _run_stage_batch(self, si: int, batch: List):
-        stage = self.plan.stages[si]
+    def _observe_chunk(self, indices: np.ndarray, rows: np.ndarray):
+        """Reservoir-sample the chunk and audit a small unbiased subset:
+        audit records get EVERY UDF run up front (charged to the cost
+        model), yielding drift-grade selectivity/correlation statistics
+        and pre-labeled reservoir rows for re-optimization."""
+        for i, r in zip(indices, rows):
+            self._reservoir.add(int(i), r)
+        sel = self._rng.random_sample(len(rows)) < self.policy.audit_rate
+        if not sel.any():
+            return
+        xa, ia = rows[sel], indices[sel]
+        labels_by_pred = {}
+        for p, pred in enumerate(self.query.predicates):
+            labels = pred.udf(xa)
+            labels_by_pred[p] = labels
+            sigma = pred.evaluate(labels)
+            cost = len(xa) * pred.udf.cost
+            self.stats.audit_cost_ms += cost
+            self.stats.model_cost_ms += cost
+            for idx, s in zip(ia, sigma):
+                self._reservoir.observe(int(idx), p, bool(s))
+            if self._audit_mon[p].update(int(sigma.sum()), len(sigma)) \
+                    and self._may_trigger():
+                self._drift = (
+                    f"audit:sel:{p}", self._audit_mon[p].recent_rate,
+                    self._audit_mon[p].baseline,
+                )
+        for (i, j), k in self._kappa.items():
+            k.update(labels_by_pred[i], labels_by_pred[j])
+        if self._kappa_snapshot is None and all(
+                m.baseline is not None for m in self._audit_mon.values()):
+            self._kappa_snapshot = {k: v.value() for k, v in self._kappa.items()}
+        self.stats.audit_records += int(sel.sum())
+
+    def _may_trigger(self) -> bool:
+        return (
+            self.adaptive
+            and self._drift is None
+            and self._reservoir.size >= self.policy.min_reservoir
+            and (self._records_submitted - self._last_swap_at
+                 >= self.policy.cooldown_records)
+        )
+
+    def _run_stage_batch(self, state: _PlanState, si: int, batch: List):
+        stage = state.plan.stages[si]
         idxs = np.asarray([b[0] for b in batch])
         x = np.stack([b[1] for b in batch])
         mrows = [b[2] for b in batch]
         self.stats.stage_in[si] += len(batch)
+        n_enter = len(batch)
         if stage.proxy is not None:
             t0 = time.perf_counter()
-            col = self._cascade.stage_cols[si] if self._cascade is not None else None
+            col = state.cascade.stage_cols[si] if state.cascade is not None else None
             if col is not None and mrows[0] is not None:
                 # fused path: the gate was computed once at submit time
                 keep = np.asarray([m[col] for m in mrows], bool)
@@ -119,8 +302,9 @@ class CascadeServer:
             idxs, x = idxs[keep], x[keep]
             mrows = [m for m, k in zip(mrows, keep) if k]
         if len(idxs) == 0:
+            self._note_stage_outcome(state, si, 0, n_enter)
             return
-        pred = self.plan.query.predicates[stage.pred_idx]
+        pred = state.plan.query.predicates[stage.pred_idx]
         labels = pred.udf(x)
         self.stats.model_cost_ms += len(x) * pred.udf.cost
         self.stats.stage_udf_batches[si] += 1
@@ -129,25 +313,110 @@ class CascadeServer:
         survivors = [
             (int(i), r, m) for i, r, m, p in zip(idxs, x, mrows, passed) if p
         ]
-        if si + 1 < len(self.plan.stages):
-            self.queues[si + 1].extend(survivors)
+        self._note_stage_outcome(state, si, len(survivors), n_enter)
+        if si + 1 < len(state.plan.stages):
+            state.queues[si + 1].extend(survivors)
         else:
             self.emitted.extend(i for i, _, _ in survivors)
             self.stats.emitted += len(survivors)
 
-    def pump(self, *, drain: bool = False):
-        """Run every stage whose queue holds >= one full tile.  Steady state
-        drains later stages first (keeps output latency low); the end-of-
-        stream drain runs FORWARD so survivors flow through every stage."""
-        n = len(self.plan.stages)
+    def _note_stage_outcome(self, state: _PlanState, si: int, kept: int,
+                            seen: int):
+        """Per-stage combined keep-rate (proxy gate AND predicate) vs the
+        plan's estimate ``s_i * alpha_i`` — the conditioned drift signal."""
+        state.stage_rate[si].update(kept, seen)
+        if state.stage_cusum is None or state is not self._states[-1]:
+            return  # superseded versions just drain; no drift bookkeeping
+        batch_rate = kept / seen if seen else 0.0
+        if state.stage_cusum[si].update(
+                batch_rate, state.expected_keep(si), seen) \
+                and self._may_trigger():
+            # record the BATCH rate: the escalation decision reads the
+            # magnitude of the fresh deviation, not the diluted cumulative
+            self._drift = (
+                f"stage{si}:keep", batch_rate, state.expected_keep(si),
+            )
+
+    def _pump_state(self, state: _PlanState, *, drain: bool):
+        """Steady state drains later stages first (keeps output latency
+        low); drains run FORWARD so survivors flow through every stage."""
+        n = len(state.plan.stages)
         order = range(n) if drain else reversed(range(n))
         for si in order:
-            q = self.queues[si]
+            q = state.queues[si]
             while len(q) >= self.tile or (drain and q):
                 take = min(self.tile, len(q))
                 batch = [q.popleft() for _ in range(take)]
-                self._run_stage_batch(si, batch)
+                self._run_stage_batch(state, si, batch)
 
+    def pump(self, *, drain: bool = False):
+        """Run every stage whose queue holds >= one full tile.  Superseded
+        plan versions flush completely first — their in-flight entries
+        finish under the plan (and masks) that scored them."""
+        for state in self._states[:-1]:
+            self._pump_state(state, drain=True)
+        self._states = [s for s in self._states
+                        if s is self._states[-1] or not s.empty()]
+        self._pump_state(self._states[-1], drain=drain)
+
+    # ----------------------------------------------------------- adaptivity
+    def _escalate(self, observed: float, expected: float) -> Tuple[str, bool]:
+        """Decide re-optimization depth: correlation-structure drift or a
+        large rate shift re-opens the ORDER question (warm branch-and-
+        bound resume); a mild shift only re-tunes thresholds/alphas on the
+        incumbent order (re-allocation)."""
+        if self.policy.escalate in ("alloc", "bnb"):
+            return self.policy.escalate, self.policy.escalate == "bnb"
+        if abs(observed - expected) > self.policy.sel_tol:
+            return "bnb", True
+        if self._kappa_snapshot is not None:
+            for key, k in self._kappa.items():
+                if abs(k.value() - self._kappa_snapshot[key]) > self.policy.kappa_tol:
+                    return "bnb", True
+        for mon in self._audit_mon.values():
+            if mon.baseline is not None and \
+                    abs(mon.recent_rate - mon.baseline) > self.policy.sel_tol:
+                return "bnb", True
+        return "alloc", False
+
+    def maybe_reoptimize(self) -> bool:
+        """Re-optimize and hot-swap if a drift trigger is pending.  Called
+        between chunks by ``run_stream``; external drivers can call it at
+        any batch boundary."""
+        if not (self.adaptive and self._drift):
+            return False
+        from repro.core.optimizer import reoptimize
+
+        signal, observed, expected = self._drift
+        mode, escalated = self._escalate(observed, expected)
+        old = self._states[-1]
+        t0 = time.perf_counter()
+        x_s, known_sigma = self._reservoir.sample()
+        new_plan = reoptimize(old.plan, x_s, known_sigma=known_sigma,
+                              mode=mode, step=self.policy.step)
+        reopt_ms = (time.perf_counter() - t0) * 1e3
+        self.stats.reopt_ms += reopt_ms
+        # the builder's UDF labeling on reservoir rows is real model work
+        for p, cnt in new_plan.meta["stats"]["udf_calls"].items():
+            charge = cnt * self.query.predicates[p].udf.cost
+            self.stats.reopt_udf_cost_ms += charge
+            self.stats.model_cost_ms += charge
+        self._install(new_plan)
+        self.stats.plan_swaps += 1
+        trace = new_plan.meta.get("trace") or {}
+        self.stats.drift_events.append(DriftEvent(
+            at_record=self._records_submitted, signal=signal,
+            observed=float(observed), expected=float(expected),
+            escalated=escalated, reopt_ms=reopt_ms,
+            nodes_visited=int(trace.get("nodes_visited", 0)),
+            plan_version=self._states[-1].version,
+            order_before=old.plan.order, order_after=new_plan.order,
+        ))
+        self._last_swap_at = self._records_submitted
+        self._drift = None
+        return True
+
+    # -------------------------------------------------------------- driver
     def run_stream(self, x: np.ndarray, *, chunk: int = 4096) -> ServeStats:
         t0 = time.perf_counter()
         n = x.shape[0]
@@ -155,6 +424,8 @@ class CascadeServer:
             idx = np.arange(s, min(s + chunk, n))
             self.submit(idx, x[idx])
             self.pump()
+            if self.adaptive:
+                self.maybe_reoptimize()
         self.pump(drain=True)
         self.stats.wall_ms = (time.perf_counter() - t0) * 1e3
         self.stats.rejected = n - self.stats.emitted

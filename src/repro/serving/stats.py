@@ -1,0 +1,166 @@
+"""Streaming statistics for the adaptive serving loop (DESIGN.md §4).
+
+The server maintains, per installed plan version:
+
+* ``StreamingRate`` per stage — observed proxy keep-rates and UDF pass
+  rates, compared against the plan's ``est_reduction`` /
+  ``est_selectivity``;
+* ``CusumDetector`` per signal — a one-sided CUSUM on the absolute
+  deviation between observed and expected rates, so a sustained shift
+  triggers re-optimization while sampling noise does not;
+* ``Reservoir`` — a strided ring buffer of recent feature rows (with any
+  UDF labels the server has already paid for) that becomes the fresh
+  optimization sample when drift fires;
+* pairwise ``StreamingKappa2`` (core/correlation.py) over audited label
+  columns — a shift in predicate correlation structure escalates the
+  cheap re-allocation to a warm-started branch-and-bound re-search.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class AdaptivePolicy:
+    """Knobs for drift detection and re-optimization."""
+
+    slack: float = 0.08  # deviation below this is ignored (CUSUM drift term)
+    threshold: float = 120.0  # cumulative deviation-weighted records to trigger
+    audit_rate: float = 0.02  # fraction of records with ALL UDFs run (unbiased stats)
+    audit_baseline: int = 200  # audit records that freeze the reference rates
+    audit_window: int = 400  # recent-audit window for the escalation decision
+    reservoir_capacity: int = 1024
+    reservoir_stride: int = 2  # keep every k-th record (widens the recency window)
+    min_reservoir: int = 256  # don't re-optimize on fewer sampled rows
+    cooldown_records: int = 2048  # records between consecutive swaps
+    kappa_tol: float = 0.08  # |kappa^2 shift| that escalates alloc -> B&B resume
+    sel_tol: float = 0.15  # unconditional selectivity shift that escalates
+    step: float = 0.05  # Algorithm-1 grid for re-optimization
+    escalate: str = "auto"  # "auto" | "alloc" | "bnb"
+
+
+class StreamingRate:
+    """Chunk-wise keep-rate estimator: exactly matches the batch empirical
+    rate over the same rows, regardless of chunking."""
+
+    def __init__(self):
+        self.kept = 0
+        self.seen = 0
+
+    def update(self, kept: int, seen: int) -> None:
+        self.kept += int(kept)
+        self.seen += int(seen)
+
+    @property
+    def rate(self) -> float:
+        return self.kept / self.seen if self.seen else 0.0
+
+
+class CusumDetector:
+    """One-sided CUSUM on |observed - expected| with a slack deadband.
+
+    ``update`` folds one batch: the score grows by
+    ``weight * (|obs - exp| - slack)`` and is clamped at zero, so short
+    noise bursts decay while a sustained shift accumulates to the
+    threshold.  ``weight`` is the number of records in the batch — the
+    threshold therefore reads as "deviation-weighted records".
+    """
+
+    def __init__(self, slack: float, threshold: float):
+        self.slack = slack
+        self.threshold = threshold
+        self.score = 0.0
+
+    def update(self, observed: float, expected: float, weight: float) -> bool:
+        dev = abs(observed - expected) - self.slack
+        self.score = max(0.0, self.score + weight * dev)
+        return self.score >= self.threshold
+
+    def reset(self) -> None:
+        self.score = 0.0
+
+
+class Reservoir:
+    """Strided ring buffer of recent stream rows + observed sigma labels.
+
+    Every ``stride``-th submitted record lands in a slot (round-robin), so
+    the buffer always holds the last ``capacity * stride`` records'
+    subsample — recency is what drift re-optimization needs, not a uniform
+    all-history sample.  ``observe`` attaches per-predicate sigma outcomes
+    for rows whose UDFs the server has already run (audit records mainly);
+    those labels seed the rebased ProxyBuilder so re-optimization does not
+    re-pay UDF calls it already made.
+    """
+
+    def __init__(self, n_preds: int, capacity: int = 1024, stride: int = 2):
+        self.n_preds = n_preds
+        self.capacity = capacity
+        self.stride = max(1, stride)
+        self._rows: List[Optional[np.ndarray]] = [None] * capacity
+        self._known: List[np.ndarray] = [np.zeros(capacity, bool)
+                                         for _ in range(n_preds)]
+        self._sigma: List[np.ndarray] = [np.zeros(capacity, bool)
+                                         for _ in range(n_preds)]
+        self._slot_of: Dict[int, int] = {}  # global record idx -> slot
+        self._idx_at: List[Optional[int]] = [None] * capacity
+        self._tick = 0
+        self._write = 0
+
+    def add(self, idx: int, row: np.ndarray) -> bool:
+        """Offer one record; returns True when it was sampled in."""
+        take = self._tick % self.stride == 0
+        self._tick += 1
+        if not take:
+            return False
+        slot = self._write % self.capacity
+        self._write += 1
+        old = self._idx_at[slot]
+        if old is not None:
+            self._slot_of.pop(old, None)
+        self._rows[slot] = np.asarray(row, np.float32)
+        self._idx_at[slot] = int(idx)
+        self._slot_of[int(idx)] = slot
+        for p in range(self.n_preds):
+            self._known[p][slot] = False
+            self._sigma[p][slot] = False
+        return True
+
+    def observe(self, idx: int, pred_idx: int, sigma: bool) -> None:
+        slot = self._slot_of.get(int(idx))
+        if slot is None:
+            return
+        self._known[pred_idx][slot] = True
+        self._sigma[pred_idx][slot] = bool(sigma)
+
+    @property
+    def size(self) -> int:
+        return sum(r is not None for r in self._rows)
+
+    def sample(self) -> Tuple[np.ndarray, Dict[int, Tuple[np.ndarray, np.ndarray]]]:
+        """(x (M, F), {pred_idx: (known_mask (M,), sigma (M,))})."""
+        slots = [s for s, r in enumerate(self._rows) if r is not None]
+        x = np.stack([self._rows[s] for s in slots])
+        known_sigma = {
+            p: (self._known[p][slots].copy(), self._sigma[p][slots].copy())
+            for p in range(self.n_preds)
+        }
+        return x, known_sigma
+
+
+@dataclass
+class DriftEvent:
+    """One trigger of the drift detector (recorded in ServeStats)."""
+
+    at_record: int
+    signal: str  # e.g. "stage1:udf", "stage0:proxy", "audit:sel:2"
+    observed: float
+    expected: float
+    escalated: bool  # True -> warm B&B resume, False -> re-allocation
+    reopt_ms: float = 0.0
+    nodes_visited: int = 0
+    plan_version: int = 0
+    order_before: tuple = ()
+    order_after: tuple = ()

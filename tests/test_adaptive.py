@@ -1,0 +1,149 @@
+"""Adaptive serving: warm-started B&B resume, drift-triggered mid-stream
+plan swaps (conservation under versioned masks), and the end-to-end
+throughput/accuracy win on an order-inverting drifting stream."""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))  # benchmarks/
+
+from repro.core import BranchAndBound, ProxyBuilder, optimize, reoptimize
+from repro.data.synthetic import (
+    make_dataset,
+    make_drifting_stream,
+    make_query,
+    make_udfs,
+)
+from repro.serving.engine import CascadeServer
+from repro.serving.stats import AdaptivePolicy
+
+
+@pytest.fixture(scope="module")
+def drift_workload():
+    ds = make_dataset(n=9000, n_features=64, n_columns=3, correlation=0.9,
+                      feature_noise=0.9, label_noise=0.2, seed=41)
+    udfs = make_udfs(ds, hidden=16, depth=1, train_rows=1200, seed=41,
+                     declared_cost_ms=10.0)
+    q = make_query(ds, udfs, columns=[0, 1, 2], target_selectivity=0.5,
+                   accuracy_target=0.9, seed=42)
+    stream = make_drifting_stream(
+        ds, 3000, 9000, shift_targets={0: 2.8, 1: -2.6, 2: 2.8},
+        corr_gain=2.5, seed=41,
+    )
+    return ds, q, stream
+
+
+def _plan(q, ds, rows=1500):
+    return optimize(q, ds.x[:rows], mode="core", step=0.05, keep_state=True)
+
+
+# --------------------------------------------------------- warm-started B&B
+def test_resume_unchanged_stats_identical_plan_no_work(drift_workload):
+    """resume() with no new builder: the persisted candidate set and node
+    states are final — identical plan, zero new L/M visits (trivially <=
+    the cold search's count)."""
+    ds, q, _ = drift_workload
+    plan = _plan(q, ds)
+    bb = plan.meta["bnb"]
+    cold_visits = plan.meta["trace"]["nodes_visited"]
+    alloc, tr = bb.resume()
+    assert alloc.order == plan.order
+    assert alloc.alphas == tuple(s.alpha for s in plan.stages)
+    assert tr.nodes_visited == 0
+    assert tr.nodes_visited <= cold_visits
+
+
+def test_resume_on_drifted_stats_visits_fewer_nodes():
+    """Warm resume against a drifted sample re-searches (the drift inverts
+    the order optimum, and the resume finds the same order a cold search
+    does), but the previous tree's slack-widened bounds still prune
+    harder: strictly fewer L/M node visits than cold-starting."""
+    from benchmarks.bench_adaptive import drift_scenario
+
+    ds, q, stream = drift_scenario(n_before=3_000, n_after=6_000)
+    plan = optimize(q, ds.x[:2000], mode="core", step=0.05, keep_state=True)
+    drifted = stream.x[stream.boundary:stream.boundary + 2000]
+    warm_builder = plan.meta["builder"].rebase(drifted)
+    warm_alloc, warm_tr = plan.meta["bnb"].resume(warm_builder)
+    cold_builder = ProxyBuilder(q, drifted, seed=0)
+    cold_alloc, cold_tr = BranchAndBound(
+        cold_builder, q.accuracy_target, step=0.05).run()
+    assert warm_tr.nodes_visited >= 1  # it actually re-measured something
+    assert warm_tr.nodes_visited < cold_tr.nodes_visited
+    # adapted, not stale-stuck: both searches agree the drift moved a new
+    # predicate to the front (the tail can differ on near-ties)
+    assert warm_alloc.order != plan.order
+    assert warm_alloc.order[0] == cold_alloc.order[0]
+    assert len(warm_alloc.order) == q.n
+
+
+def test_reoptimize_alloc_bumps_version_keeps_query(drift_workload):
+    ds, q, stream = drift_workload
+    plan = _plan(q, ds)
+    fresh = stream.x[stream.boundary:stream.boundary + 1000]
+    new = reoptimize(plan, fresh, mode="alloc")
+    assert new.meta["plan_version"] == plan.meta["plan_version"] + 1
+    assert new.query is q
+    assert sorted(new.order) == sorted(plan.order)
+    assert "builder" in new.meta  # state carried for the next warm resume
+
+
+def test_scorer_compile_cache_hits_on_reswap(drift_workload):
+    from repro.kernels.ops import cascade_scorer_for_plan
+
+    ds, q, _ = drift_workload
+    plan = optimize(q, ds.x[:800], mode="core-a", step=0.05)
+    s1, hit1 = cascade_scorer_for_plan(plan)
+    s2, hit2 = cascade_scorer_for_plan(plan)
+    assert not hit1 and hit2
+    assert s1 is s2
+
+
+# ------------------------------------------------- mid-stream swap semantics
+@pytest.mark.parametrize("tile,chunk", [(64, 400), (257, 700), (512, 2048)])
+def test_adaptive_swap_conservation(drift_workload, tile, chunk):
+    """Across drift-triggered hot swaps, every record is rejected-or-
+    emitted exactly once: in-flight entries finish under their own plan
+    version's mask rows (no mask-version mixups -> no loss, no dupes)."""
+    ds, q, stream = drift_workload
+    plan = _plan(q, ds)
+    policy = AdaptivePolicy(
+        cooldown_records=1024, min_reservoir=128, threshold=50.0,
+        audit_rate=0.03, reservoir_capacity=512, escalate="bnb",
+    )
+    srv = CascadeServer(plan, tile=tile, use_kernel=True, adaptive=True,
+                        policy=policy, seed=3)
+    stats = srv.run_stream(stream.x, chunk=chunk)
+    assert stats.plan_swaps >= 1  # the drift actually triggered a swap
+    assert stats.emitted + stats.rejected == stream.n
+    assert len(srv.emitted) == stats.emitted
+    assert len(set(srv.emitted)) == len(srv.emitted)
+
+
+def test_adaptive_off_is_bit_identical_to_static(drift_workload):
+    """adaptive=False must stay the PR-1 engine: same emissions, no audit
+    cost, no swaps — the adaptive machinery is pay-for-use."""
+    ds, q, stream = drift_workload
+    x = stream.x[:4000]
+    a = CascadeServer(_plan(q, ds), tile=257, use_kernel=True)
+    sa = a.run_stream(x, chunk=900)
+    assert sa.plan_swaps == 0 and sa.audit_records == 0
+    assert sa.emitted + sa.rejected == len(x)
+
+
+# ------------------------------------------------------ end-to-end drift win
+@pytest.mark.slow
+def test_adaptive_beats_static_and_meets_accuracy():
+    """Acceptance: >=1.3x cost-model throughput over the frozen plan on the
+    drifting stream, accuracy target still met, warm resume strictly
+    cheaper than cold B&B.  Same scenario the regression gate records in
+    BENCH_components.json."""
+    from benchmarks.bench_adaptive import bench_adaptive_throughput
+
+    out = bench_adaptive_throughput()
+    assert out["plan_swaps"] >= 1
+    assert out["adaptive_speedup"] >= 1.3, out
+    assert out["adaptive_accuracy"] >= out["accuracy_target"], out
+    assert out["warm_nodes"] < out["cold_nodes"], out

@@ -1,0 +1,78 @@
+"""Streaming statistics must be chunking-invariant: feeding the same rows
+in ANY split yields exactly the batch statistic (the adaptive serving
+loop's drift signals are only trustworthy if the incremental estimators
+agree with their batch definitions)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.correlation import StreamingKappa2, correlation_score
+from repro.serving.stats import Reservoir, StreamingRate
+
+
+def _random_chunks(n, n_chunks, rng):
+    """Split range(n) into n_chunks contiguous pieces (some may be empty)."""
+    cuts = sorted(rng.randint(0, n + 1) for _ in range(max(n_chunks - 1, 0)))
+    bounds = [0] + list(cuts) + [n]
+    return [(bounds[i], bounds[i + 1]) for i in range(len(bounds) - 1)]
+
+
+@given(
+    n=st.integers(8, 400),
+    d1=st.integers(1, 6),
+    d2=st.integers(1, 6),
+    n_chunks=st.integers(1, 9),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=40, deadline=None)
+def test_streaming_kappa2_matches_batch_any_chunking(n, d1, d2, n_chunks, seed):
+    rng = np.random.RandomState(seed)
+    col1 = rng.randint(0, d1, size=n)
+    col2 = rng.randint(0, d2, size=n)
+    sk = StreamingKappa2()
+    for lo, hi in _random_chunks(n, n_chunks, rng):
+        sk.update(col1[lo:hi], col2[lo:hi])
+    batch = correlation_score(col1, col2, sample=n + 1)  # no subsampling
+    assert abs(sk.value() - batch) < 1e-9, (sk.value(), batch)
+
+
+@given(
+    n=st.integers(1, 500),
+    p=st.floats(0.0, 1.0),
+    n_chunks=st.integers(1, 9),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=40, deadline=None)
+def test_streaming_rate_matches_empirical_any_chunking(n, p, n_chunks, seed):
+    rng = np.random.RandomState(seed)
+    kept = rng.random_sample(n) < p
+    sr = StreamingRate()
+    for lo, hi in _random_chunks(n, n_chunks, rng):
+        sr.update(int(kept[lo:hi].sum()), hi - lo)
+    assert sr.seen == n
+    assert sr.rate == kept.mean() if n else sr.rate == 0.0
+
+
+def test_streaming_kappa2_empty_and_single_valued():
+    sk = StreamingKappa2()
+    assert sk.value() == 0.0
+    sk.update(np.zeros(10, int), np.arange(10) % 3)
+    # one column is constant -> min(d1, d2) < 2 -> zero, same as batch
+    assert sk.value() == correlation_score(np.zeros(10, int), np.arange(10) % 3)
+
+
+def test_reservoir_recency_and_labels():
+    r = Reservoir(n_preds=2, capacity=8, stride=2)
+    for i in range(64):
+        r.add(i, np.full(3, i, np.float32))
+    # strided ring: holds a subsample of the most recent capacity*stride rows
+    x, known = r.sample()
+    assert len(x) == 8
+    assert x[:, 0].min() >= 64 - 8 * 2
+    # labels attach only while the row is resident, keyed by global idx
+    newest = int(x[:, 0].max())
+    r.observe(newest, 0, True)
+    r.observe(3, 0, True)  # long-evicted: must be ignored
+    x2, known2 = r.sample()
+    row_pos = int(np.flatnonzero(x2[:, 0] == newest)[0])
+    assert known2[0][0][row_pos] and known2[0][1][row_pos]
+    assert known2[0][0].sum() == 1
