@@ -91,8 +91,80 @@ def bench_proxy_throughput(*, n_rows: int = 24_576, n_features: int = 64,
     return out
 
 
+def bench_mlp_throughput(*, n_rows: int = 49_152, n_features: int = 64,
+                         batch_size: int = 8192, seed: int = 7) -> dict:
+    """Fused-MLP vs reference-MLP cascade proxy throughput.
+
+    The unified ProxyFamily format put MLP proxies on the fused Pallas
+    scorer (they used to silently drop to the per-stage reference path).
+    Methodology differs from the linear gate deliberately: one WARMED
+    SINGLE PASS over an unseen stream, because that is what serving does —
+    every microbatch has fresh survivor counts, so the reference path's
+    per-shape ``jax.jit`` retraces recur forever, while the fused path's
+    bucket-padded static shapes never retrace (DESIGN.md §3, hidden cost
+    4).  Best-of-N over identical batches would amortize exactly the cost
+    the fused path is designed to remove.
+    """
+    ds = make_dataset(n=n_rows + 4000, n_features=n_features, n_columns=4,
+                      correlation=0.9, feature_noise=1.1, label_noise=0.25,
+                      seed=seed)
+    udfs = make_udfs(ds, hidden=16, depth=1, train_rows=1500, seed=seed,
+                     declared_cost_ms=20.0)
+    q = make_query(ds, udfs, columns=[0, 1, 2], target_selectivity=0.5,
+                   accuracy_target=0.9, seed=seed)
+    plan = optimize(q, ds.x[:2000], mode="core-a", step=0.05, kind="mlp")
+    assert all(s.proxy.family == "mlp1" for s in plan.stages)
+    x = ds.x[4000:4000 + n_rows]
+
+    def measure_stream(use_kernel: bool, fused: bool):
+        # warm on one microbatch (pack caches, bucket jit programs, the
+        # reference path's first-shape traces), then ONE timed pass over
+        # the unseen remainder — serving never sees a batch twice
+        execute_plan(plan, x[:batch_size], batch_size=batch_size,
+                     use_kernel=use_kernel, fused=fused)
+        res = execute_plan(plan, x[batch_size:], batch_size=batch_size,
+                           use_kernel=use_kernel, fused=fused)
+        return res.proxy_total_ms, res
+
+    ref_ms, ref_res = measure_stream(use_kernel=False, fused=False)
+    fus_ms, fus_res = measure_stream(use_kernel=True, fused=True)
+    # the fused path folds the standardizer into the first layer — a f32
+    # reassociation that agrees with standardize-then-score only to ~1e-4,
+    # so a record whose score sits exactly on a threshold may flip; allow
+    # boundary ties but nothing that could hide a real mask bug
+    diff = set(ref_res.passed.tolist()) ^ set(fus_res.passed.tolist())
+    assert len(diff) <= max(3, n_rows // 1000), \
+        f"fused and reference MLP paths disagree on {len(diff)} records"
+    assert all(s.used_kernel for s in fus_res.stages), \
+        "fused MLP run silently fell back off the kernel path"
+    assert not any(s.used_kernel for s in ref_res.stages)
+    n_meas = n_rows - batch_size
+    out = {
+        "n_rows": n_meas,
+        "n_features": n_features,
+        "n_stages": len(plan.stages),
+        "batch_size": batch_size,
+        "hidden_widths": [s.proxy.packed().hidden for s in plan.stages],
+        "reference_proxy_ms": ref_ms,
+        "fused_proxy_ms": fus_ms,
+        "reference_rows_per_s": n_meas / (ref_ms / 1e3),
+        "fused_rows_per_s": n_meas / (fus_ms / 1e3),
+        "mlp_fused_speedup": ref_ms / fus_ms,
+        "fused_used_kernel": [s.used_kernel for s in fus_res.stages],
+    }
+    csv_row(
+        "mlp_fused_throughput", out["fused_rows_per_s"],
+        (
+            f"rows_per_s={out['fused_rows_per_s']:.0f};"
+            f"reference_rows_per_s={out['reference_rows_per_s']:.0f};"
+            f"speedup={out['mlp_fused_speedup']:.2f}x"
+        ),
+    )
+    return out
+
+
 def write_bench_json(throughput: dict, adaptive: dict | None = None,
-                     path: Path = BENCH_JSON) -> None:
+                     mlp: dict | None = None, path: Path = BENCH_JSON) -> None:
     payload = {
         "bench": "components",
         "proxy_throughput": throughput,
@@ -100,6 +172,8 @@ def write_bench_json(throughput: dict, adaptive: dict | None = None,
     }
     if adaptive is not None:
         payload["adaptive_drift"] = adaptive
+    if mlp is not None:
+        payload["mlp_proxy_throughput"] = mlp
     path.write_text(json.dumps(payload, indent=2) + "\n")
 
 
@@ -108,10 +182,11 @@ def run(quick: bool = True):
 
     throughput = bench_proxy_throughput(
         n_rows=24_576 if quick else 98_304)
+    mlp = bench_mlp_throughput(n_rows=24_576 if quick else 49_152)
     # full-size regardless of ``quick``: the gated 1.3x floor only holds
     # on the full drifted segment (see check_regression.py)
     adaptive = bench_adaptive_throughput()
-    write_bench_json(throughput, adaptive)
+    write_bench_json(throughput, adaptive, mlp)
     csv_row(
         "adaptive_drift_throughput", adaptive["adaptive_rows_per_cost_s"],
         (

@@ -14,6 +14,12 @@ regresses against the checked-in baseline
     host-dependent and therefore ADVISORY (a warning) by default; it
     becomes enforcing when ``REGRESSION_MIN_ROWS_PER_S`` is set
     explicitly for a pinned CI host, or
+  * fused-MLP/reference-MLP single-pass streaming speedup below
+    ``min_mlp_speedup`` — the unified ProxyFamily scorer must beat the
+    old per-stage reference path MLP proxies used to fall back to
+    (warmed single pass over an unseen stream: the reference's per-shape
+    retraces are a real recurring serving cost, the fused path's
+    bucket-padded shapes never retrace), or
   * adaptive-vs-static cost-model speedup on the drifting stream below
     ``min_adaptive_speedup``, the adaptive plan missing the query's
     accuracy target, or the warm-started re-search failing to visit
@@ -22,7 +28,7 @@ regresses against the checked-in baseline
 
 Usage: python benchmarks/check_regression.py [--quick]
 Env overrides: REGRESSION_MIN_ROWS_PER_S, REGRESSION_MIN_SPEEDUP,
-REGRESSION_MIN_ADAPTIVE_SPEEDUP.
+REGRESSION_MIN_MLP_SPEEDUP, REGRESSION_MIN_ADAPTIVE_SPEEDUP.
 """
 from __future__ import annotations
 
@@ -36,6 +42,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 from benchmarks.bench_adaptive import bench_adaptive_throughput  # noqa: E402
 from benchmarks.bench_components import (  # noqa: E402
     BENCH_JSON,
+    bench_mlp_throughput,
     bench_proxy_throughput,
     write_bench_json,
 )
@@ -47,13 +54,14 @@ def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     quick = "--quick" in argv
     throughput = bench_proxy_throughput(n_rows=24_576 if quick else 49_152)
+    mlp = bench_mlp_throughput(n_rows=24_576 if quick else 49_152)
     # deliberately NOT shrunk by --quick: the 1.3x floor is an acceptance
     # invariant of the FULL drifting stream — a shorter drifted segment
     # dilutes the stale-plan span the adaptation amortizes against
     # (measured 1.25x at n_after=18k vs 1.38x at 30k), so a quick run
     # would fail the gate without any code regression
     adaptive = bench_adaptive_throughput()
-    write_bench_json(throughput, adaptive)
+    write_bench_json(throughput, adaptive, mlp)
     print(f"wrote {BENCH_JSON}")
 
     base = json.loads(BASELINE.read_text())
@@ -61,10 +69,21 @@ def main(argv=None) -> int:
     min_rows = float(rows_env) if rows_env else float(base["min_fused_rows_per_s"])
     min_speedup = float(os.environ.get(
         "REGRESSION_MIN_SPEEDUP", base["min_speedup"]))
+    min_mlp = float(os.environ.get(
+        "REGRESSION_MIN_MLP_SPEEDUP", base["min_mlp_speedup"]))
     min_adaptive = float(os.environ.get(
         "REGRESSION_MIN_ADAPTIVE_SPEEDUP", base["min_adaptive_speedup"]))
 
     failures = []
+    if mlp["mlp_fused_speedup"] < min_mlp:
+        failures.append(
+            f"fused-MLP/reference-MLP speedup {mlp['mlp_fused_speedup']:.2f}x "
+            f"< floor {min_mlp:.2f}x"
+        )
+    if not all(mlp["fused_used_kernel"]):
+        failures.append(
+            f"fused MLP run fell off the kernel path: {mlp['fused_used_kernel']}"
+        )
     if adaptive["adaptive_speedup"] < min_adaptive:
         failures.append(
             f"adaptive/static drift speedup {adaptive['adaptive_speedup']:.2f}x "
@@ -106,7 +125,9 @@ def main(argv=None) -> int:
     print(
         f"OK: fused {throughput['fused_rows_per_s']:.0f} rows/s "
         f"({throughput['speedup']:.2f}x over per-stage; floors: "
-        f"{min_rows:.0f} rows/s, {min_speedup:.2f}x); adaptive drift "
+        f"{min_rows:.0f} rows/s, {min_speedup:.2f}x); fused-MLP "
+        f"{mlp['mlp_fused_speedup']:.2f}x over reference (floor "
+        f"{min_mlp:.2f}x); adaptive drift "
         f"{adaptive['adaptive_speedup']:.2f}x over static (floor "
         f"{min_adaptive:.2f}x), accuracy {adaptive['adaptive_accuracy']:.3f} "
         f">= {adaptive['accuracy_target']}, warm B&B "

@@ -44,7 +44,11 @@ def ns_plan(query: Query, x_sample: np.ndarray, *, kind: str = "svm",
     for i in range(query.n):
         conj &= builder.sigma_mask(i, rows)
     t1 = time.perf_counter()
-    proxy = train_proxy(builder.x, conj, pred_idx=-1, d=(), kind=kind, seed=seed)
+    # the single conjunction proxy has no per-predicate family assignment;
+    # "mixed" / per-predicate maps degrade to linear (builder.family_for
+    # needs a pred index)
+    conj_kind = kind if isinstance(kind, str) and kind != "mixed" else "linear"
+    proxy = train_proxy(builder.x, conj, pred_idx=-1, d=(), kind=conj_kind, seed=seed)
     training_ms = (time.perf_counter() - t1) * 1e3
     A = query.accuracy_target
     stages = [

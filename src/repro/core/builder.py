@@ -23,6 +23,7 @@ from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.proxy import ProxyModel, train_proxy
+from repro.core.proxy_family import get_family
 from repro.core.query import Query
 from repro.training.proxy_models import f1_score
 
@@ -58,7 +59,14 @@ class ProxyBuilder:
                  reuse_classifiers: bool = True):
         """``reuse_samples=False`` / ``reuse_classifiers=False`` disable the
         paper's two reuse mechanisms (§4.3 / §4.4) — used by the ablation
-        benchmark to quantify what each saves."""
+        benchmark to quantify what each saves.
+
+        ``kind`` selects the proxy family per predicate: a family name or
+        alias ("svm"/"linear", "mlp"/"mlp1") applies to every predicate;
+        "mixed" alternates linear / mlp1 by predicate index (the CLI's
+        mixed-cascade exercise path); a ``{pred_idx: family}`` dict pins
+        families explicitly (how ``reoptimize`` preserves an incumbent
+        plan's exact per-predicate assignment)."""
         self.query = query
         self.x = np.asarray(x_sample, np.float32)
         self.n = self.x.shape[0]
@@ -73,12 +81,23 @@ class ProxyBuilder:
         self._labels: Dict[int, np.ndarray] = {}  # pred -> sigma bool per row
         # materialized sigma-filtered samples, keyed by frozenset of preds
         self._sigma_rows: Dict[FrozenSet[int], np.ndarray] = {frozenset(): np.arange(self.n)}
-        # classifier cache: (pred, frozenset(prefix)) -> (ProxyModel, phi_star).
-        # phi_star is the scorer's F1 on the sample it was trained against,
-        # recorded at insert time, so the Eq.-4.7 eps-approx test does not
-        # reference row indices of any particular sample — the cache stays
-        # valid when transplanted onto a fresh sample via ``rebase``.
-        self._proxies: Dict[Tuple[int, FrozenSet[int]], Tuple[ProxyModel, float]] = {}
+        # classifier cache: (pred, frozenset(prefix), family) ->
+        # (ProxyModel, phi_star).  phi_star is the scorer's F1 on the
+        # sample it was trained against, recorded at insert time, so the
+        # Eq.-4.7 eps-approx test does not reference row indices of any
+        # particular sample — the cache stays valid when transplanted onto
+        # a fresh sample via ``rebase``.  Keying on the FAMILY (not just
+        # the predicate) means a builder whose kind changed, or a mixed
+        # cascade, never reuses a classifier across families.
+        self._proxies: Dict[Tuple[int, FrozenSet[int], str], Tuple[ProxyModel, float]] = {}
+
+    def family_for(self, pred_idx: int) -> str:
+        """Canonical family name training predicate ``pred_idx``'s proxy."""
+        if isinstance(self.kind, dict):
+            return get_family(self.kind.get(pred_idx, "svm")).name
+        if self.kind == "mixed":
+            return "linear" if pred_idx % 2 == 0 else "mlp1"
+        return get_family(self.kind).name
 
     # ------------------------------------------------------------- labeling
     def sigma_mask(self, pred_idx: int, rows: np.ndarray) -> np.ndarray:
@@ -145,7 +164,8 @@ class ProxyBuilder:
             if len(rows) == 0:
                 break
             rows = rows[proxy.mask(self.x[rows], alpha)]
-        key = (pred_idx, frozenset(prefix))
+        family = self.family_for(pred_idx)
+        key = (pred_idx, frozenset(prefix), family)
         labels = self.sigma_mask(pred_idx, rows)
         if key in self._proxies and self.reuse_classifiers:
             cached, phi_star = self._proxies[key]
@@ -157,7 +177,7 @@ class ProxyBuilder:
                 return cached, rows
         t0 = time.perf_counter()
         proxy = train_proxy(
-            self.x[rows], labels, pred_idx, tuple(prefix), kind=self.kind,
+            self.x[rows], labels, pred_idx, tuple(prefix), kind=family,
             seed=self.seed + pred_idx,
         )
         self.stats.training_ms += (time.perf_counter() - t0) * 1e3

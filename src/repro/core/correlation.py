@@ -38,13 +38,22 @@ class StreamingKappa2:
     CORDS formula.  Because the statistic depends only on the accumulated
     table, any chunking of the same rows produces the identical value as
     ``correlation_score`` with sampling disabled.
+
+    ``weights`` (optional, per-row) accumulate a WEIGHTED contingency
+    table: the adaptive server's audit labels arrive importance-sampled
+    toward proxy thresholds, and folding each row at its inverse audit
+    propensity makes the table a Horvitz-Thompson estimate of the
+    population contingency — so a shift in the score distribution alone
+    (which changes the audited subset's composition, not the true label
+    correlation) does not masquerade as a kappa^2 drift.
     """
 
     def __init__(self):
-        self.counts: Dict[Tuple[int, int], int] = {}
-        self.n = 0
+        self.counts: Dict[Tuple[int, int], float] = {}
+        self.n = 0.0
 
-    def update(self, col1: np.ndarray, col2: np.ndarray) -> None:
+    def update(self, col1: np.ndarray, col2: np.ndarray,
+               weights: np.ndarray = None) -> None:
         col1 = np.asarray(col1).ravel()
         col2 = np.asarray(col2).ravel()
         if len(col1) != len(col2):
@@ -52,11 +61,20 @@ class StreamingKappa2:
         if len(col1) == 0:
             return
         pairs = np.stack([col1.astype(np.int64), col2.astype(np.int64)], axis=1)
-        uniq, cnt = np.unique(pairs, axis=0, return_counts=True)
-        for (a, b), c in zip(uniq, cnt):
+        uniq, inv = np.unique(pairs, axis=0, return_inverse=True)
+        if weights is None:
+            sums = np.bincount(inv, minlength=len(uniq))
+            total = float(len(col1))
+        else:
+            w = np.asarray(weights, np.float64).ravel()
+            if len(w) != len(col1):
+                raise ValueError("weights must be per-row")
+            sums = np.bincount(inv, weights=w, minlength=len(uniq))
+            total = float(w.sum())
+        for (a, b), c in zip(uniq, sums):
             key = (int(a), int(b))
-            self.counts[key] = self.counts.get(key, 0) + int(c)
-        self.n += len(col1)
+            self.counts[key] = self.counts.get(key, 0.0) + float(c)
+        self.n += total
 
     def value(self) -> float:
         if not self.counts:

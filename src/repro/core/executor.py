@@ -9,14 +9,15 @@ paper's figures report.
 
 Proxy scoring paths, fastest first:
 
-  * fused   — one ``CascadeScorer`` pass per microbatch scores EVERY linear
-              stage at once (standardizers folded at plan-compile time,
-              bucket-padded static shapes, on-device survivor compaction);
-              later stages just index the precomputed masks.
-  * kernel  — legacy per-stage Pallas call (``proxy_score_batch``), kept for
-              parity testing via ``fused=False``.
-  * reference — pure numpy/jnp ``proxy.score`` (MLP proxies, or
-              ``use_kernel=False``).
+  * fused   — one ``CascadeScorer`` pass per microbatch scores EVERY
+              proxied stage at once, every family (params packed at
+              plan-compile time, bucket-padded static shapes, on-device
+              survivor compaction); later stages just index the
+              precomputed masks.
+  * kernel  — per-stage Pallas call (``proxy_score_batch``, any family),
+              kept for parity testing via ``fused=False``.
+  * reference — pure numpy/jnp ``proxy.score`` via the family registry
+              (``use_kernel=False`` only — the parity/ablation oracle).
 
 ``StageStats.used_kernel`` records which path actually gated each stage so
 benchmarks cannot silently compare reference runs against kernel runs.
@@ -132,7 +133,7 @@ def execute_plan(
                     else:
                         loc = loc[masks[loc, col]]
                     st.used_kernel = True
-                elif scorer is not None and stage.proxy.kind == "svm":
+                elif scorer is not None:
                     keep = scorer(stage.proxy.params, x[idx[loc]], stage.threshold)
                     loc = loc[np.asarray(keep)]
                     st.used_kernel = True

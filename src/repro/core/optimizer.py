@@ -141,7 +141,13 @@ def reoptimize(
     if prev_builder is not None:
         builder = prev_builder.rebase(x_sample, known_sigma=known_sigma)
     else:
-        builder = ProxyBuilder(query, x_sample, kind=kind, eps=eps, seed=seed)
+        # no carried builder: keep the incumbent plan's exact
+        # per-predicate family assignment rather than silently reverting
+        # to the default kind
+        fam_map = {s.pred_idx: s.proxy.family
+                   for s in plan.stages if s.proxy is not None}
+        builder = ProxyBuilder(query, x_sample, kind=fam_map or kind,
+                               eps=eps, seed=seed)
         if known_sigma:
             builder.seed_labels(known_sigma)
     trace: Optional[SearchTrace] = None

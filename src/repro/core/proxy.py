@@ -10,9 +10,9 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
-import jax
 import numpy as np
 
+from repro.core.proxy_family import ProxyFamily, get_family
 from repro.training import proxy_models as pm
 
 TRAIN_FRAC, TEST_FRAC = 0.6, 0.2  # 6:2:2 split as in the paper (rest = val)
@@ -74,20 +74,38 @@ def build_r_curve(
 
 @dataclass
 class ProxyModel:
-    """A trained proxy for predicate ``pred_idx`` conditioned on prefix ``d``."""
+    """A trained proxy for predicate ``pred_idx`` conditioned on prefix ``d``.
+
+    ``family`` is the canonical ProxyFamily name ("linear", "mlp1", ...);
+    all scoring dispatch goes through the family registry — there is no
+    per-kind branching anywhere downstream.
+    """
 
     pred_idx: int
     d: Tuple[int, ...]  # prefix predicate indices (the input relation)
-    kind: str  # "svm" | "mlp"
+    family: str  # canonical ProxyFamily name
     params: object
     r_curve: RCurve
     cost: float  # per-record scoring cost (ms/record)
     train_f1: float = 0.0
     n_train: int = 0
 
+    @property
+    def family_obj(self) -> ProxyFamily:
+        return get_family(self.family)
+
+    @property
+    def kind(self) -> str:
+        """Legacy alias ("svm" | "mlp") kept for external callers; internal
+        code dispatches on ``family``."""
+        return {"linear": "svm", "mlp1": "mlp"}.get(self.family, self.family)
+
     def score(self, x: np.ndarray) -> np.ndarray:
-        fn = pm.linear_score if self.kind == "svm" else pm.mlp_score
-        return np.asarray(fn(self.params, x.astype(np.float32)))
+        return np.asarray(self.family_obj.score(self.params, x))
+
+    def packed(self) -> pm.PackedProxy:
+        """Folded packed form (the fused kernel's device format)."""
+        return self.family_obj.pack(self.params)
 
     def mask(self, x: np.ndarray, alpha: float) -> np.ndarray:
         """True = keep (score >= threshold(alpha))."""
@@ -105,7 +123,10 @@ def train_proxy(
     cost: Optional[float] = None,
 ) -> ProxyModel:
     """Train M on the labeled sample L (x + boolean sigma labels) and
-    measure R on the validation split."""
+    measure R on the validation split.  ``kind`` may be a canonical family
+    name or a legacy alias ("svm", "mlp") — training and scoring dispatch
+    through the ProxyFamily registry."""
+    fam = get_family(kind)
     n = x.shape[0]
     rng = np.random.RandomState(seed)
     perm = rng.permutation(n)
@@ -117,19 +138,17 @@ def train_proxy(
         idx_val = idx_tr
     y = np.where(sigma_labels, 1.0, -1.0).astype(np.float32)
     xf = x.astype(np.float32)
-    if kind == "svm":
-        params = pm.train_linear_svm(xf[idx_tr], y[idx_tr])
-        scores_val = np.asarray(pm.linear_score(params, xf[idx_val]))
-        scores_tr = np.asarray(pm.linear_score(params, xf[idx_tr]))
-    else:
-        params = pm.train_mlp(xf[idx_tr], y[idx_tr], jax.random.PRNGKey(seed))
-        scores_val = np.asarray(pm.mlp_score(params, xf[idx_val]))
-        scores_tr = np.asarray(pm.mlp_score(params, xf[idx_tr]))
+    params = fam.train(xf[idx_tr], y[idx_tr], seed)
+    scores_val = np.asarray(fam.score(params, xf[idx_val]))
+    scores_tr = np.asarray(fam.score(params, xf[idx_tr]))
     curve = build_r_curve(scores_val, sigma_labels[idx_val])
     f1 = pm.f1_score(scores_tr, y[idx_tr])
     if cost is None:
-        cost = 1e-4 * x.shape[1] / 64.0  # analytic: O(F) per record
+        # analytic: O(F x hidden) per record; hidden folds into the packed
+        # form's width so the cost model sees the family difference
+        hidden = fam.pack(params).hidden
+        cost = 1e-4 * x.shape[1] / 64.0 * max(1.0, hidden / 2.0)
     return ProxyModel(
-        pred_idx=pred_idx, d=tuple(d), kind=kind, params=params, r_curve=curve,
-        cost=float(cost), train_f1=f1, n_train=len(idx_tr),
+        pred_idx=pred_idx, d=tuple(d), family=fam.name, params=params,
+        r_curve=curve, cost=float(cost), train_f1=f1, n_train=len(idx_tr),
     )

@@ -1,0 +1,212 @@
+"""ProxyFamily registry and the packed device-resident parameter format.
+
+This module replaces the stringly-typed ``kind: "svm" | "mlp"`` dispatch
+that used to be scattered across the proxy stack.  A **family** owns
+everything the system needs to know about one class of proxy scorer:
+
+* how to **train** it (``train(x, y, seed)`` -> params),
+* how to **score** with raw params (the reference path — used by the
+  optimizer on the tiny optimization sample and by ``kernels/ref.py``
+  parity oracles),
+* how to **pack** params into the folded depth-1 MLP form
+  (``training.proxy_models.PackedProxy``) the fused cascade kernel
+  executes: ``score(x) = relu(x @ w1 + b1) @ w2 + b2`` with the feature
+  standardizer folded in once at pack time.
+
+Because linear models embed exactly (``relu(z) - relu(-z) == z``,
+bit-for-bit), one packed format — and therefore ONE fused Pallas scorer —
+covers every registered family; there is no per-kind execution branch left
+anywhere downstream of this module.
+
+``pack_cascade`` stacks the per-stage packed proxies of a whole plan into
+bucket-padded ``(F, H, P)`` tensors (H = the hidden-width bucket, P = the
+number of stages); ``unpack_cascade`` is its exact inverse per stage, and
+is property-tested round-trip in ``tests/test_proxy_family.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, NamedTuple, Sequence, Tuple, Type
+
+import jax
+import numpy as np
+
+from repro.training import proxy_models as pm
+from repro.training.proxy_models import PackedProxy
+
+
+@dataclass(frozen=True)
+class ProxyFamily:
+    """One registered proxy-model family (linear SVM, depth-1 MLP, ...)."""
+
+    name: str
+    params_cls: Type
+    train: Callable[[np.ndarray, np.ndarray, int], object]  # (x, y∈{-1,1}, seed)
+    score: Callable[[object, np.ndarray], np.ndarray]  # reference scorer
+    pack: Callable[[object], PackedProxy]  # fold standardizer + lower to packed
+
+    def __repr__(self) -> str:  # keep plan dumps readable
+        return f"ProxyFamily({self.name!r})"
+
+
+_REGISTRY: Dict[str, ProxyFamily] = {}
+_BY_PARAMS: Dict[Type, ProxyFamily] = {}
+_ALIASES = {"svm": "linear", "mlp": "mlp1"}
+
+
+def register_family(family: ProxyFamily, *, aliases: Sequence[str] = ()) -> ProxyFamily:
+    _REGISTRY[family.name] = family
+    _BY_PARAMS[family.params_cls] = family
+    for a in aliases:
+        _ALIASES[a] = family.name
+    return family
+
+
+def get_family(name: str) -> ProxyFamily:
+    """Resolve a family by canonical name or legacy alias ("svm", "mlp")."""
+    key = _ALIASES.get(name, name)
+    if key not in _REGISTRY:
+        raise KeyError(f"unknown proxy family {name!r}; registered: {sorted(_REGISTRY)}")
+    return _REGISTRY[key]
+
+
+def family_of(params) -> ProxyFamily:
+    """Family lookup by parameter type (packed caches key on this)."""
+    fam = _BY_PARAMS.get(type(params))
+    if fam is None:
+        raise KeyError(f"no proxy family registered for params type {type(params).__name__}")
+    return fam
+
+
+def family_names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ------------------------------------------------------- built-in families
+LINEAR = register_family(
+    ProxyFamily(
+        name="linear",
+        params_cls=pm.LinearParams,
+        train=lambda x, y, seed: pm.train_linear_svm(x, y),
+        score=lambda p, x: np.asarray(pm.linear_score(p, x.astype(np.float32))),
+        pack=pm.pack_linear,
+    ),
+    aliases=("svm",),
+)
+
+MLP1 = register_family(
+    ProxyFamily(
+        name="mlp1",
+        params_cls=pm.MLPParams,
+        train=lambda x, y, seed: pm.train_mlp(x, y, jax.random.PRNGKey(seed)),
+        score=lambda p, x: np.asarray(pm.mlp_score(p, x.astype(np.float32))),
+        pack=pm.pack_mlp,
+    ),
+    aliases=("mlp",),
+)
+
+
+# ------------------------------------------------- cascade-level packing
+# Hidden widths are padded to a small bucket ladder so the fused kernel
+# compiles one program per (F, H, P) shape class, not one per cascade.
+HIDDEN_BUCKETS = (2, 4, 8, 16, 32, 64, 128)
+
+
+def hidden_bucket(h: int) -> int:
+    for b in HIDDEN_BUCKETS:
+        if h <= b:
+            return b
+    # beyond the ladder: round up to the next multiple of the top bucket
+    top = HIDDEN_BUCKETS[-1]
+    return ((h + top - 1) // top) * top
+
+
+class PackedCascade(NamedTuple):
+    """Whole-cascade packed parameters, bucket-padded to static shapes.
+
+    ``w1[(f, h, p)]`` is hidden weight ``h`` of stage ``p``; hidden slots
+    ``h >= hidden[p]`` are zero-padded (``relu(0 + 0) = 0`` and a zero
+    readout weight keeps them inert).  ``H`` is the shared hidden bucket:
+    ``hidden_bucket(max(hidden))``.
+    """
+
+    w1: np.ndarray  # (F, H, P) float32
+    b1: np.ndarray  # (H, P) float32
+    w2: np.ndarray  # (H, P) float32 readout
+    b2: np.ndarray  # (P,) float32
+    hidden: Tuple[int, ...]  # true per-stage hidden widths
+    families: Tuple[str, ...]  # per-stage family names
+
+    @property
+    def n_features(self) -> int:
+        return int(self.w1.shape[0])
+
+    @property
+    def H(self) -> int:
+        return int(self.w1.shape[1])
+
+    @property
+    def n_stages(self) -> int:
+        return int(self.w1.shape[2])
+
+
+def pack_cascade(param_list: Sequence[object], *,
+                 pack_fn: Callable[[object], PackedProxy] = None) -> PackedCascade:
+    """Pack every stage's params (any mix of families) into one
+    bucket-padded (F, H, P) tensor set.  ``pack_fn`` overrides the per-proxy
+    packer (e.g. ``kernels.ops.pack_proxy_cached`` to memoize the fold)."""
+    if not param_list:
+        raise ValueError("pack_cascade needs at least one proxy")
+    packs: List[PackedProxy] = []
+    fams: List[str] = []
+    for p in param_list:
+        fam = family_of(p)
+        packs.append(pack_fn(p) if pack_fn is not None else fam.pack(p))
+        fams.append(fam.name)
+    F = packs[0].w1.shape[0]
+    for pk in packs:
+        if pk.w1.shape[0] != F:
+            raise ValueError("all cascade stages must share the feature dim")
+    H = hidden_bucket(max(pk.hidden for pk in packs))
+    P = len(packs)
+    w1 = np.zeros((F, H, P), np.float32)
+    b1 = np.zeros((H, P), np.float32)
+    w2 = np.zeros((H, P), np.float32)
+    b2 = np.zeros(P, np.float32)
+    for p, pk in enumerate(packs):
+        h = pk.hidden
+        w1[:, :h, p] = pk.w1
+        b1[:h, p] = pk.b1
+        w2[:h, p] = pk.w2
+        b2[p] = pk.b2
+    return PackedCascade(w1=w1, b1=b1, w2=w2, b2=b2,
+                         hidden=tuple(pk.hidden for pk in packs),
+                         families=tuple(fams))
+
+
+def unpack_cascade(packed: PackedCascade, col: int) -> PackedProxy:
+    """Exact inverse of ``pack_cascade`` for one stage: strips the hidden
+    bucket padding and returns the stage's folded PackedProxy."""
+    h = packed.hidden[col]
+    return PackedProxy(
+        w1=np.ascontiguousarray(packed.w1[:, :h, col]),
+        b1=np.ascontiguousarray(packed.b1[:h, col]),
+        w2=np.ascontiguousarray(packed.w2[:h, col]),
+        b2=np.float32(packed.b2[col]),
+        hidden=h,
+    )
+
+
+def cascade_kernel_operands(packed: PackedCascade):
+    """Flatten (F, H, P) -> the kernel's two-GEMM operand layout.
+
+    Returns ``(w1 (F, H*P), b1 (H*P,), w2 (H*P, P), b2 (P,))`` in h-major
+    column order (column ``h*P + p`` is hidden unit ``h`` of stage ``p``);
+    ``w2`` is the block-diagonal readout matrix of the second GEMM.
+    """
+    F, H, P = packed.w1.shape
+    w1 = np.ascontiguousarray(packed.w1.reshape(F, H * P))
+    b1 = np.ascontiguousarray(packed.b1.reshape(H * P))
+    w2 = np.zeros((H * P, P), np.float32)
+    w2[np.arange(H * P), np.tile(np.arange(P), H)] = packed.w2.reshape(H * P)
+    return w1, b1, w2, np.asarray(packed.b2, np.float32)

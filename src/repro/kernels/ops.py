@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.proxy_score import cascade_score, proxy_score
+from repro.kernels.proxy_score import cascade_score
 from repro.kernels.ssd_scan import ssd_chunk
 
 
@@ -26,83 +26,118 @@ def interpret_default() -> bool:
 # ----------------------------------------------------------- proxy scoring
 def fold_standardizer(params):
     """Fold (x - mean)/scale into (w, b): the kernel then applies a single
-    affine map.  params: LinearParams."""
+    affine map.  params: LinearParams.  (Kept as the linear parity oracle's
+    fold; execution paths go through the family packers.)"""
     w = np.asarray(params.w) / np.asarray(params.scale)
     b = float(params.b) - float(np.asarray(params.mean) @ w)
     return w.astype(np.float32), np.float32(b)
 
 
-# Folding is pure per parameter set, so memoize by object identity.  The
-# cache holds a strong reference to the params, which keeps each id() valid
-# for the lifetime of its entry; size-bounded FIFO eviction caps memory.
-_FOLD_CACHE: dict = {}
-_FOLD_CACHE_MAX = 512
+# Packing (standardizer fold + lowering to the depth-1 MLP form) is pure
+# per parameter set, so memoize by object identity.  The cache holds a
+# strong reference to the params, which keeps each id() valid for the
+# lifetime of its entry; size-bounded FIFO eviction caps memory.
+_PACK_CACHE: dict = {}
+_PACK_CACHE_MAX = 512
 
 
-def fold_standardizer_cached(params):
-    """Memoized fold_standardizer keyed on LinearParams identity: repeated
-    scoring of the same proxy (every microbatch of every stage) folds once."""
+def pack_proxy_cached(params):
+    """Memoized ``family_of(params).pack``: repeated scoring of the same
+    proxy (every microbatch of every stage) packs once."""
+    from repro.core.proxy_family import family_of
+
     key = id(params)
-    hit = _FOLD_CACHE.get(key)
+    hit = _PACK_CACHE.get(key)
     if hit is not None and hit[0] is params:
-        return hit[1], hit[2]
-    w, b = fold_standardizer(params)
-    if len(_FOLD_CACHE) >= _FOLD_CACHE_MAX:
-        _FOLD_CACHE.pop(next(iter(_FOLD_CACHE)))
-    _FOLD_CACHE[key] = (params, w, b)
-    return w, b
+        return hit[1]
+    packed = family_of(params).pack(params)
+    if len(_PACK_CACHE) >= _PACK_CACHE_MAX:
+        _PACK_CACHE.pop(next(iter(_PACK_CACHE)))
+    _PACK_CACHE[key] = (params, packed)
+    return packed
+
+
+_OPERAND_CACHE: dict = {}
+
+
+def _kernel_operands_cached(params):
+    """Device-resident (w1, b1, w2, b2) for a single proxy, memoized on
+    params identity — the per-stage path packs and uploads once, not per
+    microbatch."""
+    from repro.core.proxy_family import cascade_kernel_operands, pack_cascade
+
+    key = id(params)
+    hit = _OPERAND_CACHE.get(key)
+    if hit is not None and hit[0] is params:
+        return hit[1]
+    ops = tuple(jnp.asarray(a) for a in cascade_kernel_operands(
+        pack_cascade([params], pack_fn=pack_proxy_cached)))
+    if len(_OPERAND_CACHE) >= _PACK_CACHE_MAX:
+        _OPERAND_CACHE.pop(next(iter(_OPERAND_CACHE)))
+    _OPERAND_CACHE[key] = (params, ops)
+    return ops
 
 
 def proxy_score_batch(params, x, threshold: float):
-    """Single-proxy convenience used by the executor: returns keep mask."""
-    w, b = fold_standardizer_cached(params)
-    _scores, mask = proxy_score(
-        jnp.asarray(x, jnp.float32),
-        jnp.asarray(w)[:, None],
-        jnp.asarray([b]),
-        jnp.asarray([threshold], jnp.float32),
-        interpret=interpret_default(),
+    """Single-proxy convenience used by the per-stage kernel path: returns
+    the keep mask.  Family-agnostic — params may be any registered family's."""
+    w1, b1, w2, b2 = _kernel_operands_cached(params)
+    _scores, mask, _pk, _cnt = cascade_score(
+        jnp.asarray(x, jnp.float32), w1, b1, w2, b2,
+        jnp.asarray([threshold], jnp.float32), x.shape[0],
+        interpret=interpret_default(), with_scores=False,
+        with_compaction=False,
     )
     return np.asarray(mask[:, 0])
 
 
-def proxy_score_multi(param_list, x, thresholds):
-    """Score several linear proxies in ONE fused pass (the serving engine
-    evaluates a cascade's proxies together when profitable)."""
-    ws, bs = zip(*(fold_standardizer_cached(p) for p in param_list))
-    w = jnp.stack([jnp.asarray(w) for w in ws], axis=1)  # (F, P)
-    b = jnp.asarray(bs)
-    scores, mask = proxy_score(
-        jnp.asarray(x, jnp.float32), w, b, jnp.asarray(thresholds, jnp.float32),
-        interpret=interpret_default(),
-    )
-    return np.asarray(scores), np.asarray(mask)
-
-
 class CascadeScorer:
-    """Whole-cascade fused scorer (DESIGN.md §3).
+    """Whole-cascade fused scorer (DESIGN.md §3), every proxy family.
 
-    Folds every stage's standardizer ONCE at construction ("plan-compile
-    time"), keeps the stacked (F, P) weight / bias / threshold tensors on
-    device, and scores record tiles through the fused ``cascade_score``
-    Pallas pass: one kernel invocation yields every stage's keep mask plus
-    on-device-compacted survivor index lists.
+    Packs every stage's params ONCE at construction ("plan-compile time")
+    via the family registry — standardizers folded, each stage lowered to
+    the packed depth-1 MLP form, the whole cascade stacked into
+    bucket-padded ``(F, H, P)`` tensors kept on device — and scores record
+    tiles through the fused two-pass ``cascade_score`` Pallas kernel: one
+    launch yields every stage's keep mask plus on-device-compacted
+    survivor index lists, for linear, MLP, and mixed cascades alike.
 
     Input batches are bucket-padded to a small geometric ladder of static
     shapes so ``jax.jit`` traces a handful of programs total instead of one
     per survivor count; batches larger than the top bucket are chunked.
     """
 
-    def __init__(self, param_list, thresholds, *, block_m: int = 2048,
+    def __init__(self, param_list, thresholds, *, block_m: int = None,
                  interpret=None, max_tile: int = 8192):
+        from repro.core.proxy_family import cascade_kernel_operands, pack_cascade
+
         if not param_list:
-            raise ValueError("CascadeScorer needs at least one linear proxy")
-        folded = [fold_standardizer_cached(p) for p in param_list]
-        self.w = jnp.stack([jnp.asarray(w) for w, _ in folded], axis=1)  # (F, P)
-        self.b = jnp.asarray(np.asarray([b for _, b in folded], np.float32))
+            raise ValueError("CascadeScorer needs at least one proxy")
+        self.packed = pack_cascade(list(param_list), pack_fn=pack_proxy_cached)
+        w1, b1, w2, b2 = cascade_kernel_operands(self.packed)
+        self.w1 = jnp.asarray(w1)  # (F, H*P) stacked hidden weights
+        self.b1 = jnp.asarray(b1)
+        self.w2 = jnp.asarray(w2)  # (H*P, P) block-diagonal readout
+        self.b2 = jnp.asarray(b2)
         self.thr = jnp.asarray(np.asarray(thresholds, np.float32))
+        self.families = self.packed.families
         self.n_proxies = len(param_list)
-        self.n_features = int(self.w.shape[0])
+        self.n_features = int(self.w1.shape[0])
+        if block_m is None:
+            # auto: biggest block whose per-row VMEM footprint fits an
+            # ~8MB budget (half a TPU core's VMEM; the rest covers the
+            # stacked weights + double buffering) — fewer, larger blocks
+            # amortize per-block launch overhead.  The footprint counts
+            # the x tile, the (block_m, HPp) relu intermediate the
+            # two-pass kernel materializes, and the padded score/mask/
+            # compaction output columns.
+            hpp = -(-(self.w1.shape[1]) // 128) * 128
+            pp = -(-self.n_proxies // 128) * 128
+            per_row = 4 * (self.n_features + hpp) + 9 * pp  # bytes (f32 + bool)
+            budget_rows = (8 << 20) // per_row
+            block_m = 256  # largest power of two within budget: tiles the
+            while block_m * 2 <= min(budget_rows, max_tile):  # usual 2^k
+                block_m *= 2  # batch sizes without row padding
         self.block_m = min(block_m, max_tile)
         self.interpret = interpret_default() if interpret is None else interpret
         buckets = []
@@ -118,16 +153,14 @@ class CascadeScorer:
 
     @classmethod
     def from_plan(cls, plan, **kw):
-        """Build a scorer over the plan's linear ("svm") proxy stages.
-
-        Returns None when no stage is linear.  ``scorer.stage_cols[si]`` maps
-        stage index to its proxy column, or None for stages the fused path
-        does not cover (no proxy, or an MLP proxy — those keep the reference
-        scorer).
+        """Build a scorer over ALL of the plan's proxied stages (any
+        family).  Returns None only when no stage carries a proxy.
+        ``scorer.stage_cols[si]`` maps stage index to its proxy column, or
+        None for proxy-less stages.
         """
         params, thrs, cols = [], [], []
         for stage in plan.stages:
-            if stage.proxy is not None and stage.proxy.kind == "svm":
+            if stage.proxy is not None:
                 cols.append(len(params))
                 params.append(stage.proxy.params)
                 thrs.append(stage.threshold)
@@ -140,6 +173,9 @@ class CascadeScorer:
         return scorer
 
     def covers_all(self, plan) -> bool:
+        """Every proxied stage has a column — trivially true since the
+        packed format covers every registered family; kept as an API
+        invariant check."""
         return all(
             col is not None
             for col, stage in zip(self.stage_cols, plan.stages)
@@ -165,7 +201,8 @@ class CascadeScorer:
                     need_compaction: bool = True, compact_cols=None):
         n = x_tile.shape[0]
         scores, mask, packed, counts = cascade_score(
-            jnp.asarray(self._pad_tile(x_tile)), self.w, self.b, self.thr, n,
+            jnp.asarray(self._pad_tile(x_tile)), self.w1, self.b1,
+            self.w2, self.b2, self.thr, n,
             block_m=self.block_m, interpret=self.interpret,
             with_scores=need_scores, with_compaction=need_compaction,
             compact_cols=compact_cols,
@@ -235,20 +272,55 @@ class CascadeScorer:
             masks[start:stop] = mask
         return masks
 
+    def score_margins(self, x: np.ndarray):
+        """Masks (N, P) plus per-record distance to the NEAREST stage
+        threshold (N,) — the importance-audit weight signal (records near
+        any proxy decision boundary are the ones whose audited labels are
+        most informative).  The min-|score - thr| reduction runs on
+        device, so only an (N,) vector is fetched instead of the full
+        (N, P) score matrix.  The kernel does write its (N, Pp) score
+        output to HBM for this path — an in-kernel margin output could
+        not be narrower anyway (TPU outputs are 128-lane minimum, the
+        same width as the score tile for P <= 128), and the extra
+        ~512 B/row is <0.1% of HBM bandwidth at full serving rate."""
+        x = np.asarray(x, np.float32)
+        n = x.shape[0]
+        masks = np.empty((n, self.n_proxies), bool)
+        margins = np.empty(n, np.float32)
+        for start in range(0, n, self.max_tile):
+            stop = min(start + self.max_tile, n)
+            tile = x[start:stop]
+            m = tile.shape[0]
+            scores, mask, _pk, _cnt = cascade_score(
+                jnp.asarray(self._pad_tile(tile)), self.w1, self.b1,
+                self.w2, self.b2, self.thr, m,
+                block_m=self.block_m, interpret=self.interpret,
+                with_scores=True, with_compaction=False,
+            )
+            masks[start:stop] = np.asarray(mask[:m])
+            margins[start:stop] = np.asarray(
+                jnp.min(jnp.abs(scores[:m] - self.thr[None, :]), axis=1))
+        return masks, margins
+
 
 # --------------------------------------------- scorer compile cache (serving)
 # The adaptive server hot-swaps plans mid-stream and can oscillate between
-# plan versions; each CascadeScorer carries folded weights + jit programs,
+# plan versions; each CascadeScorer carries packed weights + jit programs,
 # so re-entering a previously compiled plan version must be a cache hit,
-# not a refold + retrace.  Keyed on the stages' proxy-parameter identities
-# and thresholds; values hold strong refs to the params so ids stay valid.
+# not a repack + retrace.  Keyed on the packed-param identity of every
+# stage — (family, params id, threshold) — so MLP-bearing plan swaps are
+# cache hits exactly like linear ones; values hold strong refs to the
+# params so ids stay valid.
 _SCORER_CACHE: dict = {}
 _SCORER_CACHE_MAX = 64
 
 
 def _plan_scorer_key(plan, max_tile: int):
+    from repro.core.proxy_family import family_of
+
     return tuple(
         (s.pred_idx,
+         family_of(s.proxy.params).name if s.proxy is not None else None,
          id(s.proxy.params) if s.proxy is not None else None,
          float(s.threshold))
         for s in plan.stages
@@ -258,8 +330,8 @@ def _plan_scorer_key(plan, max_tile: int):
 def cascade_scorer_for_plan(plan, *, max_tile: int = 8192):
     """Memoized ``CascadeScorer.from_plan``.
 
-    Returns (scorer | None, cache_hit).  None means the plan has no linear
-    stage (nothing to fuse) — that outcome is cached too.
+    Returns (scorer | None, cache_hit).  None means the plan has no
+    proxied stage at all (nothing to fuse) — that outcome is cached too.
     """
     key = _plan_scorer_key(plan, max_tile)
     params_now = tuple(

@@ -1,16 +1,26 @@
-"""Fused proxy-scoring kernel: scores = x @ W + b; mask = scores >= theta.
+"""Fused whole-cascade proxy scoring: a two-pass stacked GEMM.
 
 This is the paper's hot loop — every record in the stream is scored by the
-cascade's proxies.  Fusing the GEMM, bias, and threshold comparison avoids
-three HBM round-trips for the (N, P) intermediate; the (N, F) record block
-is loaded into VMEM exactly once per proxy set.
+cascade's proxies.  Every proxy family lowers to the same packed depth-1
+MLP form (see ``core/proxy_family.py``), so ONE kernel covers linear and
+MLP stages alike:
 
-Standardization ((x - mean) / scale) is folded into W and b by the ops.py
-wrapper, so the kernel sees a single affine map.
+    hid    = relu(x @ w1 + b1)        # hidden GEMM over ALL stages at once
+    scores = hid @ w2 + b2            # block-diagonal readout GEMM
+    mask   = scores >= thresholds
 
-BlockSpec layout: grid over record tiles (bm rows); the proxy dim P is
-padded to the 128-lane width so the MXU matmul is aligned; F (feature dim,
-64..1024) stays resident per tile.
+Linear stages occupy two hidden columns via the exact +/- trick
+(``relu(z) - relu(-z) == z``); MLP stages occupy their true hidden width.
+Feature standardization is folded into ``(w1, b1)`` at pack time, so the
+kernel sees two affine maps and a relu — no per-stage branching.
+
+Fusing both GEMMs, the bias adds, and the threshold comparison avoids four
+HBM round-trips for the (N, H·P) and (N, P) intermediates; the (N, F)
+record block is loaded into VMEM exactly once per cascade.
+
+BlockSpec layout: grid over record tiles (bm rows); the stacked hidden dim
+H·P and the stage dim P are each padded to the 128-lane width so both MXU
+matmuls are aligned; F (feature dim, 64..1024) stays resident per tile.
 """
 from __future__ import annotations
 
@@ -22,10 +32,11 @@ from jax.experimental import pallas as pl
 
 
 def _make_cascade_kernel(n_proxies, with_scores, with_compaction):
-    """Fused whole-cascade tile kernel: one GEMM scores every proxy column;
-    optionally a block-local prefix sum packs survivor positions so the
-    wrapper can assemble dense per-stage survivor index lists without a
-    host round-trip.
+    """Fused whole-cascade tile kernel: hidden GEMM + relu, then the
+    block-diagonal readout GEMM scores every stage column; optionally a
+    block-local prefix sum packs survivor positions so the wrapper can
+    assemble dense per-stage survivor index lists without a host
+    round-trip.
 
     The prefix sum runs over the first ``n_proxies`` (real) columns only —
     the lane-pad columns are all-False and would triple the scan cost.
@@ -34,21 +45,27 @@ def _make_cascade_kernel(n_proxies, with_scores, with_compaction):
     engine gates on masks alone, the executor needs masks + compaction.
     """
 
-    def kernel(x_ref, w_ref, b_ref, thr_ref, valid_ref, *out_refs):
+    def kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, thr_ref, valid_ref,
+               *out_refs):
         x = x_ref[...]
-        w = w_ref[...]
-        s = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+        hid = jnp.dot(x.astype(jnp.float32), w1_ref[...].astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+        hid = jnp.maximum(hid + b1_ref[...][None, :], 0.0)
+        # readout over the REAL stage columns only — the lane-pad columns
+        # of w2 are all-zero and would multiply the second GEMM's cost by
+        # ~128/P for nothing (the MXU pads the n-dim internally either way)
+        s = jnp.dot(hid, w2_ref[...][:, :n_proxies].astype(jnp.float32),
                     preferred_element_type=jnp.float32)
-        s = s + b_ref[...][None, :]
-        m = (s >= thr_ref[...][None, :]) & valid_ref[...]
+        s = s + b2_ref[...][None, :n_proxies]
+        m = (s >= thr_ref[...][None, :n_proxies]) & valid_ref[...]
+        pad = w2_ref.shape[1] - n_proxies
         refs = list(out_refs)
         if with_scores:
-            refs.pop(0)[...] = s
-        refs.pop(0)[...] = m
+            refs.pop(0)[...] = jnp.pad(s, ((0, 0), (0, pad)))
+        refs.pop(0)[...] = jnp.pad(m, ((0, 0), (0, pad)))
         if with_compaction:
-            mi = m[:, :n_proxies].astype(jnp.int32)
+            mi = m.astype(jnp.int32)
             inclusive = jnp.cumsum(mi, axis=0)
-            pad = m.shape[1] - n_proxies
             if pad:
                 inclusive = jnp.pad(inclusive, ((0, 0), (0, pad)))
                 mi = jnp.pad(mi, ((0, 0), (0, pad)))
@@ -58,30 +75,47 @@ def _make_cascade_kernel(n_proxies, with_scores, with_compaction):
     return kernel
 
 
+def _pm_pack_linear_operands(w, b):
+    """(F, P) affine stack -> two-pass operands via the +/- trick, h-major:
+    columns [w | -w], readout (+1, -1) block-diagonal."""
+    F, P = w.shape
+    w1 = jnp.concatenate([w, -w], axis=1)  # (F, 2P): h-major [h=0 | h=1]
+    b1 = jnp.concatenate([b, -b])
+    eye = jnp.eye(P, dtype=jnp.float32)
+    w2 = jnp.concatenate([eye, -eye], axis=0)  # (2P, P)
+    return w1, b1, w2, jnp.zeros((P,), jnp.float32)
+
+
 def proxy_score(x, w, b, thresholds, *, block_m: int = 256, interpret: bool = True):
     """x: (N, F); w: (F, P); b, thresholds: (P,).
 
-    Returns (scores (N, P) f32, mask (N, P) bool).  Thin wrapper over
-    ``cascade_score(with_compaction=False)`` — the pad/grid plumbing and
-    kernel body exist exactly once (ROADMAP cleanup, PR 2).
+    Linear-stack convenience: returns (scores (N, P) f32, mask (N, P)
+    bool).  Thin wrapper over the packed ``cascade_score`` — the +/- trick
+    makes the two-pass scores bit-identical to the single affine map, so
+    the pad/grid plumbing and kernel body exist exactly once.
     """
+    w1, b1, w2, b2 = _pm_pack_linear_operands(jnp.asarray(w, jnp.float32),
+                                              jnp.asarray(b, jnp.float32))
     scores, mask, _packed, _counts = cascade_score(
-        x, w, b, thresholds, x.shape[0], block_m=block_m, interpret=interpret,
-        with_scores=True, with_compaction=False,
+        x, w1, b1, w2, b2, thresholds, x.shape[0], block_m=block_m,
+        interpret=interpret, with_scores=True, with_compaction=False,
     )
     return scores, mask
 
 
 @functools.partial(jax.jit, static_argnames=(
     "block_m", "interpret", "with_scores", "with_compaction", "compact_cols"))
-def cascade_score(x, w, b, thresholds, n_valid, *, block_m: int = 256,
-                  interpret: bool = True, with_scores: bool = True,
-                  with_compaction: bool = True, compact_cols=None):
-    """One fused pass over a record tile for a whole cascade.
+def cascade_score(x, w1, b1, w2, b2, thresholds, n_valid, *,
+                  block_m: int = 256, interpret: bool = True,
+                  with_scores: bool = True, with_compaction: bool = True,
+                  compact_cols=None):
+    """One fused two-pass GEMM over a record tile for a whole cascade.
 
     x: (N, F) record tile (rows >= ``n_valid`` are padding and are masked
-    out of every stage); w: (F, P) stacked proxy weights, one column per
-    cascade stage; b, thresholds: (P,).
+    out of every stage); w1: (F, HP) stacked folded hidden weights (HP =
+    hidden bucket x stages, h-major — see
+    ``core.proxy_family.cascade_kernel_operands``); b1: (HP,); w2:
+    (HP, P) block-diagonal readout; b2, thresholds: (P,).
 
     Returns:
       scores (N, P) f32          raw proxy scores (None if not with_scores)
@@ -108,16 +142,22 @@ def cascade_score(x, w, b, thresholds, n_valid, *, block_m: int = 256,
     instead of computed-then-discarded.
     """
     N, F = x.shape
-    P = w.shape[1]
+    HP = w1.shape[1]
+    P = w2.shape[1]
     pad_n = (-N) % block_m
+    pad_hp = (-HP) % 128
     pad_p = (-P) % 128
     if pad_n:
         x = jnp.pad(x, ((0, pad_n), (0, 0)))
+    if pad_hp:
+        w1 = jnp.pad(w1, ((0, 0), (0, pad_hp)))
+        b1 = jnp.pad(b1, (0, pad_hp))
+        w2 = jnp.pad(w2, ((0, pad_hp), (0, 0)))
     if pad_p:
-        w = jnp.pad(w, ((0, 0), (0, pad_p)))
-        b = jnp.pad(b, (0, pad_p))
+        w2 = jnp.pad(w2, ((0, 0), (0, pad_p)))
+        b2 = jnp.pad(b2, (0, pad_p))
         thresholds = jnp.pad(thresholds, (0, pad_p), constant_values=jnp.inf)
-    Np, Pp = x.shape[0], w.shape[1]
+    Np, HPp, Pp = x.shape[0], w1.shape[1], w2.shape[1]
     valid = (jnp.arange(Np, dtype=jnp.int32) < n_valid)[:, None]
 
     nb = Np // block_m
@@ -137,7 +177,9 @@ def cascade_score(x, w, b, thresholds, n_valid, *, block_m: int = 256,
         grid=(nb,),
         in_specs=[
             pl.BlockSpec((block_m, F), lambda i: (i, 0)),
-            pl.BlockSpec((F, Pp), lambda i: (0, 0)),
+            pl.BlockSpec((F, HPp), lambda i: (0, 0)),
+            pl.BlockSpec((HPp,), lambda i: (0,)),
+            pl.BlockSpec((HPp, Pp), lambda i: (0, 0)),
             pl.BlockSpec((Pp,), lambda i: (0,)),
             pl.BlockSpec((Pp,), lambda i: (0,)),
             pl.BlockSpec((block_m, 1), lambda i: (i, 0)),
@@ -145,7 +187,7 @@ def cascade_score(x, w, b, thresholds, n_valid, *, block_m: int = 256,
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
-    )(x, w, b, thresholds, valid)
+    )(x, w1, b1, w2, b2, thresholds, valid)
     outs = list(outs)
     scores = outs.pop(0) if with_scores else None
     mask = outs.pop(0)

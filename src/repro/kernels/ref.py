@@ -5,6 +5,7 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def proxy_score_ref(x, w, b, thresholds):
@@ -12,6 +13,26 @@ def proxy_score_ref(x, w, b, thresholds):
     Returns (scores (N, P) f32, mask (N, P) bool)."""
     scores = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(jnp.float32)
     return scores, scores >= thresholds.astype(jnp.float32)
+
+
+def cascade_score_ref(x, w1, b1, w2, b2, thresholds):
+    """Two-pass packed-cascade oracle (the parity reference for the fused
+    ``cascade_score`` kernel, every proxy family included).
+
+    x: (N, F); w1: (F, HP) stacked folded hidden weights; b1: (HP,);
+    w2: (HP, P) block-diagonal readout; b2, thresholds: (P,).
+    Returns (scores (N, P) f32, mask (N, P) bool, packed survivor index
+    lists per stage) — ``packed[p]`` are the ascending row indices where
+    stage p's mask is True.
+    """
+    hid = jnp.maximum(
+        jnp.dot(x.astype(jnp.float32), w1.astype(jnp.float32))
+        + b1.astype(jnp.float32), 0.0)
+    scores = jnp.dot(hid, w2.astype(jnp.float32)) + b2.astype(jnp.float32)
+    mask = scores >= thresholds.astype(jnp.float32)
+    m = np.asarray(mask)
+    packed = [np.flatnonzero(m[:, p]).astype(np.int32) for p in range(m.shape[1])]
+    return scores, mask, packed
 
 
 def flash_attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):

@@ -235,6 +235,49 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, force: bool = False
     return rec
 
 
+def cascade_dryrun(proxy_kind: str, *, n: int = 6000, preds: int = 3,
+                   seed: int = 0) -> bool:
+    """Compile-and-verify dry-run of the fused cascade scorer for one
+    proxy family mix: builds a small synthetic query, optimizes a plan
+    with ``--proxy-kind`` proxies, packs it through the ProxyFamily
+    format, and checks the fused Pallas path end-to-end against the
+    reference executor (same survivor set, every stage on the kernel).
+
+        PYTHONPATH=src python -m repro.launch.dryrun --proxy-kind mixed
+    """
+    from repro.core import execute_plan, optimize
+    from repro.data.synthetic import make_dataset, make_query, make_udfs
+    from repro.kernels.ops import cascade_scorer_for_plan
+
+    ds = make_dataset(n=n, correlation=0.9, seed=seed)
+    udfs = make_udfs(ds, hidden=16, depth=1, train_rows=1000, seed=seed,
+                     declared_cost_ms=10.0)
+    q = make_query(ds, udfs, columns=list(range(preds)),
+                   target_selectivity=0.5, accuracy_target=0.9, seed=seed + 1)
+    k = max(800, n // 10)
+    plan = optimize(q, ds.x[:k], mode="core-a", step=0.05, kind=proxy_kind)
+    print(plan.describe())
+    scorer, _hit = cascade_scorer_for_plan(plan)
+    packed = scorer.packed
+    print(f"packed cascade: families={packed.families} hidden={packed.hidden} "
+          f"(F, H, P)=({packed.n_features}, {packed.H}, {packed.n_stages}) "
+          f"block_m={scorer.block_m}")
+    x = ds.x[k:]
+    ref = execute_plan(plan, x, use_kernel=False)
+    fus = execute_plan(plan, x, use_kernel=True, fused=True)
+    # boundary ties allowed: MLP standardizer folding agrees with the
+    # reference to ~1e-4, so exact-threshold records may flip
+    n_diff = len(set(ref.passed.tolist()) ^ set(fus.passed.tolist()))
+    same = n_diff <= 3
+    kernel_all = all(s.used_kernel for s in fus.stages)
+    print(f"fused vs reference: disagreements={n_diff} "
+          f"used_kernel={[s.used_kernel for s in fus.stages]} "
+          f"fused_score_ms={fus.fused_score_ms:.1f}")
+    ok = same and kernel_all
+    print("cascade dry-run:", "OK" if ok else "MISMATCH")
+    return ok
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -244,7 +287,13 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--variant", default="baseline", choices=["baseline", "opt"])
+    ap.add_argument("--proxy-kind", default=None, choices=["svm", "mlp", "mixed"],
+                    help="run a fused-cascade dry-run for this proxy family "
+                         "mix instead of the architecture sweep")
     args = ap.parse_args()
+
+    if args.proxy_kind is not None:
+        raise SystemExit(0 if cascade_dryrun(args.proxy_kind) else 1)
 
     cells = []
     archs = [args.arch] if args.arch else sorted(ARCHS)

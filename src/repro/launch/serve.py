@@ -23,6 +23,9 @@ def main():
     ap.add_argument("--correlation", type=float, default=0.9)
     ap.add_argument("--accuracy", type=float, default=0.9)
     ap.add_argument("--mode", default="core", choices=["core", "core-a", "core-h", "pp", "ns", "orig"])
+    ap.add_argument("--proxy-kind", default="svm", choices=["svm", "mlp", "mixed"],
+                    help="proxy family per predicate: all-linear, all-MLP, "
+                         "or alternating (every kind rides the fused scorer)")
     ap.add_argument("--preds", type=int, default=2)
     ap.add_argument("--tile", type=int, default=1024)
     ap.add_argument("--udf-cost-ms", type=float, default=20.0)
@@ -44,13 +47,16 @@ def main():
     if args.mode == "orig":
         plan = orig_plan(q)
     elif args.mode == "ns":
-        plan = ns_plan(q, ds.x[:k])
+        plan = ns_plan(q, ds.x[:k], kind=args.proxy_kind)
     elif args.mode == "pp":
-        plan = pp_plan(q, ds.x[:k])
+        plan = pp_plan(q, ds.x[:k], kind=args.proxy_kind)
     else:
-        plan = optimize(q, ds.x[:k], mode=args.mode,
+        plan = optimize(q, ds.x[:k], mode=args.mode, kind=args.proxy_kind,
                         keep_state=args.adaptive)
     print(plan.describe())
+    if any(s.proxy is not None for s in plan.stages):
+        print("proxy families:",
+              " ".join(s.proxy.family for s in plan.stages if s.proxy is not None))
 
     if args.drift:
         stream = make_drifting_stream(

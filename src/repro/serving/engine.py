@@ -10,11 +10,12 @@ The paper's executor streams rows; on TPU we keep static shapes (DESIGN.md
     drains whichever stage has a full tile ready (UDFs always run dense);
   * a final drain pass flushes partial tiles at end-of-stream.
 
-Fused hot path: when every proxied stage is linear, a ``CascadeScorer``
-scores each incoming chunk ONCE at submit time — one fused Pallas pass
-yields every stage's keep decision — and the per-record mask rows ride
+Fused hot path: a ``CascadeScorer`` covers EVERY proxied stage — linear,
+MLP, or mixed, all lowered to the packed ProxyFamily format — and scores
+each incoming chunk ONCE at submit time: one fused two-pass Pallas GEMM
+yields every stage's keep decision, and the per-record mask rows ride
 through the stage queues with the record.  Stage execution then never
-re-folds, re-scores, or re-traces: the gate is a mask lookup.
+re-packs, re-scores, or re-traces: the gate is a mask lookup.
 
 Adaptive serving (DESIGN.md §4): with ``adaptive=True`` the server keeps
 streaming statistics — per-stage observed keep-rates vs the plan's
@@ -47,6 +48,7 @@ from repro.serving.stats import (
     AdaptivePolicy,
     CusumDetector,
     DriftEvent,
+    ImportanceAuditSampler,
     Reservoir,
     StreamingRate,
 )
@@ -81,6 +83,14 @@ class ServeStats:
 class _AuditMonitor:
     """Unconditional per-predicate selectivity watcher over audit records.
 
+    Audit records are importance-sampled toward proxy thresholds, so every
+    update carries inverse-propensity-corrected totals: ``kept_w`` /
+    ``seen_w`` are Horvitz-Thompson sums (sigma_i / p_i and 1 / p_i over
+    the audited subset) whose ratio is an unbiased selectivity estimate,
+    while ``n_audited`` (the actual UDF runs) drives the baseline freeze,
+    the recency window, and the CUSUM weight — statistical information
+    scales with labels paid for, not with IPW-expanded pseudo-counts.
+
     The first ``baseline_n`` audited records after a plan install define
     the reference rate; afterwards a CUSUM accumulates sustained
     deviation.  (Per-stage keep-rates are conditioned on the prefix, so
@@ -92,25 +102,31 @@ class _AuditMonitor:
         self.baseline: Optional[float] = None
         self.baseline_n = policy.audit_baseline
         self.cusum = CusumDetector(policy.slack, policy.threshold)
-        self._window: deque = deque()  # (kept, seen) batches, recent only
+        self._window: deque = deque()  # (kept_w, seen_w, n_audited), recent only
         self._window_n = policy.audit_window
+        self._audited = 0
 
-    def update(self, kept: int, seen: int) -> bool:
-        self.rate.update(kept, seen)
-        self._window.append((kept, seen))
-        while sum(s for _, s in self._window) - self._window[0][1] >= self._window_n:
+    def update(self, kept_w: float, seen_w: float, n_audited: int) -> bool:
+        self.rate.update(kept_w, seen_w)
+        self._audited += int(n_audited)
+        self._window.append((kept_w, seen_w, n_audited))
+        while sum(a for _, _, a in self._window) - self._window[0][2] >= self._window_n:
             self._window.popleft()
         if self.baseline is None:
-            if self.rate.seen >= self.baseline_n:
+            if self._audited >= self.baseline_n:
                 self.baseline = self.rate.rate
             return False
-        return self.cusum.update(kept / seen if seen else 0.0,
-                                 self.baseline, seen)
+        return self.cusum.update(kept_w / seen_w if seen_w else 0.0,
+                                 self.baseline, n_audited)
+
+    @property
+    def has_window(self) -> bool:
+        return any(s > 0 for _, s, _ in self._window)
 
     @property
     def recent_rate(self) -> float:
-        seen = sum(s for _, s in self._window)
-        return sum(k for k, _ in self._window) / seen if seen else 0.0
+        seen = sum(s for _, s, _ in self._window)
+        return sum(k for k, _, _ in self._window) / seen if seen else 0.0
 
 
 class _PlanState:
@@ -176,6 +192,8 @@ class CascadeServer:
         self._install(plan)
         # adaptive machinery
         self._rng = np.random.RandomState(seed)
+        self._audit_sampler = ImportanceAuditSampler(
+            self.policy.audit_rate, floor=self.policy.audit_floor)
         self._reservoir = Reservoir(
             self.query.n, capacity=self.policy.reservoir_capacity,
             stride=self.policy.reservoir_stride,
@@ -222,9 +240,16 @@ class CascadeServer:
     def submit(self, indices: np.ndarray, rows: np.ndarray):
         cur = self._states[-1]
         rows = np.asarray(rows, np.float32)
+        margins = None
         if cur.cascade is not None and len(rows):
             t0 = time.perf_counter()
-            masks = cur.cascade.score_masks(rows)
+            if self.adaptive and self.policy.audit_importance:
+                # the importance-audit weights need score-to-threshold
+                # distances; the margin reduction runs on device in the
+                # same fused pass that produces the masks
+                masks, margins = cur.cascade.score_margins(rows)
+            else:
+                masks = cur.cascade.score_masks(rows)
             self.stats.fused_score_ms += (time.perf_counter() - t0) * 1e3
             for i, r, m in zip(indices, rows, masks):
                 cur.queues[0].append((int(i), r, m))
@@ -232,20 +257,33 @@ class CascadeServer:
             for i, r in zip(indices, rows):
                 cur.queues[0].append((int(i), r, None))
         if self.adaptive and len(rows):
-            self._observe_chunk(np.asarray(indices), rows)
+            self._observe_chunk(np.asarray(indices), rows, margins)
         self._records_submitted += len(rows)
 
-    def _observe_chunk(self, indices: np.ndarray, rows: np.ndarray):
-        """Reservoir-sample the chunk and audit a small unbiased subset:
-        audit records get EVERY UDF run up front (charged to the cost
-        model), yielding drift-grade selectivity/correlation statistics
-        and pre-labeled reservoir rows for re-optimization."""
+    def _observe_chunk(self, indices: np.ndarray, rows: np.ndarray,
+                       margins: Optional[np.ndarray] = None):
+        """Reservoir-sample the chunk and audit a small subset: audit
+        records get EVERY UDF run up front (charged to the cost model),
+        yielding drift-grade selectivity/correlation statistics and
+        pre-labeled reservoir rows for re-optimization.
+
+        The audit subset is importance-sampled toward records near proxy
+        thresholds (``margins`` = score distance to the nearest stage
+        threshold): those labels carry the most information about whether
+        the thresholds still sit where the optimizer put them.  The
+        induced bias is removed with inverse-propensity weights before the
+        selectivity monitors see the totals, so corrected estimates stay
+        unbiased on any stream (property-tested)."""
         for i, r in zip(indices, rows):
             self._reservoir.add(int(i), r)
-        sel = self._rng.random_sample(len(rows)) < self.policy.audit_rate
+        sel, ipw = self._audit_sampler.select(
+            margins if self.policy.audit_importance else None,
+            len(rows), self._rng)
         if not sel.any():
             return
         xa, ia = rows[sel], indices[sel]
+        for i, r in zip(ia, xa):  # audited rows always enter the reservoir
+            self._reservoir.add(int(i), r, force=True)
         labels_by_pred = {}
         for p, pred in enumerate(self.query.predicates):
             labels = pred.udf(xa)
@@ -254,16 +292,20 @@ class CascadeServer:
             cost = len(xa) * pred.udf.cost
             self.stats.audit_cost_ms += cost
             self.stats.model_cost_ms += cost
-            for idx, s in zip(ia, sigma):
-                self._reservoir.observe(int(idx), p, bool(s))
-            if self._audit_mon[p].update(int(sigma.sum()), len(sigma)) \
+            for idx, s, w in zip(ia, sigma, ipw):
+                self._reservoir.observe(int(idx), p, bool(s), weight=float(w))
+            kept_w = float(np.sum(sigma * ipw))
+            seen_w = float(np.sum(ipw))
+            if self._audit_mon[p].update(kept_w, seen_w, len(xa)) \
                     and self._may_trigger():
                 self._drift = (
                     f"audit:sel:{p}", self._audit_mon[p].recent_rate,
                     self._audit_mon[p].baseline,
                 )
         for (i, j), k in self._kappa.items():
-            k.update(labels_by_pred[i], labels_by_pred[j])
+            # IPW weights keep the contingency table a population estimate
+            # despite the threshold-weighted audit subset
+            k.update(labels_by_pred[i], labels_by_pred[j], weights=ipw)
         if self._kappa_snapshot is None and all(
                 m.baseline is not None for m in self._audit_mon.values()):
             self._kappa_snapshot = {k: v.value() for k, v in self._kappa.items()}
@@ -292,7 +334,7 @@ class CascadeServer:
                 # fused path: the gate was computed once at submit time
                 keep = np.asarray([m[col] for m in mrows], bool)
                 self.stats.stage_used_kernel[si] = True
-            elif self._scorer is not None and stage.proxy.kind == "svm":
+            elif self._scorer is not None:
                 keep = self._scorer(stage.proxy.params, x, stage.threshold)
                 self.stats.stage_used_kernel[si] = True
             else:
@@ -360,24 +402,40 @@ class CascadeServer:
         self._pump_state(self._states[-1], drain=drain)
 
     # ----------------------------------------------------------- adaptivity
-    def _escalate(self, observed: float, expected: float) -> Tuple[str, bool]:
-        """Decide re-optimization depth: correlation-structure drift or a
-        large rate shift re-opens the ORDER question (warm branch-and-
-        bound resume); a mild shift only re-tunes thresholds/alphas on the
-        incumbent order (re-allocation)."""
+    def _escalate(self) -> Tuple[str, bool]:
+        """Decide re-optimization depth from the stale plan's estimated
+        COST-MODEL REGRET (``AdaptivePolicy.choose_escalation``): the
+        audit monitors' corrected selectivities re-cost the incumbent
+        order against every permutation (Eq. 3.1); only a regret beyond
+        ``regret_tol`` — a drift a re-allocation cannot fix, because the
+        order optimum moved — pays for the warm branch-and-bound resume.
+        A kappa² correlation-structure shift also escalates: the regret
+        estimate only has marginals, so a correlation change invalidates
+        it and re-opens the order question directly."""
         if self.policy.escalate in ("alloc", "bnb"):
             return self.policy.escalate, self.policy.escalate == "bnb"
-        if abs(observed - expected) > self.policy.sel_tol:
-            return "bnb", True
         if self._kappa_snapshot is not None:
             for key, k in self._kappa.items():
                 if abs(k.value() - self._kappa_snapshot[key]) > self.policy.kappa_tol:
                     return "bnb", True
-        for mon in self._audit_mon.values():
-            if mon.baseline is not None and \
-                    abs(mon.recent_rate - mon.baseline) > self.policy.sel_tol:
-                return "bnb", True
-        return "alloc", False
+        # freshest selectivities first: the reservoir spans only the last
+        # ~capacity*stride records (IPW-corrected labels), while the audit
+        # monitors' window can stretch tens of thousands of records back
+        fresh_sels = {}
+        for p in range(self.query.n):
+            sel = self._reservoir.selectivity(p)
+            if sel is None:
+                mon = self._audit_mon[p]
+                if mon.baseline is not None and mon.has_window:
+                    sel = mon.recent_rate
+            if sel is not None:
+                # 0.0 is EVIDENCE (a collapsed predicate is the strongest
+                # reorder signal there is), not absence of data — absence
+                # is the None above
+                fresh_sels[p] = sel
+        mode, _regret = self.policy.choose_escalation(
+            self._states[-1].plan, fresh_sels)
+        return mode, mode == "bnb"
 
     def maybe_reoptimize(self) -> bool:
         """Re-optimize and hot-swap if a drift trigger is pending.  Called
@@ -388,7 +446,9 @@ class CascadeServer:
         from repro.core.optimizer import reoptimize
 
         signal, observed, expected = self._drift
-        mode, escalated = self._escalate(observed, expected)
+        # the triggering deviation is recorded in the DriftEvent below; the
+        # escalation decision itself reads fresh statistics, not magnitude
+        mode, escalated = self._escalate()
         old = self._states[-1]
         t0 = time.perf_counter()
         x_s, known_sigma = self._reservoir.sample()

@@ -32,6 +32,56 @@ class MLPParams(NamedTuple):
     scale: jnp.ndarray
 
 
+class PackedProxy(NamedTuple):
+    """Family-agnostic device format of ONE proxy: a folded depth-1 MLP.
+
+    Every proxy family lowers to ``score(x) = relu(x @ w1 + b1) @ w2 + b2``
+    with the feature standardizer already folded into ``(w1, b1)`` — this is
+    the only form the fused cascade kernel understands.  ``hidden`` is the
+    family's true hidden width before any cascade-level bucket padding.
+    """
+
+    w1: np.ndarray  # (F, hidden) folded hidden weights
+    b1: np.ndarray  # (hidden,)
+    w2: np.ndarray  # (hidden,) readout weights
+    b2: np.float32  # () readout bias
+    hidden: int
+
+
+def pack_linear(params: LinearParams) -> PackedProxy:
+    """Linear proxies pack exactly via the +/- trick: with hidden units
+    ``(z, -z)`` and readout ``(+1, -1)``, ``relu(z) - relu(-z) == z``
+    bit-for-bit (one term is always exactly zero), so the packed scorer is
+    bit-identical to the affine scorer."""
+    w = (np.asarray(params.w, np.float32)
+         / np.asarray(params.scale, np.float32)).astype(np.float32)
+    b = np.float32(float(params.b) - float(np.asarray(params.mean) @ w))
+    w1 = np.stack([w, -w], axis=1)  # (F, 2)
+    b1 = np.asarray([b, -b], np.float32)
+    w2 = np.asarray([1.0, -1.0], np.float32)
+    return PackedProxy(w1=w1, b1=b1, w2=w2, b2=np.float32(0.0), hidden=2)
+
+
+def pack_mlp(params: MLPParams) -> PackedProxy:
+    """Depth-1 MLP: fold the standardizer into the first layer —
+    ``((x - mean) / scale) @ w1 == x @ (w1 / scale[:, None]) - (mean / scale) @ w1``."""
+    scale = np.asarray(params.scale, np.float32)[:, None]
+    w1 = (np.asarray(params.w1, np.float32) / scale).astype(np.float32)
+    b1 = (np.asarray(params.b1, np.float32)
+          - (np.asarray(params.mean, np.float32) / np.asarray(params.scale, np.float32))
+          @ np.asarray(params.w1, np.float32)).astype(np.float32)
+    return PackedProxy(
+        w1=w1, b1=b1, w2=np.asarray(params.w2, np.float32),
+        b2=np.float32(params.b2), hidden=int(w1.shape[1]),
+    )
+
+
+def packed_score(packed: PackedProxy, x: np.ndarray) -> np.ndarray:
+    """Reference evaluation of the packed form (numpy, no kernel)."""
+    h = np.maximum(x.astype(np.float32) @ packed.w1 + packed.b1, 0.0)
+    return h @ packed.w2 + packed.b2
+
+
 def _standardizer(x):
     mean = jnp.mean(x, axis=0)
     scale = jnp.std(x, axis=0) + 1e-6

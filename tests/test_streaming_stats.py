@@ -1,12 +1,22 @@
 """Streaming statistics must be chunking-invariant: feeding the same rows
 in ANY split yields exactly the batch statistic (the adaptive serving
 loop's drift signals are only trustworthy if the incremental estimators
-agree with their batch definitions)."""
+agree with their batch definitions).  Plus: the importance-sampled audit
+stream's IPW-corrected selectivities must stay unbiased, and the
+cost-model regret escalation must re-open the order question exactly when
+a re-allocation cannot fix the drift."""
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.core.correlation import StreamingKappa2, correlation_score
-from repro.serving.stats import Reservoir, StreamingRate
+from repro.core.query import MLUDF, PhysicalPlan, PlanStage, Predicate, Query
+from repro.serving.stats import (
+    AdaptivePolicy,
+    ImportanceAuditSampler,
+    Reservoir,
+    StreamingRate,
+    estimate_order_regret,
+)
 
 
 def _random_chunks(n, n_chunks, rng):
@@ -58,6 +68,126 @@ def test_streaming_kappa2_empty_and_single_valued():
     sk.update(np.zeros(10, int), np.arange(10) % 3)
     # one column is constant -> min(d1, d2) < 2 -> zero, same as batch
     assert sk.value() == correlation_score(np.zeros(10, int), np.arange(10) % 3)
+
+
+# ------------------------------------------- importance-sampled audit (IPW)
+@given(
+    base_sel=st.floats(0.1, 0.9),
+    coupling=st.floats(0.0, 0.8),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=8, deadline=None)
+def test_importance_audit_ipw_estimates_unbiased(base_sel, coupling, seed):
+    """On a stationary stream whose labels CORRELATE with proximity to the
+    proxy threshold (the adversarial case for threshold-weighted
+    sampling), the Horvitz-Thompson-corrected selectivity estimate stays
+    unbiased, while the uncorrected audited mean drifts with the
+    coupling."""
+    rng = np.random.RandomState(seed)
+    n, trials = 1500, 150
+    margins = np.abs(rng.randn(n)).astype(np.float64)
+    # labels more likely NEAR the threshold: the exact bias importance
+    # sampling would inject if uncorrected
+    near = margins < np.median(margins)
+    p_true = np.clip(base_sel + coupling * (near - 0.5), 0.02, 0.98)
+    sigma = rng.random_sample(n) < p_true
+    truth = sigma.mean()
+
+    sampler = ImportanceAuditSampler(rate=0.15, floor=0.25)
+    corrected, uncorrected = [], []
+    for _ in range(trials):
+        sel, ipw = sampler.select(margins, n, rng)
+        if not sel.any():
+            continue
+        corrected.append(float((sigma[sel] * ipw).sum() / ipw.sum()))
+        uncorrected.append(float(sigma[sel].mean()))
+    corr_err = abs(np.mean(corrected) - truth)
+    unc_err = abs(np.mean(uncorrected) - truth)
+    assert corr_err < 0.02, (corr_err, truth)
+    if coupling > 0.3:  # sampling bias is real -> the correction is load-bearing
+        assert unc_err > corr_err, (unc_err, corr_err)
+
+
+def test_importance_audit_budget_and_floor():
+    """Expected audit volume stays ~rate*N and no propensity falls below
+    the floor (bounded IPW weights)."""
+    rng = np.random.RandomState(0)
+    margins = np.abs(rng.randn(5000))
+    sampler = ImportanceAuditSampler(rate=0.05, floor=0.25)
+    p = sampler.propensities(margins, len(margins))
+    assert p.min() >= 0.25 * 0.05 - 1e-12
+    assert abs(p.mean() - 0.05) < 0.01  # mean-normalized budget
+    # degenerate margins (all equal / None) -> uniform rate
+    assert np.allclose(sampler.propensities(np.zeros(10), 10), 0.05)
+    assert np.allclose(sampler.propensities(None, 10), 0.05)
+
+
+def test_reservoir_force_add_and_weighted_selectivity():
+    """Audited rows force-added to the reservoir carry IPW weights; the
+    weighted selectivity undoes the sampling bias exactly on a frozen
+    example."""
+    r = Reservoir(n_preds=1, capacity=8, stride=1000)  # stride: nothing strided in
+    # 4 high-propensity (p=0.5 -> w=2) positives, 4 low (p=0.1 -> w=10) negatives
+    for i in range(4):
+        r.add(i, np.zeros(2, np.float32), force=True)
+        r.observe(i, 0, True, weight=2.0)
+    for i in range(4, 8):
+        r.add(i, np.zeros(2, np.float32), force=True)
+        r.observe(i, 0, False, weight=10.0)
+    sel = r.selectivity(0, min_labels=8)
+    assert abs(sel - (4 * 2.0) / (4 * 2.0 + 4 * 10.0)) < 1e-12
+    assert r.selectivity(0, min_labels=9) is None  # below evidence floor
+    # force-add of a resident idx is a no-op (no duplicate slot)
+    assert r.add(3, np.zeros(2, np.float32), force=True)
+    assert r.size == 8
+
+
+# ---------------------------------------------- cost-model regret escalation
+def _toy_plan(udf_costs, sels, order=None):
+    """Minimal proxy-less plan: stage cost reduces to prefix * udf_cost, so
+    the order optimum is driven purely by (selectivity, cost)."""
+    preds = [
+        Predicate(udf=MLUDF(name=f"u{i}", fn=lambda x: np.zeros(len(x), int),
+                            cost=c), values=frozenset({1}))
+        for i, c in enumerate(udf_costs)
+    ]
+    q = Query(preds, accuracy_target=0.9)
+    order = tuple(range(len(preds))) if order is None else order
+    stages = [PlanStage(pred_idx=p, proxy=None, alpha=1.0,
+                        est_selectivity=sels[p]) for p in order]
+    return PhysicalPlan(query=q, stages=stages)
+
+
+def test_regret_escalation_order_inversion_picks_bnb():
+    """A selectivity inversion the incumbent ORDER cannot survive: alloc
+    alone cannot fix it (it keeps the order), so the policy must escalate
+    to the B&B re-search."""
+    plan = _toy_plan([5.0, 5.0], sels=[0.2, 0.9])  # order (0, 1) optimal
+    policy = AdaptivePolicy(regret_tol=0.1)
+    # drift inverts the selectivities -> (1, 0) now cheaper
+    regret, best = estimate_order_regret(plan, {0: 0.9, 1: 0.2})
+    assert best == (1, 0) and regret > 0.3
+    mode, r = policy.choose_escalation(plan, {0: 0.9, 1: 0.2})
+    assert mode == "bnb" and r == regret
+
+
+def test_regret_escalation_large_shift_same_order_picks_alloc():
+    """A LARGE rate shift that leaves the incumbent order optimal needs
+    only a re-allocation — magnitude-based escalation would have paid for
+    a full re-search here."""
+    plan = _toy_plan([5.0, 5.0], sels=[0.2, 0.9])
+    policy = AdaptivePolicy(regret_tol=0.1)
+    # pred 0's selectivity triples (|shift| = 0.4 >> any magnitude tol)
+    # but (0, 1) is still the cheapest order
+    mode, regret = policy.choose_escalation(plan, {0: 0.6, 1: 0.9})
+    assert mode == "alloc" and regret == 0.0
+
+
+def test_regret_estimate_no_evidence_is_conservative():
+    """No fresh selectivities -> zero regret -> cheap path."""
+    plan = _toy_plan([5.0, 5.0], sels=[0.2, 0.9])
+    regret, best = estimate_order_regret(plan, {})
+    assert regret == 0.0 and best == plan.order
 
 
 def test_reservoir_recency_and_labels():
