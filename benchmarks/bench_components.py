@@ -164,7 +164,8 @@ def bench_mlp_throughput(*, n_rows: int = 49_152, n_features: int = 64,
 
 
 def write_bench_json(throughput: dict, adaptive: dict | None = None,
-                     mlp: dict | None = None, path: Path = BENCH_JSON) -> None:
+                     mlp: dict | None = None, sharded: dict | None = None,
+                     path: Path = BENCH_JSON) -> None:
     payload = {
         "bench": "components",
         "proxy_throughput": throughput,
@@ -174,6 +175,8 @@ def write_bench_json(throughput: dict, adaptive: dict | None = None,
         payload["adaptive_drift"] = adaptive
     if mlp is not None:
         payload["mlp_proxy_throughput"] = mlp
+    if sharded is not None:
+        payload["sharded_serving"] = sharded
     path.write_text(json.dumps(payload, indent=2) + "\n")
 
 

@@ -24,11 +24,19 @@ regresses against the checked-in baseline
     ``min_adaptive_speedup``, the adaptive plan missing the query's
     accuracy target, or the warm-started re-search failing to visit
     strictly fewer nodes than a cold branch-and-bound — all three are
-    cost-model invariants, host-independent by construction.
+    cost-model invariants, host-independent by construction, or
+  * the K=4 sharded serving run (quorum-voted swaps, DESIGN.md §6)
+    falling below ``min_sharded_speedup`` aggregate cost-model throughput
+    over the K=1 baseline, failing to commit a quorum swap, leaking
+    records (conservation), or serving ahead of the two-phase barrier
+    (``consensus_lag_records != 0``) — all cost-model / protocol
+    invariants, host-independent.  Wall-clock consensus overhead per swap
+    is ADVISORY unless ``REGRESSION_MAX_CONSENSUS_MS`` pins it.
 
 Usage: python benchmarks/check_regression.py [--quick]
 Env overrides: REGRESSION_MIN_ROWS_PER_S, REGRESSION_MIN_SPEEDUP,
-REGRESSION_MIN_MLP_SPEEDUP, REGRESSION_MIN_ADAPTIVE_SPEEDUP.
+REGRESSION_MIN_MLP_SPEEDUP, REGRESSION_MIN_ADAPTIVE_SPEEDUP,
+REGRESSION_MIN_SHARDED_SPEEDUP, REGRESSION_MAX_CONSENSUS_MS.
 """
 from __future__ import annotations
 
@@ -46,6 +54,7 @@ from benchmarks.bench_components import (  # noqa: E402
     bench_proxy_throughput,
     write_bench_json,
 )
+from benchmarks.bench_sharded import bench_sharded_throughput  # noqa: E402
 
 BASELINE = Path(__file__).resolve().parent / "baseline_components.json"
 
@@ -61,7 +70,10 @@ def main(argv=None) -> int:
     # (measured 1.25x at n_after=18k vs 1.38x at 30k), so a quick run
     # would fail the gate without any code regression
     adaptive = bench_adaptive_throughput()
-    write_bench_json(throughput, adaptive, mlp)
+    sharded = bench_sharded_throughput(
+        n_before=1_500 if quick else 2_000,
+        n_after=4_000 if quick else 6_000)
+    write_bench_json(throughput, adaptive, mlp, sharded)
     print(f"wrote {BENCH_JSON}")
 
     base = json.loads(BASELINE.read_text())
@@ -73,8 +85,38 @@ def main(argv=None) -> int:
         "REGRESSION_MIN_MLP_SPEEDUP", base["min_mlp_speedup"]))
     min_adaptive = float(os.environ.get(
         "REGRESSION_MIN_ADAPTIVE_SPEEDUP", base["min_adaptive_speedup"]))
+    min_sharded = float(os.environ.get(
+        "REGRESSION_MIN_SHARDED_SPEEDUP", base["min_sharded_speedup"]))
+    consensus_env = os.environ.get("REGRESSION_MAX_CONSENSUS_MS")
+    max_consensus = (float(consensus_env) if consensus_env
+                     else float(base["advisory_max_consensus_ms"]))
 
     failures = []
+    if sharded["sharded_speedup"] < min_sharded:
+        failures.append(
+            f"K={sharded['n_hosts']} sharded/single aggregate throughput "
+            f"{sharded['sharded_speedup']:.2f}x < floor {min_sharded:.2f}x"
+        )
+    if sharded["swaps_committed"] < 1:
+        failures.append(
+            "sharded serving never committed a quorum-voted plan swap")
+    if not sharded["conserved"]:
+        failures.append("sharded serving lost or duplicated records")
+    if sharded["consensus_lag_records"] != 0:
+        failures.append(
+            f"{sharded['consensus_lag_records']} records served while a "
+            f"two-phase swap barrier was open"
+        )
+    worst_consensus = max(sharded["consensus_ms_per_swap"] or [0.0])
+    if worst_consensus > max_consensus:
+        msg = (
+            f"swap consensus overhead {worst_consensus:.1f} ms "
+            f"> bound {max_consensus:.1f} ms"
+        )
+        if consensus_env:  # wall-clock: only enforce on a pinned host
+            failures.append(msg)
+        else:
+            print(f"WARNING (advisory, host-dependent): {msg}")
     if mlp["mlp_fused_speedup"] < min_mlp:
         failures.append(
             f"fused-MLP/reference-MLP speedup {mlp['mlp_fused_speedup']:.2f}x "
@@ -131,7 +173,12 @@ def main(argv=None) -> int:
         f"{adaptive['adaptive_speedup']:.2f}x over static (floor "
         f"{min_adaptive:.2f}x), accuracy {adaptive['adaptive_accuracy']:.3f} "
         f">= {adaptive['accuracy_target']}, warm B&B "
-        f"{adaptive['warm_nodes']} < cold {adaptive['cold_nodes']} nodes"
+        f"{adaptive['warm_nodes']} < cold {adaptive['cold_nodes']} nodes; "
+        f"sharded K={sharded['n_hosts']} "
+        f"{sharded['sharded_speedup']:.2f}x over single (floor "
+        f"{min_sharded:.2f}x), {sharded['swaps_committed']} quorum "
+        f"swap(s), lag {sharded['consensus_lag_records']} records, worst "
+        f"consensus {worst_consensus:.1f} ms"
     )
     return 0
 

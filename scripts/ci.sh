@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # Single-entry CI: tier-1 tests + regression gates (fused proxy scoring,
-# adaptive serving).
+# adaptive serving, K=4 sharded serving with quorum-voted swaps).
 #   scripts/ci.sh           full run
 #   scripts/ci.sh --quick   smaller benchmark workload
 #   scripts/ci.sh --fast    iteration lane: skip @slow tests, quick benchmarks
@@ -21,7 +21,7 @@ done
 echo "== tier-1 tests =="
 python -m pytest -x -q ${PYTEST_ARGS[@]+"${PYTEST_ARGS[@]}"}
 
-echo "== regression gates (fused proxy scoring + adaptive serving) =="
+echo "== regression gates (fused scoring + adaptive + sharded serving) =="
 python benchmarks/check_regression.py ${BENCH_ARGS[@]+"${BENCH_ARGS[@]}"}
 
 echo "CI OK"

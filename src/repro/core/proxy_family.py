@@ -106,6 +106,32 @@ MLP1 = register_family(
 )
 
 
+def _packed_train_unsupported(x, y, seed):
+    raise TypeError(
+        "the 'packed1' family is a wire/device format, not a trainable one: "
+        "deserialized plans carry folded PackedProxy params whose original "
+        "training-side parameterization (standardizer, raw weights) is gone. "
+        "Re-optimization happens where the builder lives (the coordinator), "
+        "never on a host serving a deserialized artifact."
+    )
+
+
+# The already-folded depth-1 form itself, registered as a first-class family
+# so DESERIALIZED scorer artifacts (kernels/ops.py::deserialize_scorer) are
+# indistinguishable from locally-built plans everywhere downstream: family_of
+# dispatch, the pack caches, the per-stage kernel fallback, and the scorer
+# compile cache all work on PackedProxy params with pack == identity.
+PACKED1 = register_family(
+    ProxyFamily(
+        name="packed1",
+        params_cls=pm.PackedProxy,
+        train=_packed_train_unsupported,
+        score=lambda p, x: pm.packed_score(p, np.asarray(x, np.float32)),
+        pack=lambda p: p,
+    ),
+)
+
+
 # ------------------------------------------------- cascade-level packing
 # Hidden widths are padded to a small bucket ladder so the fused kernel
 # compiles one program per (F, H, P) shape class, not one per cascade.

@@ -203,6 +203,56 @@ def make_drifting_stream(
     )
 
 
+def make_sharded_drifting_streams(
+    ds: Dataset,
+    n_hosts: int,
+    n_before: int,
+    n_after: int,
+    *,
+    shift_targets: Dict[int, float],
+    corr_gain: float = 1.0,
+    drift_skew: float = 0.3,
+    boundary_jitter: float = 0.0,
+    seed: int = 0,
+) -> List[DriftingStream]:
+    """Per-host drifting shards of the SAME underlying population drift —
+    the multi-host serving workload (DESIGN.md §6).
+
+    Every shard drifts in the same direction, but the magnitude each host
+    observes is skewed: host k's shift targets are scaled by
+    ``1 + drift_skew * g_k`` with ``g_k`` spread symmetrically in
+    [-1, 1] (and each shard gets its own sampling seed).  That is exactly
+    why a per-host swap decision is statistically noisy — the lightly-hit
+    shards' detectors fire late or not at all — and what the quorum vote
+    averages over.  ``boundary_jitter`` additionally staggers each
+    shard's drift onset by up to that fraction of ``n_before``
+    (de-synchronized detection, the harder consensus case).
+
+    ``n_before`` / ``n_after`` are PER-SHARD lengths; shards are disjoint
+    samples (per-shard seeds), as if a load balancer hash-partitioned one
+    stream.
+    """
+    if n_hosts < 1:
+        raise ValueError("n_hosts must be >= 1")
+    rng = np.random.RandomState(seed + 104729)
+    gains = (np.linspace(-1.0, 1.0, n_hosts) if n_hosts > 1
+             else np.zeros(1))
+    streams = []
+    for k in range(n_hosts):
+        scale = 1.0 + drift_skew * float(gains[k])
+        targets_k = {c: t * scale for c, t in shift_targets.items()}
+        jitter = int(boundary_jitter * n_before * (rng.random_sample() - 0.5) * 2)
+        nb = max(1, n_before + jitter)
+        stream = make_drifting_stream(
+            ds, nb, n_after + (n_before - nb),
+            shift_targets=targets_k, corr_gain=corr_gain, seed=seed + 7 * k + 1,
+        )
+        stream.meta["host"] = k
+        stream.meta["drift_scale"] = scale
+        streams.append(stream)
+    return streams
+
+
 # --------------------------------------------------------------------- UDFs
 def _train_udf_model(x, y, n_classes: int, hidden: int, depth: int, seed: int,
                      steps: int = 400):

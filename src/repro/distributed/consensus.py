@@ -1,0 +1,278 @@
+"""Quorum-voted plan-swap consensus for multi-host sharded serving
+(DESIGN.md §6).
+
+Per-host drift detection is statistically noisy: one shard's CUSUM firing
+may be shard skew, not population drift.  A **global** plan swap therefore
+requires a quorum of hosts to have voted drift within the same plan epoch.
+This module is the transport-agnostic protocol core — explicit message
+dataclasses plus a coordinator state machine with no I/O, threads, or
+engine imports — so the inline driver, the thread transport, and the unit
+tests all exercise the identical logic.
+
+Protocol (one swap):
+
+1. **VOTE** — a host whose local detector fired sends ``DriftVote`` (its
+   ``DriftEvent`` payload + its weighted reservoir export).  One vote per
+   host per epoch; votes carrying a stale epoch are discarded.
+2. **QUORUM** — when ``quorum(K)`` distinct hosts have voted, the
+   coordinator merges every known reservoir export (IPW weights
+   preserved), decides escalation from the merged Horvitz-Thompson
+   selectivities, runs the warm-started re-optimization ONCE, and
+   serializes the resulting ``(plan, scorer)`` into the versioned wire
+   artifact.
+3. **PREPARE** — the artifact is broadcast with the next epoch number.
+   Each host deserializes and stages it (does NOT serve it) and replies
+   ``SwapAck``.
+4. **COMMIT** — only after **all** hosts acked does the coordinator send
+   ``SwapCommit``; hosts then atomically install the staged plan.  A
+   single NACK aborts the epoch (staged plans are dropped, votes cleared).
+   No host ever *serves* a plan version a peer has not acknowledged —
+   the two-phase barrier is what the conservation property test leans on.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+from repro.serving.stats import (
+    DriftEvent,
+    ReservoirSample,
+    ipw_selectivity,
+    merge_reservoir_samples,
+)
+
+
+# ------------------------------------------------------------- messages
+@dataclass
+class DriftVote:
+    """Host-local drift trigger escalated to the coordinator."""
+
+    host: int
+    epoch: int  # plan epoch the host was serving when its detector fired
+    event: DriftEvent
+    reservoir: ReservoirSample
+
+
+@dataclass
+class SwapPrepare:
+    """Phase 1 broadcast: stage (don't serve) the new plan artifact."""
+
+    epoch: int  # the NEW epoch being proposed
+    artifact: bytes  # kernels.ops.serialize_scorer wire blob
+
+
+@dataclass
+class SwapAck:
+    host: int
+    epoch: int
+    ok: bool
+    error: str = ""
+
+
+@dataclass
+class SwapCommit:
+    """Phase 2 broadcast: every host acked — install atomically."""
+
+    epoch: int
+
+
+@dataclass
+class SwapRecord:
+    """Coordinator-side log entry for one attempted swap."""
+
+    epoch: int
+    voters: List[int]
+    signals: List[str]
+    mode: str  # escalation decision ("alloc" | "bnb")
+    committed: bool
+    aborted_by: Optional[int] = None
+    merged_rows: int = 0
+    # records submitted anywhere between quorum and commit: >0 would mean
+    # a host kept serving while the two-phase barrier was still open
+    # (filled by the transport; the state machine cannot see submissions)
+    lag_records: int = 0
+    # wall-clock spent in each protocol step (re-optimization separate:
+    # it is real optimizer work, not consensus overhead)
+    reopt_ms: float = 0.0
+    serialize_ms: float = 0.0
+    prepare_ms: float = 0.0
+    commit_ms: float = 0.0
+
+    @property
+    def consensus_ms(self) -> float:
+        return self.serialize_ms + self.prepare_ms + self.commit_ms
+
+
+def quorum(n_hosts: int, frac: float = 0.5) -> int:
+    """Votes needed for a global swap: strict majority by default
+    (``floor(frac * K) + 1``), never more than K, never fewer than 1."""
+    return max(1, min(n_hosts, int(n_hosts * frac) + 1))
+
+
+class QuorumSwapCoordinator:
+    """Collects ``DriftVote``s and drives the two-phase swap.
+
+    The coordinator owns the AUTHORITATIVE plan (with its live builder /
+    B&B tree in ``plan.meta`` — hosts only ever hold deserialized
+    artifacts, so re-optimization state never fans out).  ``reopt_fn``
+    is injected: ``(plan, merged_sample, mode) -> new_plan`` — the
+    sharded server binds it to ``core.optimizer.reoptimize``; unit tests
+    bind a stub.
+    """
+
+    def __init__(self, plan, n_hosts: int, *,
+                 reopt_fn: Callable[[object, ReservoirSample, str], object],
+                 quorum_frac: float = 0.5,
+                 choose_mode: Optional[Callable[[object, Dict[int, float]], str]] = None,
+                 max_tile: int = 8192):
+        self.plan = plan
+        self.n_hosts = int(n_hosts)
+        self.quorum_frac = float(quorum_frac)
+        self.reopt_fn = reopt_fn
+        self.choose_mode = choose_mode
+        self.max_tile = max_tile
+        self.epoch = 0  # current committed epoch
+        self._votes: Dict[int, DriftVote] = {}  # host -> vote (current epoch)
+        self.swap_log: List[SwapRecord] = []
+        self.pending: Optional[SwapPrepare] = None
+        self._pending_record: Optional[SwapRecord] = None
+        self._new_plan = None
+        self._acks: Dict[int, SwapAck] = {}
+
+    # ------------------------------------------------------------ voting
+    @property
+    def quorum_size(self) -> int:
+        return quorum(self.n_hosts, self.quorum_frac)
+
+    @property
+    def votes_pending(self) -> int:
+        return len(self._votes)
+
+    @property
+    def voters(self) -> List[int]:
+        return sorted(self._votes)
+
+    def offer_vote(self, vote: DriftVote) -> bool:
+        """Register one host's drift vote.  Returns True when this vote
+        completes a quorum (caller should then run ``propose``).  Votes
+        for a superseded epoch, duplicate votes from the same host, and
+        votes arriving while a swap is already in flight are discarded."""
+        if vote.epoch != self.epoch or self.pending is not None:
+            return False
+        if vote.host in self._votes:
+            return False
+        self._votes[vote.host] = vote
+        return len(self._votes) >= self.quorum_size
+
+    # ---------------------------------------------------------- proposing
+    def propose(self, extra_reservoirs: Optional[List[ReservoirSample]] = None
+                ) -> SwapPrepare:
+        """Quorum reached: merge reservoirs, re-optimize once, serialize.
+
+        ``extra_reservoirs``: exports pulled from hosts that did NOT vote
+        — their rows are just as fresh, and the merged sample should span
+        every shard, not only the drifted ones."""
+        from repro.kernels.ops import serialize_scorer
+
+        if len(self._votes) < self.quorum_size:
+            raise RuntimeError(
+                f"propose() before quorum: {len(self._votes)} votes < "
+                f"{self.quorum_size}")
+        if self.pending is not None:
+            raise RuntimeError("a swap is already in flight")
+        merged = merge_reservoir_samples(
+            [v.reservoir for v in self._votes.values()]
+            + list(extra_reservoirs or []))
+        mode = self._decide_mode(merged)
+        t0 = time.perf_counter()
+        new_plan = self.reopt_fn(self.plan, merged, mode)
+        reopt_ms = (time.perf_counter() - t0) * 1e3
+        t0 = time.perf_counter()
+        artifact = serialize_scorer(new_plan, max_tile=self.max_tile)
+        ser_ms = (time.perf_counter() - t0) * 1e3
+        new_epoch = self.epoch + 1
+        self.pending = SwapPrepare(epoch=new_epoch, artifact=artifact)
+        self._pending_record = SwapRecord(
+            epoch=new_epoch,
+            voters=sorted(self._votes),
+            signals=[v.event.signal for v in self._votes.values()],
+            mode=mode, committed=False, merged_rows=merged.n_rows,
+            reopt_ms=reopt_ms, serialize_ms=ser_ms,
+        )
+        self._new_plan = new_plan
+        self._acks = {}
+        return self.pending
+
+    def _decide_mode(self, merged: ReservoirSample) -> str:
+        """Escalation from the MERGED evidence: the per-host kappa²/regret
+        decisions ride the votes, but the coordinator re-derives the mode
+        from pooled Horvitz-Thompson selectivities so one noisy shard
+        cannot force the expensive B&B path alone.  A majority of
+        escalated votes still forces "bnb" (correlation-structure shifts
+        are only visible host-side)."""
+        if self.choose_mode is not None:
+            fresh = {}
+            for p in merged.known_sigma:
+                sel = ipw_selectivity(merged, p, min_labels=8)
+                if sel is not None:
+                    fresh[p] = sel
+            mode = self.choose_mode(self.plan, fresh)
+        else:
+            mode = "alloc"
+        escalated = sum(1 for v in self._votes.values() if v.event.escalated)
+        if escalated * 2 > len(self._votes):
+            mode = "bnb"
+        return mode
+
+    # ------------------------------------------------------- ack / commit
+    def offer_ack(self, ack: SwapAck) -> Optional[SwapCommit]:
+        """Phase-1 responses.  Returns the ``SwapCommit`` once EVERY host
+        has acked; a NACK aborts the epoch immediately (returns None and
+        clears the in-flight state — callers observe via ``pending``)."""
+        if self.pending is None or ack.epoch != self.pending.epoch:
+            return None
+        if not ack.ok:
+            rec = self._pending_record
+            rec.aborted_by = ack.host
+            self.swap_log.append(rec)
+            self._clear_round()
+            return None
+        self._acks[ack.host] = ack
+        if len(self._acks) < self.n_hosts:
+            return None
+        commit = SwapCommit(epoch=self.pending.epoch)
+        self.epoch = self.pending.epoch
+        self.plan = self._new_plan
+        rec = self._pending_record
+        rec.committed = True
+        self.swap_log.append(rec)
+        self._clear_round()
+        return commit
+
+    def note_prepare_ms(self, ms: float) -> None:
+        """Transport-side hook: wall time spent distributing the prepare
+        + collecting acks (the state machine itself cannot see I/O)."""
+        if self._pending_record is not None:
+            self._pending_record.prepare_ms += ms
+        elif self.swap_log:
+            self.swap_log[-1].prepare_ms += ms
+
+    def note_commit_ms(self, ms: float) -> None:
+        """Transport-side hook: wall time spent distributing the commit
+        and installing the staged plan on every host — the slow half of
+        phase 2, invisible to the state machine."""
+        if self.swap_log:
+            self.swap_log[-1].commit_ms += ms
+
+    def _clear_round(self) -> None:
+        self.pending = None
+        self._pending_record = None
+        self._new_plan = None
+        self._acks = {}
+        self._votes = {}
+
+    # ------------------------------------------------------------- stats
+    @property
+    def swaps_committed(self) -> int:
+        return sum(1 for r in self.swap_log if r.committed)

@@ -1,0 +1,434 @@
+"""Multi-host sharded serving with quorum-voted plan swaps (DESIGN.md §6).
+
+The input stream is sharded across K simulated hosts.  Each host runs its
+OWN ``CascadeServer`` — local CUSUM detectors, importance-audit sampler,
+and weighted reservoir — but local drift triggers do not swap plans:
+they become ``DriftVote``s to a ``QuorumSwapCoordinator``.  On quorum the
+coordinator merges every host's reservoir export (IPW weights preserved),
+runs the warm-started re-optimization ONCE, and broadcasts the result as
+the versioned scorer wire artifact through a two-phase (prepare/commit)
+epoch swap: hosts stage + ack first, and only install once every peer has
+acknowledged — no host ever serves a plan version its peers haven't seen.
+In-flight records still finish under the plan version that scored them
+(the engine's versioned ``_PlanState`` machinery), so record conservation
+holds across global swaps exactly as it does across local ones.
+
+Two transports share all protocol logic:
+
+* ``transport="inline"`` — hosts are plain objects driven round-robin by
+  the caller's thread; deterministic, the benchmark/test default.
+* ``transport="thread"`` — each host runs in its own worker thread with a
+  command queue; the coordinator talks to it only via messages.  Same
+  code path as inline (``_ThreadHost`` proxies ``ShardHost``), but the
+  prepare/commit barrier crosses real thread boundaries.
+
+A real deployment would replace the transport with RPC; the protocol core
+(``distributed/consensus.py``) is transport-agnostic by construction.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.query import PhysicalPlan
+from repro.distributed.consensus import (
+    DriftVote,
+    QuorumSwapCoordinator,
+    SwapAck,
+    SwapCommit,
+    SwapPrepare,
+    SwapRecord,
+)
+from repro.serving.engine import CascadeServer, ServeStats
+from repro.serving.stats import AdaptivePolicy, DriftEvent
+
+
+@dataclass
+class ShardedServeStats:
+    """Aggregate view over K hosts plus the consensus layer."""
+
+    n_hosts: int
+    per_host: List[ServeStats]
+    submitted_per_host: List[int]
+    votes_cast: int = 0
+    swaps_committed: int = 0
+    swaps_aborted: int = 0
+    final_epoch: int = 0
+    swap_log: List[SwapRecord] = field(default_factory=list)
+    wall_ms: float = 0.0
+
+    @property
+    def submitted(self) -> int:
+        return sum(self.submitted_per_host)
+
+    @property
+    def emitted(self) -> int:
+        return sum(s.emitted for s in self.per_host)
+
+    @property
+    def rejected(self) -> int:
+        return sum(s.rejected for s in self.per_host)
+
+    @property
+    def host_cost_ms(self) -> List[float]:
+        return [s.model_cost_ms for s in self.per_host]
+
+    @property
+    def critical_path_cost_ms(self) -> float:
+        """Hosts run in parallel: the cost-model makespan is the slowest
+        host's total, not the sum."""
+        return max(self.host_cost_ms) if self.per_host else 0.0
+
+    @property
+    def aggregate_rows_per_cost_s(self) -> float:
+        cp = self.critical_path_cost_ms
+        return self.submitted / (cp / 1e3) if cp > 0 else 0.0
+
+    @property
+    def consensus_ms_total(self) -> float:
+        return sum(r.consensus_ms for r in self.swap_log)
+
+
+class ShardHost:
+    """One simulated serving host: a private ``CascadeServer`` whose drift
+    triggers are exported as votes, plus the two-phase staging slot."""
+
+    def __init__(self, host_id: int, plan: PhysicalPlan, *, tile: int,
+                 policy: AdaptivePolicy, seed: int, use_kernel: bool = True):
+        self.host_id = host_id
+        self.engine = CascadeServer(
+            plan, tile=tile, use_kernel=use_kernel, adaptive=True,
+            policy=policy, seed=seed)
+        self.query = plan.query
+        self.epoch = 0
+        self._voted_epoch = -1
+        self._staged: Optional[Tuple[int, PhysicalPlan, object]] = None
+        self.submitted = 0
+        # idx -> engine plan version current when the record was submitted
+        # (None until a test enables tracking; kept off the hot path)
+        self.track_versions = False
+        self.submit_version: Dict[int, int] = {}
+
+    # ------------------------------------------------------------- serving
+    def submit_chunk(self, indices: np.ndarray, rows: np.ndarray) -> None:
+        if self.track_versions:
+            v = self.engine.plan_version
+            for i in indices:
+                self.submit_version[int(i)] = v
+        self.engine.submit(indices, rows)
+        self.engine.pump()
+        self.submitted += len(rows)
+
+    def drain(self) -> ServeStats:
+        self.engine.pump(drain=True)
+        st = self.engine.stats
+        st.rejected = self.submitted - st.emitted
+        return st
+
+    # -------------------------------------------------------------- voting
+    def poll_vote(self) -> Optional[DriftVote]:
+        """Consume a pending local drift trigger into a quorum vote.
+        At most one vote per served epoch; repeat triggers within the
+        epoch stay parked on the engine (the eventual global install
+        clears them)."""
+        if self._voted_epoch == self.epoch:
+            return None
+        drift = self.engine.take_drift()
+        if drift is None:
+            return None
+        signal, observed, expected = drift
+        _mode, escalated = self.engine.escalation_hint()
+        self._voted_epoch = self.epoch
+        return DriftVote(
+            host=self.host_id, epoch=self.epoch,
+            event=DriftEvent(
+                at_record=self.submitted, signal=signal,
+                observed=float(observed), expected=float(expected),
+                escalated=escalated, plan_version=self.epoch,
+            ),
+            reservoir=self.engine.reservoir_export(),
+        )
+
+    def reservoir_export(self):
+        return self.engine.reservoir_export()
+
+    # --------------------------------------------------------- two-phase
+    def prepare(self, msg: SwapPrepare) -> SwapAck:
+        """Phase 1: deserialize + stage the artifact; serve nothing new."""
+        from repro.kernels.ops import deserialize_scorer
+
+        try:
+            if msg.epoch != self.epoch + 1:
+                raise ValueError(
+                    f"host {self.host_id} at epoch {self.epoch} cannot "
+                    f"stage epoch {msg.epoch}")
+            plan, scorer = deserialize_scorer(msg.artifact, self.query)
+            self._staged = (msg.epoch, plan, scorer)
+            return SwapAck(host=self.host_id, epoch=msg.epoch, ok=True)
+        except Exception as e:  # NACK aborts the epoch coordinator-side
+            self._staged = None
+            return SwapAck(host=self.host_id, epoch=msg.epoch, ok=False,
+                           error=str(e))
+
+    def commit(self, msg: SwapCommit) -> None:
+        """Phase 2: every peer acked — install the staged plan.  In-flight
+        queue entries finish under their scoring version."""
+        if self._staged is None or self._staged[0] != msg.epoch:
+            raise RuntimeError(
+                f"host {self.host_id}: commit for epoch {msg.epoch} "
+                f"without a matching staged plan")
+        _, plan, scorer = self._staged
+        self.engine.install_plan(plan, scorer=scorer, version=msg.epoch)
+        self.epoch = msg.epoch
+        self._staged = None
+
+    def abort(self) -> None:
+        """Aborted epoch: drop the staged copy AND re-arm voting — the
+        epoch number did not advance, so without the reset every host
+        that voted would be locked out (`_voted_epoch == epoch`) and a
+        transient NACK would permanently disable quorum swaps."""
+        self._staged = None
+        self._voted_epoch = -1
+
+
+class _ThreadHost:
+    """Thread-isolated ``ShardHost``: the host's engine lives entirely on
+    its worker thread; every interaction is a (request, reply) message
+    pair over queues.  API-identical to ``ShardHost``."""
+
+    def __init__(self, host: ShardHost):
+        self._host = host
+        self.host_id = host.host_id
+        self._req: "queue.Queue" = queue.Queue()
+        self._thread = threading.Thread(
+            target=self._loop, name=f"shard-host-{host.host_id}", daemon=True)
+        self._thread.start()
+
+    def _loop(self):
+        while True:
+            fn, args, reply = self._req.get()
+            if fn is None:
+                reply.put(None)
+                return
+            try:
+                reply.put((True, fn(*args)))
+            except Exception as e:  # surfaced on the caller thread
+                reply.put((False, e))
+
+    def _call(self, fn, *args):
+        reply: "queue.Queue" = queue.Queue()
+        self._req.put((fn, args, reply))
+        ok, out = reply.get()
+        if not ok:
+            raise out
+        return out
+
+    @property
+    def epoch(self) -> int:
+        return self._host.epoch
+
+    @property
+    def submitted(self) -> int:
+        return self._host.submitted
+
+    @property
+    def engine(self) -> CascadeServer:
+        return self._host.engine
+
+    @property
+    def track_versions(self) -> bool:
+        return self._host.track_versions
+
+    @track_versions.setter
+    def track_versions(self, v: bool) -> None:
+        self._host.track_versions = v
+
+    @property
+    def submit_version(self) -> Dict[int, int]:
+        return self._host.submit_version
+
+    def submit_chunk(self, indices, rows):
+        return self._call(self._host.submit_chunk, indices, rows)
+
+    def drain(self):
+        return self._call(self._host.drain)
+
+    def poll_vote(self):
+        return self._call(self._host.poll_vote)
+
+    def reservoir_export(self):
+        return self._call(self._host.reservoir_export)
+
+    def prepare(self, msg):
+        return self._call(self._host.prepare, msg)
+
+    def commit(self, msg):
+        return self._call(self._host.commit, msg)
+
+    def abort(self):
+        return self._call(self._host.abort)
+
+    def stop(self):
+        reply: "queue.Queue" = queue.Queue()
+        self._req.put((None, (), reply))
+        reply.get()
+        self._thread.join(timeout=10)
+
+
+class ShardedCascadeServer:
+    """K-host sharded serving driver.
+
+    ``plan`` should come from ``optimize(..., keep_state=True)`` so the
+    coordinator's re-optimizations warm-start; hosts receive only the
+    serialized artifact (builder state never fans out).  ``n_hosts=1``
+    degrades to single-host serving THROUGH the consensus path (quorum of
+    one), which is what the sharded benchmark uses as its baseline.
+    """
+
+    def __init__(self, plan: PhysicalPlan, n_hosts: int = 4, *,
+                 tile: int = 1024, policy: Optional[AdaptivePolicy] = None,
+                 quorum_frac: float = 0.5, seed: int = 0,
+                 use_kernel: bool = True, transport: str = "inline",
+                 max_tile: int = 8192):
+        if transport not in ("inline", "thread"):
+            raise ValueError(f"unknown transport {transport!r}")
+        self.n_hosts = int(n_hosts)
+        self.policy = policy or AdaptivePolicy()
+        self.plan0 = plan
+        self.query = plan.query
+        self.coordinator = QuorumSwapCoordinator(
+            plan, self.n_hosts, reopt_fn=self._reopt,
+            quorum_frac=quorum_frac,
+            choose_mode=lambda p, fresh: self.policy.choose_escalation(p, fresh)[0],
+            max_tile=max_tile,
+        )
+        hosts = [
+            ShardHost(k, plan, tile=tile, policy=self.policy,
+                      seed=seed + 1000 * k, use_kernel=use_kernel)
+            for k in range(self.n_hosts)
+        ]
+        self.transport = transport
+        self.hosts: List = (
+            [_ThreadHost(h) for h in hosts] if transport == "thread" else hosts)
+        self.stats = ShardedServeStats(
+            n_hosts=self.n_hosts,
+            per_host=[h.engine.stats for h in self.hosts],
+            submitted_per_host=[0] * self.n_hosts,
+        )
+
+    # ------------------------------------------------------ re-optimization
+    def _reopt(self, plan: PhysicalPlan, merged, mode: str) -> PhysicalPlan:
+        from repro.core.optimizer import reoptimize
+
+        return reoptimize(plan, merged.x, known_sigma=merged.known_sigma,
+                          mode=mode, step=self.policy.step)
+
+    # ------------------------------------------------------------ protocol
+    def _handle_votes(self) -> None:
+        for h in self.hosts:
+            vote = h.poll_vote()
+            if vote is None:
+                continue
+            self.stats.votes_cast += 1
+            if self.coordinator.offer_vote(vote):
+                self._run_swap()
+
+    def _run_swap(self) -> None:
+        """Quorum reached: merge + re-optimize + two-phase broadcast."""
+        voters = set(self.coordinator.voters)
+        extras = [h.reservoir_export() for h in self.hosts
+                  if h.host_id not in voters]
+        submitted_at_quorum = sum(h.submitted for h in self.hosts)
+        prepare = self.coordinator.propose(extra_reservoirs=extras)
+        t0 = time.perf_counter()
+        commit = None
+        for h in self.hosts:
+            ack = h.prepare(prepare)
+            commit = self.coordinator.offer_ack(ack)
+            if not ack.ok:
+                break
+        self.coordinator.note_prepare_ms((time.perf_counter() - t0) * 1e3)
+        if commit is None:  # aborted (NACK) — drop every host's staged copy
+            for h in self.hosts:
+                h.abort()
+            self.stats.swaps_aborted += 1
+            return
+        t0 = time.perf_counter()
+        for h in self.hosts:
+            h.commit(commit)
+        self.coordinator.note_commit_ms((time.perf_counter() - t0) * 1e3)
+        # the barrier is synchronous in both transports: any submissions
+        # while it was open would show up here
+        self.coordinator.swap_log[-1].lag_records = (
+            sum(h.submitted for h in self.hosts) - submitted_at_quorum)
+        self.stats.swaps_committed += 1
+
+    # -------------------------------------------------------------- driver
+    def _drive(self, streams: List[np.ndarray], idx_map: List[np.ndarray],
+               chunk: int) -> ShardedServeStats:
+        """Round-robin the hosts one chunk at a time, handling votes (and
+        any resulting swap) at every chunk boundary."""
+        t_start = time.perf_counter()
+        pos = [0] * self.n_hosts
+        while any(pos[k] < len(streams[k]) for k in range(self.n_hosts)):
+            for k, h in enumerate(self.hosts):
+                lo = pos[k]
+                if lo >= len(streams[k]):
+                    continue
+                hi = min(lo + chunk, len(streams[k]))
+                h.submit_chunk(idx_map[k][lo:hi], streams[k][lo:hi])
+                pos[k] = hi
+            self._handle_votes()
+        for k, h in enumerate(self.hosts):
+            h.drain()
+            self.stats.submitted_per_host[k] = h.submitted
+        self.stats.final_epoch = self.coordinator.epoch
+        self.stats.swap_log = list(self.coordinator.swap_log)
+        self.stats.wall_ms = (time.perf_counter() - t_start) * 1e3
+        if self.transport == "thread":
+            for h in self.hosts:
+                h.stop()
+        return self.stats
+
+    def run_streams(self, streams: Sequence[np.ndarray], *,
+                    chunk: int = 2048,
+                    index_bases: Optional[Sequence[int]] = None
+                    ) -> ShardedServeStats:
+        """Serve one pre-sharded stream per host (lengths may differ).
+        ``index_bases`` offsets each shard's global record indices so they
+        stay disjoint across hosts (defaults to cumulative offsets)."""
+        if len(streams) != self.n_hosts:
+            raise ValueError(f"{len(streams)} streams for {self.n_hosts} hosts")
+        if index_bases is None:
+            index_bases, acc = [], 0
+            for x in streams:
+                index_bases.append(acc)
+                acc += len(x)
+        idx_map = [np.arange(len(x), dtype=np.int64) + base
+                   for x, base in zip(streams, index_bases)]
+        return self._drive([np.asarray(x) for x in streams], idx_map, chunk)
+
+    def run_stream(self, x: np.ndarray, *, chunk: int = 2048
+                   ) -> ShardedServeStats:
+        """Shard one stream round-robin by contiguous chunk: chunk i goes
+        to host i mod K, preserving each shard's arrival order."""
+        shards: List[List[np.ndarray]] = [[] for _ in range(self.n_hosts)]
+        bases: List[List[np.ndarray]] = [[] for _ in range(self.n_hosts)]
+        for ci, s in enumerate(range(0, len(x), chunk)):
+            k = ci % self.n_hosts
+            shards[k].append(x[s:s + chunk])
+            bases[k].append(np.arange(s, min(s + chunk, len(x)), dtype=np.int64))
+        streams = [np.concatenate(s) if s else np.empty((0, x.shape[1]), x.dtype)
+                   for s in shards]
+        idx_map = [np.concatenate(b) if b else np.empty(0, np.int64)
+                   for b in bases]
+        return self._drive(streams, idx_map, chunk)
+
+    @property
+    def emitted(self) -> List[List[int]]:
+        return [list(h.engine.emitted) for h in self.hosts]

@@ -307,21 +307,41 @@ class CascadeScorer:
 # The adaptive server hot-swaps plans mid-stream and can oscillate between
 # plan versions; each CascadeScorer carries packed weights + jit programs,
 # so re-entering a previously compiled plan version must be a cache hit,
-# not a repack + retrace.  Keyed on the packed-param identity of every
-# stage — (family, params id, threshold) — so MLP-bearing plan swaps are
-# cache hits exactly like linear ones; values hold strong refs to the
-# params so ids stay valid.
+# not a repack + retrace.  Keyed on a CONTENT fingerprint of every stage's
+# packed parameters — (pred, family, packed-bytes digest, threshold) — not
+# on ``id(params)``: an id key would need the cache to pin the params alive
+# forever (or risk a recycled id aliasing a stale compiled scorer after the
+# old params are garbage-collected), whereas the fingerprint is immune to
+# id reuse by construction, lets swapped-out plans' params be collected,
+# and makes byte-identical params (e.g. a deserialized wire artifact of a
+# plan this process already compiled) a cache hit.
 _SCORER_CACHE: dict = {}
 _SCORER_CACHE_MAX = 64
 
 
-def _plan_scorer_key(plan, max_tile: int):
-    from repro.core.proxy_family import family_of
+def params_fingerprint(params) -> str:
+    """Content digest of one proxy's PACKED parameters (folded depth-1
+    form, family-agnostic).  Packing is memoized (``pack_proxy_cached``),
+    so the recurring cost is one blake2b over ~F*hidden floats — paid per
+    plan install, never per batch."""
+    import hashlib
 
+    pk = pack_proxy_cached(params)
+    h = hashlib.blake2b(digest_size=16)
+    h.update(str((pk.hidden,) + tuple(pk.w1.shape)).encode())
+    for a in (pk.w1, pk.b1, pk.w2):
+        h.update(np.ascontiguousarray(a, np.float32).tobytes())
+    h.update(np.float32(pk.b2).tobytes())
+    return h.hexdigest()
+
+
+def _plan_scorer_key(plan, max_tile: int):
+    # no family component: the packed fingerprint already determines the
+    # compiled program bit-for-bit, so e.g. a deserialized wire copy
+    # ("packed1" family) of a locally-built linear plan hits the same entry
     return tuple(
         (s.pred_idx,
-         family_of(s.proxy.params).name if s.proxy is not None else None,
-         id(s.proxy.params) if s.proxy is not None else None,
+         params_fingerprint(s.proxy.params) if s.proxy is not None else None,
          float(s.threshold))
         for s in plan.stages
     ) + (int(max_tile),)
@@ -334,17 +354,228 @@ def cascade_scorer_for_plan(plan, *, max_tile: int = 8192):
     proxied stage at all (nothing to fuse) — that outcome is cached too.
     """
     key = _plan_scorer_key(plan, max_tile)
-    params_now = tuple(
-        s.proxy.params if s.proxy is not None else None for s in plan.stages)
-    hit = _SCORER_CACHE.get(key)
-    if hit is not None and len(hit[0]) == len(params_now) and all(
-            a is b for a, b in zip(hit[0], params_now)):
-        return hit[1], True
+    if key in _SCORER_CACHE:
+        return _SCORER_CACHE[key], True
     scorer = CascadeScorer.from_plan(plan, max_tile=max_tile)
     if len(_SCORER_CACHE) >= _SCORER_CACHE_MAX:
         _SCORER_CACHE.pop(next(iter(_SCORER_CACHE)))
-    _SCORER_CACHE[key] = (params_now, scorer)
+    _SCORER_CACHE[key] = scorer
     return scorer, False
+
+
+# ------------------------------------------------- scorer wire format (v1)
+# A plan swap in multi-host serving ships a single serializable artifact:
+# the plan's stage metadata + the bucket-padded packed cascade tensors +
+# thresholds (DESIGN.md §6).  Layout:
+#
+#   b"COREWIRE" | u16 version | u16 pad | u64 header_len
+#   | header (canonical JSON, utf-8) | concatenated raw array payloads
+#
+# Every numeric tensor travels as raw dtype bytes (descriptors in the
+# header), so deserialize(serialize(x)) is BIT-exact: the receiving host's
+# scorer computes the identical masks, and re-serializing a deserialized
+# artifact reproduces the original bytes (tested).  Scalar floats live in
+# JSON, which round-trips float64 exactly (repr-based).  Deserialized
+# plans carry ``packed1``-family proxies (the folded form is the wire
+# truth; the training-side parameterization never travels).
+WIRE_MAGIC = b"COREWIRE"
+WIRE_VERSION = 1
+
+
+class WireFormatError(ValueError):
+    """Malformed / incompatible scorer artifact."""
+
+
+class _ArrayPool:
+    """Array blob registry for one serialization pass."""
+
+    def __init__(self):
+        self.descs: list = []
+        self.blobs: list = []
+        self._offset = 0
+
+    def put(self, a: np.ndarray) -> int:
+        a = np.ascontiguousarray(a)
+        raw = a.tobytes()
+        self.descs.append({
+            "dtype": a.dtype.str, "shape": list(a.shape),
+            "offset": self._offset, "nbytes": len(raw),
+        })
+        self.blobs.append(raw)
+        self._offset += len(raw)
+        return len(self.descs) - 1
+
+
+def _pool_get(descs, payload: memoryview, ref: int) -> np.ndarray:
+    d = descs[ref]
+    a = np.frombuffer(
+        payload[d["offset"]:d["offset"] + d["nbytes"]], dtype=np.dtype(d["dtype"])
+    )
+    return a.reshape(d["shape"]).copy()
+
+
+def serialize_scorer(plan, scorer=None, *, max_tile: int = 8192) -> bytes:
+    """Pack ``(plan, fused scorer)`` into the versioned wire artifact.
+
+    ``scorer=None`` builds (or cache-hits) the plan's scorer first.  Only
+    fully-proxied-or-proxyless stage metadata plus the packed cascade
+    travels — never UDFs (the receiving host binds its own ``Query``).
+    """
+    import json
+
+    if scorer is None:
+        scorer, _ = cascade_scorer_for_plan(plan, max_tile=max_tile)
+    if scorer is None:
+        raise WireFormatError("plan has no proxied stage: nothing to ship")
+    pool = _ArrayPool()
+    packed = scorer.packed
+    src_families = plan.meta.get("wire_src_families") or tuple(
+        s.proxy.family for s in plan.stages if s.proxy is not None)
+    stages = []
+    for s in plan.stages:
+        entry = {
+            "pred_idx": int(s.pred_idx), "alpha": float(s.alpha),
+            "threshold": float(s.threshold),
+            "est_reduction": float(s.est_reduction),
+            "est_selectivity": float(s.est_selectivity),
+            "est_cost": float(s.est_cost),
+            "proxy": None,
+        }
+        if s.proxy is not None:
+            rc = s.proxy.r_curve
+            entry["proxy"] = {
+                "d": [int(i) for i in s.proxy.d],
+                "cost": float(s.proxy.cost),
+                "train_f1": float(s.proxy.train_f1),
+                "n_train": int(s.proxy.n_train),
+                "r_curve": {
+                    "alphas": pool.put(np.asarray(rc.alphas)),
+                    "thresholds": pool.put(np.asarray(rc.thresholds)),
+                    "reductions": pool.put(np.asarray(rc.reductions)),
+                },
+            }
+        stages.append(entry)
+    header = {
+        "wire_version": WIRE_VERSION,
+        "plan": {
+            "stages": stages,
+            "est_total_cost": float(plan.est_total_cost),
+            "plan_version": int(plan.meta.get("plan_version", 0)),
+            "accuracy_target": float(plan.query.accuracy_target),
+            "n_predicates": int(plan.query.n),
+            "src_families": list(src_families),
+        },
+        "scorer": {
+            "w1": pool.put(packed.w1), "b1": pool.put(packed.b1),
+            "w2": pool.put(packed.w2), "b2": pool.put(packed.b2),
+            "thr": pool.put(np.asarray(scorer.thr, np.float32)),
+            "hidden": [int(h) for h in packed.hidden],
+            "stage_cols": [None if c is None else int(c)
+                           for c in scorer.stage_cols],
+            "block_m": int(scorer.block_m),
+            "max_tile": int(scorer.max_tile),
+        },
+        "arrays": pool.descs,
+    }
+    hdr = json.dumps(header, sort_keys=True,
+                     separators=(",", ":")).encode("utf-8")
+    out = bytearray()
+    out += WIRE_MAGIC
+    out += int(WIRE_VERSION).to_bytes(2, "little")
+    out += b"\x00\x00"
+    out += len(hdr).to_bytes(8, "little")
+    out += hdr
+    for raw in pool.blobs:
+        out += raw
+    return bytes(out)
+
+
+def deserialize_scorer(blob: bytes, query):
+    """Inverse of ``serialize_scorer``: rebuild ``(plan, scorer)`` against
+    the locally-bound ``query``.  The scorer's packed tensors, thresholds,
+    and therefore every keep decision are bit-identical to the sender's;
+    proxies come back as first-class ``packed1``-family models (reference
+    scoring and the per-stage kernel fallback both still work)."""
+    import json
+
+    from repro.core.proxy import ProxyModel, RCurve
+    from repro.core.proxy_family import unpack_cascade
+    from repro.core.query import PhysicalPlan, PlanStage
+
+    if blob[:len(WIRE_MAGIC)] != WIRE_MAGIC:
+        raise WireFormatError("bad magic: not a CORE scorer artifact")
+    ver = int.from_bytes(blob[8:10], "little")
+    if ver != WIRE_VERSION:
+        raise WireFormatError(f"wire version {ver} != supported {WIRE_VERSION}")
+    hdr_len = int.from_bytes(blob[12:20], "little")
+    header = json.loads(blob[20:20 + hdr_len].decode("utf-8"))
+    payload = memoryview(blob)[20 + hdr_len:]
+    descs = header["arrays"]
+    ph = header["plan"]
+    if int(ph["n_predicates"]) != query.n:
+        raise WireFormatError(
+            f"artifact built for {ph['n_predicates']} predicates; local "
+            f"query has {query.n}")
+    if abs(float(ph["accuracy_target"]) - float(query.accuracy_target)) > 1e-12:
+        raise WireFormatError("artifact/query accuracy targets differ")
+    sh = header["scorer"]
+    from repro.core.proxy_family import PackedCascade
+
+    packed = PackedCascade(
+        w1=_pool_get(descs, payload, sh["w1"]),
+        b1=_pool_get(descs, payload, sh["b1"]),
+        w2=_pool_get(descs, payload, sh["w2"]),
+        b2=_pool_get(descs, payload, sh["b2"]),
+        hidden=tuple(int(h) for h in sh["hidden"]),
+        families=tuple(ph["src_families"]),
+    )
+    thr = _pool_get(descs, payload, sh["thr"])
+    params_by_col = [unpack_cascade(packed, c) for c in range(packed.n_stages)]
+    stages = []
+    for st in ph["stages"]:
+        proxy = None
+        col = sh["stage_cols"][len(stages)]
+        if st["proxy"] is not None:
+            if col is None:
+                raise WireFormatError("proxied stage without a scorer column")
+            rc = st["proxy"]["r_curve"]
+            proxy = ProxyModel(
+                pred_idx=int(st["pred_idx"]),
+                d=tuple(st["proxy"]["d"]),
+                family="packed1",
+                params=params_by_col[col],
+                r_curve=RCurve(
+                    alphas=_pool_get(descs, payload, rc["alphas"]),
+                    thresholds=_pool_get(descs, payload, rc["thresholds"]),
+                    reductions=_pool_get(descs, payload, rc["reductions"]),
+                ),
+                cost=float(st["proxy"]["cost"]),
+                train_f1=float(st["proxy"]["train_f1"]),
+                n_train=int(st["proxy"]["n_train"]),
+            )
+        stages.append(PlanStage(
+            pred_idx=int(st["pred_idx"]), proxy=proxy,
+            alpha=float(st["alpha"]), threshold=float(st["threshold"]),
+            est_reduction=float(st["est_reduction"]),
+            est_selectivity=float(st["est_selectivity"]),
+            est_cost=float(st["est_cost"]),
+        ))
+    plan = PhysicalPlan(
+        query=query, stages=stages,
+        est_total_cost=float(ph["est_total_cost"]),
+        meta={
+            "mode": "wire",
+            "plan_version": int(ph["plan_version"]),
+            "wire_src_families": tuple(ph["src_families"]),
+        },
+    )
+    scorer = CascadeScorer(
+        [params_by_col[c] for c in range(packed.n_stages)], thr,
+        block_m=int(sh["block_m"]), max_tile=int(sh["max_tile"]),
+    )
+    scorer.stage_cols = [None if c is None else int(c)
+                         for c in sh["stage_cols"]]
+    return plan, scorer
 
 
 # -------------------------------------------------------------- attention

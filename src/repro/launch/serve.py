@@ -6,14 +6,23 @@ query and serve a record stream with continuous batching.
 
 ``--drift`` serves an order-inverting drifting stream instead of held-out
 rows; add ``--adaptive`` to let the server detect the drift and
-re-optimize mid-stream (DESIGN.md §4).
+re-optimize mid-stream (DESIGN.md §4).  ``--hosts K`` (with K > 1) shards
+the stream across K simulated hosts with quorum-voted global plan swaps
+(DESIGN.md §6); per-shard drift magnitudes are skewed, so single-host
+detectors disagree and the quorum is load-bearing.
 """
 from __future__ import annotations
 
 import argparse
 
 from repro.core import execute_plan, ns_plan, optimize, orig_plan, pp_plan
-from repro.data.synthetic import make_dataset, make_drifting_stream, make_query, make_udfs
+from repro.data.synthetic import (
+    make_dataset,
+    make_drifting_stream,
+    make_query,
+    make_sharded_drifting_streams,
+    make_udfs,
+)
 from repro.serving.engine import CascadeServer
 
 
@@ -34,6 +43,11 @@ def main():
                     help="drift-triggered online re-optimization")
     ap.add_argument("--drift", action="store_true",
                     help="serve a drifting stream (selectivity + correlation shift)")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="shard serving across K simulated hosts with "
+                         "quorum-voted plan swaps (K > 1 implies adaptive)")
+    ap.add_argument("--drift-skew", type=float, default=0.3,
+                    help="per-shard drift magnitude skew (multi-host only)")
     args = ap.parse_args()
 
     ds = make_dataset(n=args.n, correlation=args.correlation, seed=args.seed)
@@ -51,12 +65,18 @@ def main():
     elif args.mode == "pp":
         plan = pp_plan(q, ds.x[:k], kind=args.proxy_kind)
     else:
+        # K > 1 implies the adaptive loop: the coordinator's quorum
+        # re-optimizations need the builder/B&B state to warm-start
         plan = optimize(q, ds.x[:k], mode=args.mode, kind=args.proxy_kind,
-                        keep_state=args.adaptive)
+                        keep_state=args.adaptive or args.hosts > 1)
     print(plan.describe())
     if any(s.proxy is not None for s in plan.stages):
         print("proxy families:",
               " ".join(s.proxy.family for s in plan.stages if s.proxy is not None))
+
+    if args.hosts > 1:
+        _serve_sharded(args, ds, q, plan)
+        return
 
     if args.drift:
         stream = make_drifting_stream(
@@ -93,6 +113,72 @@ def main():
                   f"{ev.order_before} -> {ev.order_after}")
     print(f"cost model: {stats.model_cost_ms / len(x_serve):.3f} ms/rec "
           f"(ORIG {orig_res.cost_per_record(len(x_serve)):.3f}); "
+          f"served accuracy {served_acc:.3f}")
+
+
+def _serve_sharded(args, ds, q, plan):
+    """K-host sharded serving with quorum-voted swaps (DESIGN.md §6)."""
+    import numpy as np
+
+    from repro.distributed.serving import ShardedCascadeServer
+
+    if not any(s.proxy is not None for s in plan.stages):
+        raise SystemExit(
+            f"--hosts {args.hosts} needs a proxied plan: quorum swaps "
+            f"broadcast the packed scorer artifact, which mode="
+            f"{args.mode!r} does not produce")
+
+    K = args.hosts
+    per_host = max(args.n // (2 * K), 1500)
+    if args.drift:
+        streams = make_sharded_drifting_streams(
+            ds, K, max(per_host // 4, 500), per_host,
+            shift_targets={c: (2.8 if c != 1 else -2.6)
+                           for c in range(args.preds)},
+            corr_gain=2.5, drift_skew=args.drift_skew, seed=args.seed,
+        )
+        xs = [s.x for s in streams]
+        print(f"{K} drifting shards x {[s.n for s in streams]} records, "
+              f"drift scales "
+              f"{[round(s.meta['drift_scale'], 2) for s in streams]}")
+    else:
+        k0 = max(1000, int(0.05 * args.n))
+        held = ds.x[k0:]
+        xs = [held[i::K] for i in range(K)]
+        print(f"{K} shards x {[len(x) for x in xs]} held-out records")
+    from repro.serving.stats import AdaptivePolicy
+
+    # demo-scale detector sensitivity: per-shard streams are short, so the
+    # default (production-length) CUSUM/audit budgets would never freeze a
+    # baseline before the stream ends
+    policy = AdaptivePolicy(audit_rate=0.03, threshold=50.0,
+                            min_reservoir=128, cooldown_records=1024,
+                            reservoir_capacity=512)
+    srv = ShardedCascadeServer(plan, K, tile=args.tile, seed=args.seed,
+                               policy=policy)
+    stats = srv.run_streams(xs)
+    x_all = np.concatenate(xs)
+    orig_res = execute_plan(orig_plan(q), x_all)
+    orig_set = set(orig_res.passed.tolist())
+    emitted_global = [i for host in srv.emitted for i in host]
+    served_acc = (sum(1 for i in emitted_global if i in orig_set)
+                  / max(len(orig_set), 1))
+    print(f"\nserved {stats.submitted} records on {K} hosts in "
+          f"{stats.wall_ms:.0f} ms wall; emitted {stats.emitted} "
+          f"(+{stats.rejected} rejected)")
+    print(f"consensus: {stats.votes_cast} votes -> "
+          f"{stats.swaps_committed} quorum swap(s) "
+          f"(+{stats.swaps_aborted} aborted), final epoch "
+          f"{stats.final_epoch}, protocol overhead "
+          f"{stats.consensus_ms_total:.1f} ms total")
+    for r in stats.swap_log:
+        print(f"  epoch {r.epoch}: voters {r.voters} [{', '.join(r.signals)}] "
+              f"-> {r.mode} on {r.merged_rows} merged reservoir rows "
+              f"(reopt {r.reopt_ms:.0f} ms, consensus {r.consensus_ms:.1f} ms)")
+    cp = stats.critical_path_cost_ms
+    print(f"cost model: critical path {cp / max(stats.submitted, 1):.3f} "
+          f"ms/rec aggregate ({stats.aggregate_rows_per_cost_s:.0f} rows/s; "
+          f"ORIG {orig_res.cost_per_record(len(x_all)):.3f} ms/rec); "
           f"served accuracy {served_acc:.3f}")
 
 

@@ -177,6 +177,10 @@ class CascadeServer:
         self.policy = policy or AdaptivePolicy()
         n = len(plan.stages)
         self.emitted: List[int] = []
+        # plan version each emission was scored AND served under (parallel
+        # to ``emitted``): queue entries never migrate between _PlanStates,
+        # so the draining state's version IS the scoring version
+        self.emitted_versions: List[int] = []
         self.stats = ServeStats(
             stage_in=[0] * n, stage_udf_batches=[0] * n, stage_kept=[0] * n,
             stage_proxy_ms=[0.0] * n, stage_used_kernel=[False] * n,
@@ -211,20 +215,30 @@ class CascadeServer:
     def plan_version(self) -> int:
         return self._states[-1].version
 
-    def _install(self, plan: PhysicalPlan):
+    def _install(self, plan: PhysicalPlan, *, scorer=None,
+                 version: Optional[int] = None):
         cascade = None
-        if self.use_kernel and self.fused:
+        if scorer is not None:
+            if not scorer.covers_all(plan):
+                raise ValueError("pre-built scorer does not cover the plan")
+            cascade = scorer
+        elif self.use_kernel and self.fused:
             from repro.kernels.ops import cascade_scorer_for_plan
 
             # a from_plan failure is a real bug — let it propagate
-            scorer, hit = cascade_scorer_for_plan(
+            built, hit = cascade_scorer_for_plan(
                 plan, max_tile=max(self.tile, 1024))
             # score-at-submit only pays off when every gated stage is
             # covered; otherwise fall back to per-stage kernel calls
-            if scorer is not None and scorer.covers_all(plan):
-                cascade = scorer
+            if built is not None and built.covers_all(plan):
+                cascade = built
                 self.stats.scorer_cache_hits += int(hit)
-        version = self._states[-1].version + 1 if self._states else 0
+        if version is None:
+            version = self._states[-1].version + 1 if self._states else 0
+        elif self._states and version <= self._states[-1].version:
+            raise ValueError(
+                f"plan version must advance: {version} <= "
+                f"{self._states[-1].version}")
         self._states.append(_PlanState(
             version, plan, cascade, self.policy if self.adaptive else None))
         # fresh drift baselines for the new plan
@@ -235,6 +249,41 @@ class CascadeServer:
             for i in range(self.query.n) for j in range(i + 1, self.query.n)
         }
         self._kappa_snapshot: Optional[Dict[Tuple[int, int], float]] = None
+
+    # --------------------------------------- external coordination (sharded)
+    def install_plan(self, plan: PhysicalPlan, *, scorer=None,
+                     version: Optional[int] = None) -> int:
+        """Hot-swap to an externally-decided plan (multi-host quorum swaps,
+        DESIGN.md §6): ``scorer`` may be a pre-built/deserialized
+        ``CascadeScorer``; ``version`` pins the global epoch so every host
+        serves the same version number.  In-flight entries still finish
+        under the version that scored them.  Returns the installed
+        version."""
+        self._install(plan, scorer=scorer, version=version)
+        self.stats.plan_swaps += 1
+        self._last_swap_at = self._records_submitted
+        self._drift = None  # stale local trigger: superseded by the swap
+        return self._states[-1].version
+
+    def take_drift(self) -> Optional[Tuple[str, float, float]]:
+        """Pop the pending local drift trigger (signal, observed, expected)
+        without re-optimizing — the sharded serving loop turns it into a
+        quorum VOTE instead of a local swap.  Clearing it re-arms
+        ``_may_trigger`` (cooldown still applies)."""
+        drift, self._drift = self._drift, None
+        return drift
+
+    def reservoir_export(self):
+        """Weighted snapshot of the local reservoir (rows + labels + IPW
+        weights) for coordinator-side merging."""
+        return self._reservoir.export()
+
+    def in_flight(self) -> int:
+        """Records sitting in ANY plan version's stage queues — zero after
+        a full drain, or something was lost in the pipe (the falsifiable
+        half of the conservation check; emitted-list uniqueness is the
+        other)."""
+        return sum(len(q) for s in self._states for q in s.queues)
 
     # ------------------------------------------------------------- plumbing
     def submit(self, indices: np.ndarray, rows: np.ndarray):
@@ -360,6 +409,7 @@ class CascadeServer:
             state.queues[si + 1].extend(survivors)
         else:
             self.emitted.extend(i for i, _, _ in survivors)
+            self.emitted_versions.extend([state.version] * len(survivors))
             self.stats.emitted += len(survivors)
 
     def _note_stage_outcome(self, state: _PlanState, si: int, kept: int,
@@ -436,6 +486,12 @@ class CascadeServer:
         mode, _regret = self.policy.choose_escalation(
             self._states[-1].plan, fresh_sels)
         return mode, mode == "bnb"
+
+    def escalation_hint(self) -> Tuple[str, bool]:
+        """Public read of the local escalation decision (mode, escalated)
+        — the sharded serving loop attaches it to a quorum vote instead of
+        acting on it locally."""
+        return self._escalate()
 
     def maybe_reoptimize(self) -> bool:
         """Re-optimize and hot-swap if a drift trigger is pending.  Called

@@ -295,15 +295,95 @@ class Reservoir:
     def size(self) -> int:
         return sum(r is not None for r in self._rows)
 
-    def sample(self) -> Tuple[np.ndarray, Dict[int, Tuple[np.ndarray, np.ndarray]]]:
-        """(x (M, F), {pred_idx: (known_mask (M,), sigma (M,))})."""
+    def export(self) -> "ReservoirSample":
+        """Full weighted snapshot — rows, labels, AND the per-row IPW
+        weights.  ``sample()`` used to drop the weights, which silently
+        broke any downstream estimator over the exported rows (the audit
+        tilt toward proxy thresholds became uncorrectable once the rows
+        left the reservoir); multi-host merging needs them preserved."""
         slots = [s for s, r in enumerate(self._rows) if r is not None]
-        x = np.stack([self._rows[s] for s in slots])
+        x = (np.stack([self._rows[s] for s in slots]) if slots
+             else np.empty((0, 0), np.float32))
         known_sigma = {
             p: (self._known[p][slots].copy(), self._sigma[p][slots].copy())
             for p in range(self.n_preds)
         }
-        return x, known_sigma
+        return ReservoirSample(
+            indices=np.asarray([self._idx_at[s] for s in slots], np.int64),
+            x=x, known_sigma=known_sigma,
+            weights=self._weight[slots].copy(),
+        )
+
+    def sample(self) -> Tuple[np.ndarray, Dict[int, Tuple[np.ndarray, np.ndarray]]]:
+        """(x (M, F), {pred_idx: (known_mask (M,), sigma (M,))}) — the
+        re-optimization sample.  Use ``export()`` when the consumer needs
+        the IPW weights too (selectivity estimation, multi-host merge)."""
+        exp = self.export()
+        return exp.x, exp.known_sigma
+
+
+@dataclass
+class ReservoirSample:
+    """One reservoir's exported snapshot (or a merge of several).
+
+    ``weights[i]`` is row i's inverse inclusion propensity into the
+    LABELED pool (audit IPW; 1.0 for unlabeled strided rows), so any
+    Horvitz-Thompson estimator over the export matches the reservoir's own
+    ``selectivity`` — including after concatenating exports from many
+    hosts (``merge_reservoir_samples``, order-insensitive by symmetry of
+    the weighted sums).
+    """
+
+    indices: np.ndarray  # (M,) global record indices
+    x: np.ndarray  # (M, F)
+    known_sigma: Dict[int, Tuple[np.ndarray, np.ndarray]]
+    weights: np.ndarray  # (M,) inverse inclusion propensities
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.x.shape[0])
+
+
+def merge_reservoir_samples(samples: List["ReservoirSample"]) -> "ReservoirSample":
+    """Pool per-host reservoir exports into one optimization sample,
+    IPW weights preserved.  Pure concatenation: each row keeps the weight
+    its own host assigned (inclusion was decided host-locally), so the
+    merged HT estimator equals the one a single reservoir holding the
+    union would produce — the multi-host merge property test."""
+    samples = [s for s in samples if s.n_rows]
+    if not samples:
+        return ReservoirSample(
+            indices=np.empty(0, np.int64), x=np.empty((0, 0), np.float32),
+            known_sigma={}, weights=np.empty(0))
+    preds = sorted({p for s in samples for p in s.known_sigma})
+    known_sigma = {}
+    for p in preds:
+        ks = [s.known_sigma.get(
+            p, (np.zeros(s.n_rows, bool), np.zeros(s.n_rows, bool)))
+            for s in samples]
+        known_sigma[p] = (np.concatenate([k for k, _ in ks]),
+                         np.concatenate([g for _, g in ks]))
+    return ReservoirSample(
+        indices=np.concatenate([s.indices for s in samples]),
+        x=np.concatenate([s.x for s in samples]),
+        known_sigma=known_sigma,
+        weights=np.concatenate([s.weights for s in samples]),
+    )
+
+
+def ipw_selectivity(sample: "ReservoirSample", pred_idx: int,
+                    *, min_labels: int = 1) -> Optional[float]:
+    """Horvitz-Thompson selectivity over an exported (or merged) sample:
+    ``Σ w·σ / Σ w`` across labeled rows.  None below ``min_labels``."""
+    ks = sample.known_sigma.get(pred_idx)
+    if ks is None:
+        return None
+    known, sigma = ks
+    if int(known.sum()) < min_labels:
+        return None
+    w = sample.weights[known]
+    denom = float(w.sum())
+    return float((w * sigma[known]).sum() / denom) if denom > 0 else None
 
 
 @dataclass

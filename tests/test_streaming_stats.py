@@ -16,6 +16,7 @@ from repro.serving.stats import (
     Reservoir,
     StreamingRate,
     estimate_order_regret,
+    ipw_selectivity,
 )
 
 
@@ -188,6 +189,102 @@ def test_regret_estimate_no_evidence_is_conservative():
     plan = _toy_plan([5.0, 5.0], sels=[0.2, 0.9])
     regret, best = estimate_order_regret(plan, {})
     assert regret == 0.0 and best == plan.order
+
+
+# ------------------------------------ force-add / stride-tick accounting
+def test_force_add_consumes_no_stride_tick():
+    """Regression (ISSUE 4 sweep): audited force-adds must not advance the
+    stride gate's tick counter — otherwise every audit would silently
+    shift which stream records get the stated 1/stride inclusion, and the
+    strided subsample would under-cover the stream by the audit rate."""
+    stride = 3
+    plain = Reservoir(n_preds=1, capacity=256, stride=stride)
+    noisy = Reservoir(n_preds=1, capacity=256, stride=stride)
+    rng = np.random.RandomState(0)
+    pattern_plain, pattern_noisy = [], []
+    for i in range(90):
+        pattern_plain.append(plain.add(i, np.zeros(2, np.float32)))
+        pattern_noisy.append(noisy.add(i, np.zeros(2, np.float32)))
+        # interleave force-adds at arbitrary points (audit arrivals)
+        if rng.random_sample() < 0.4:
+            noisy.add(10_000 + i, np.zeros(2, np.float32), force=True)
+    assert pattern_plain == pattern_noisy  # forced adds never tick
+    # the stated propensity holds exactly: every stride-th offer taken
+    assert pattern_noisy == [(i % stride) == 0 for i in range(90)]
+
+
+def test_force_add_of_strided_resident_keeps_single_slot():
+    """A row that was strided in and later audited (force-added) must not
+    occupy two slots or reset its labels/weight."""
+    r = Reservoir(n_preds=1, capacity=16, stride=1)
+    r.add(7, np.full(2, 7, np.float32))
+    r.observe(7, 0, True, weight=4.0)
+    assert r.add(7, np.full(2, 7, np.float32), force=True)  # audit arrives
+    assert r.size == 1
+    assert r.selectivity(0, min_labels=1) == 1.0
+    exp = r.export()
+    assert exp.weights.tolist() == [4.0]  # weight survived the force no-op
+
+
+def test_reservoir_export_weights_match_inclusion_probabilities():
+    """Regression (ISSUE 4 sweep): ``sample()`` used to drop the IPW
+    weights, so any estimator over exported rows silently treated the
+    threshold-tilted audit subset as uniform.  The export must carry
+    weights such that the Horvitz-Thompson estimate over the export is
+    unbiased on a stream whose labels correlate with audit propensity —
+    the exact bias force-added audit rows inject."""
+    rng = np.random.RandomState(3)
+    n, trials = 1200, 60
+    margins = np.abs(rng.randn(n))
+    near = margins < np.median(margins)
+    p_true = np.clip(0.45 + 0.5 * (near - 0.5), 0.02, 0.98)
+    truth_est, naive_est = [], []
+    sampler = ImportanceAuditSampler(rate=0.12, floor=0.25)
+    truth = None
+    for _ in range(trials):
+        sigma = rng.random_sample(n) < p_true
+        truth = p_true.mean()
+        res = Reservoir(n_preds=1, capacity=4 * n, stride=2)
+        sel, ipw = sampler.select(margins, n, rng)
+        for i in range(n):
+            res.add(i, np.zeros(1, np.float32))
+        ai = np.flatnonzero(sel)
+        for j, w in zip(ai, ipw):
+            res.add(int(j), np.zeros(1, np.float32), force=True)
+            res.observe(int(j), 0, bool(sigma[j]), weight=float(w))
+        exp = res.export()
+        known, sg = exp.known_sigma[0]
+        w = exp.weights[known]
+        truth_est.append(float((w * sg[known]).sum() / w.sum()))
+        naive_est.append(float(sg[known].mean()))
+        # the export's HT estimate must equal the reservoir's own
+        assert abs(truth_est[-1] - res.selectivity(0, min_labels=1)) < 1e-12
+        assert abs(truth_est[-1] - ipw_selectivity(exp, 0)) < 1e-12
+    assert abs(np.mean(truth_est) - truth) < 0.03
+    assert abs(np.mean(naive_est) - truth) > abs(np.mean(truth_est) - truth)
+
+
+# --------------------------------------- regret under partial audit coverage
+def test_regret_partial_audit_coverage_uses_stale_fallback():
+    """Regression (ISSUE 4 sweep): a predicate with no audit labels yet
+    must fall back to the plan's stale selectivity — never raise — and
+    the fallback must actually be the stale value (fresh evidence for one
+    stage alone cannot invent evidence for the others)."""
+    plan = _toy_plan([5.0, 5.0, 5.0], sels=[0.2, 0.5, 0.9])
+    # only pred 2 has fresh evidence: it collapsed to near-zero
+    regret, best = estimate_order_regret(plan, {2: 0.05})
+    assert best[0] == 2  # cheapest-first under (0.2, 0.5, 0.05)
+    assert regret > 0.0
+    # missing preds used stale sels: the same call with those values made
+    # explicit must be numerically identical
+    regret2, best2 = estimate_order_regret(plan, {0: 0.2, 1: 0.5, 2: 0.05})
+    assert regret == regret2 and best == best2
+    # empty evidence stays conservative, whatever the plan size
+    assert estimate_order_regret(plan, {}) == (0.0, plan.order)
+    # >6 stages exercises the greedy path with partial coverage too
+    big = _toy_plan([5.0] * 7, sels=[0.5] * 7)
+    r_big, order_big = estimate_order_regret(big, {3: 0.01})
+    assert order_big[0] == 3 and r_big >= 0.0
 
 
 def test_reservoir_recency_and_labels():
