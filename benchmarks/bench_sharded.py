@@ -132,6 +132,131 @@ def bench_sharded_throughput(*, n_hosts: int = 4, n_before: int = 2_000,
     }
 
 
+# -------------------------------------------------- fault-tolerance gates
+def _ft_workload(seed: int = 41):
+    """Smaller fixed-seed workload for the fault-tolerance scenarios —
+    identical in every ``--quick``/full run, so the CI bench lane is
+    deterministic (inline transport + fixed seeds: no wall-clock in any
+    gated quantity)."""
+    ds = make_dataset(n=9_000, n_features=64, n_columns=3, correlation=0.9,
+                      feature_noise=0.9, label_noise=0.2, seed=seed)
+    udfs = make_udfs(ds, hidden=16, depth=1, train_rows=1200, seed=seed,
+                     declared_cost_ms=10.0)
+    q = make_query(ds, udfs, columns=[0, 1, 2], target_selectivity=0.5,
+                   accuracy_target=0.9, seed=seed + 1)
+    return ds, q
+
+
+def _ft_conserved(srv, stats) -> bool:
+    """Ground-truth conservation INCLUDING version pinning: zero in-flight
+    rows after drain, no duplicate emissions, and every emitted row
+    served under the plan version current at its submission."""
+    all_emitted: list = []
+    for h in srv.hosts:
+        if h.engine.in_flight() != 0:
+            return False
+        if len(h.engine.emitted) != len(set(h.engine.emitted)):
+            return False
+        for i, v in zip(h.engine.emitted, h.engine.emitted_versions):
+            if h.submit_version.get(i) != v:
+                return False
+        all_emitted.extend(h.engine.emitted)
+    return (len(all_emitted) == len(set(all_emitted))
+            and len(all_emitted) <= stats.submitted)
+
+
+def bench_fault_tolerance(*, seed: int = 41) -> dict:
+    """Three gated failure scenarios (DESIGN.md §6 failure model):
+
+    * **failover** — the primary coordinator dies after the prepare
+      barrier closed but before the commit broadcast; the standby takes
+      over mid-epoch and the fleet converges on the committed swap.
+    * **straggler** — one host misses the prepare barrier; the fleet
+      commits without it (serve-behind fencing), then re-syncs it.
+    * **pooled_kappa** — a correlation-only drift split evenly across
+      K=4 shards: every local detector stays quiet, but the pooled
+      fleet-level kappa² crosses tolerance and escalates to B&B.
+    """
+    ds, q = _ft_workload(seed)
+    policy_kw = dict(cooldown_records=1024, min_reservoir=128,
+                     threshold=50.0, audit_rate=0.03,
+                     reservoir_capacity=512)
+
+    def plan():
+        return optimize(q, ds.x[:1500], mode="core", step=0.05,
+                        keep_state=True)
+
+    def drift_streams():
+        return make_sharded_drifting_streams(
+            ds, 4, 800, 2400, shift_targets={0: 2.8, 1: -2.6, 2: 2.8},
+            corr_gain=2.5, drift_skew=0.3, seed=seed)
+
+    def run(srv, streams):
+        for h in srv.hosts:
+            h.track_versions = True
+        stats = srv.run_streams([s.x for s in streams], chunk=400)
+        return stats, _ft_conserved(srv, stats)
+
+    # 1) coordinator failover mid-epoch (commit broadcast lost)
+    srv = ShardedCascadeServer(plan(), 4, tile=256, seed=3,
+                               policy=AdaptivePolicy(**policy_kw),
+                               kill_coordinator_at="commit")
+    st, conserved = run(srv, drift_streams())
+    failover = {
+        "failovers": st.failovers,
+        "resolution": st.failover_resolution,
+        "swaps_committed": st.swaps_committed,
+        "resyncs": st.resyncs,
+        "final_epoch": st.final_epoch,
+        "epochs_agree": int(len({h.epoch for h in srv.hosts}) == 1),
+        "lag_records": sum(r.lag_records for r in st.swap_log if r.committed),
+        "conserved": int(conserved),
+    }
+
+    # 2) straggler fencing: silent host neither blocks nor serves unacked
+    srv = ShardedCascadeServer(plan(), 4, tile=256, seed=3,
+                               policy=AdaptivePolicy(**policy_kw),
+                               straggler_host=2)
+    st, conserved = run(srv, drift_streams())
+    straggler_host = srv.hosts[2]
+    fenced_commits = [r for r in st.swap_log if r.committed and r.fenced]
+    straggler = {
+        "swaps_committed": st.swaps_committed,
+        "fences": st.fences,
+        "resyncs": st.resyncs,
+        "committed_while_fenced": int(bool(fenced_commits)),
+        "straggler_resynced": straggler_host.resyncs,
+        "final_epoch": st.final_epoch,
+        "epochs_agree": int(len({h.epoch for h in srv.hosts}) == 1),
+        "conserved": int(conserved),
+    }
+
+    # 3) evenly-split correlation drift: pooled kappa² must escalate while
+    #    every local detector stays quiet
+    pooled_streams = make_sharded_drifting_streams(
+        ds, 4, 1200, 2600, shift_targets={}, shift=0.0, corr_gain=3.0,
+        drift_skew=0.3, skew_corr=True, seed=seed)
+    srv = ShardedCascadeServer(
+        plan(), 4, tile=256, seed=3,
+        policy=AdaptivePolicy(**{**policy_kw, "threshold": 200.0,
+                                 "kappa_pool_baseline": 60}))
+    st, conserved = run(srv, pooled_streams)
+    pooled_recs = [r for r in st.swap_log
+                   if r.initiated_by == "pooled:kappa2"]
+    pooled = {
+        "votes_cast": st.votes_cast,
+        "pooled_swaps": st.pooled_swaps,
+        "swaps_committed": st.swaps_committed,
+        "all_bnb": int(bool(pooled_recs)
+                       and all(r.mode == "bnb" for r in pooled_recs)),
+        "local_escalations": sum(
+            int(h.engine.escalation_hint()[1]) for h in srv.hosts),
+        "conserved": int(conserved),
+    }
+    return {"failover": failover, "straggler": straggler,
+            "pooled_kappa": pooled}
+
+
 def run(quick: bool = True):
     from benchmarks.common import csv_row
 
@@ -147,6 +272,17 @@ def run(quick: bool = True):
             f"lag={out['consensus_lag_records']}"
         ),
     )
+    ft = bench_fault_tolerance()
+    csv_row(
+        "sharded_fault_tolerance", float(ft["failover"]["swaps_committed"]),
+        (
+            f"failover={ft['failover']['resolution']};"
+            f"straggler_fences={ft['straggler']['fences']};"
+            f"pooled_swaps={ft['pooled_kappa']['pooled_swaps']};"
+            f"pooled_votes={ft['pooled_kappa']['votes_cast']}"
+        ),
+    )
+    out["fault_tolerance"] = ft
     return out
 
 

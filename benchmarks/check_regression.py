@@ -1,39 +1,32 @@
-"""CI regression gate for the fused proxy-scoring hot path and the
-adaptive serving loop.
+"""CI regression gate for the fused proxy-scoring hot path, the adaptive
+serving loop, K=4 sharded serving, and the fault-tolerance scenarios.
 
-Runs the components benchmark's proxy-throughput measurement plus the
-drifting-stream adaptive-serving benchmark, writes
-``BENCH_components.json`` at the repo root, and exits nonzero when either
-regresses against the checked-in baseline
-(``benchmarks/baseline_components.json``):
+Runs the components benchmark's proxy-throughput measurement, the
+drifting-stream adaptive-serving benchmark, the K=4 quorum-swap fleet
+benchmark, and the three fault-tolerance scenarios (coordinator failover
+mid-epoch, straggler fencing, pooled-kappa² escalation), writes
+``BENCH_components.json`` at the repo root, prints a unified
+**before/after delta table** for every gated metric (baseline recorded
+value vs this run, floor, margin, status), and exits nonzero when any
+ENFORCED gate regresses against the checked-in baseline
+(``benchmarks/baseline_components.json``).
 
-  * fused/per-stage speedup below ``min_speedup`` — the architectural
-    invariant: the fused path must beat one-kernel-call-per-stage
-    regardless of host speed, or
-  * fused throughput below an absolute rows/s floor, which is
-    host-dependent and therefore ADVISORY (a warning) by default; it
-    becomes enforcing when ``REGRESSION_MIN_ROWS_PER_S`` is set
-    explicitly for a pinned CI host, or
-  * fused-MLP/reference-MLP single-pass streaming speedup below
-    ``min_mlp_speedup`` — the unified ProxyFamily scorer must beat the
-    old per-stage reference path MLP proxies used to fall back to
-    (warmed single pass over an unseen stream: the reference's per-shape
-    retraces are a real recurring serving cost, the fused path's
-    bucket-padded shapes never retrace), or
-  * adaptive-vs-static cost-model speedup on the drifting stream below
-    ``min_adaptive_speedup``, the adaptive plan missing the query's
-    accuracy target, or the warm-started re-search failing to visit
-    strictly fewer nodes than a cold branch-and-bound — all three are
-    cost-model invariants, host-independent by construction, or
-  * the K=4 sharded serving run (quorum-voted swaps, DESIGN.md §6)
-    falling below ``min_sharded_speedup`` aggregate cost-model throughput
-    over the K=1 baseline, failing to commit a quorum swap, leaking
-    records (conservation), or serving ahead of the two-phase barrier
-    (``consensus_lag_records != 0``) — all cost-model / protocol
-    invariants, host-independent.  Wall-clock consensus overhead per swap
-    is ADVISORY unless ``REGRESSION_MAX_CONSENSUS_MS`` pins it.
+Gate classes:
 
-Usage: python benchmarks/check_regression.py [--quick]
+  * architectural invariants (speedups, protocol correctness booleans) —
+    host-independent, always enforced;
+  * absolute wall-clock floors — host-dependent, ADVISORY unless pinned
+    via the corresponding ``REGRESSION_*`` env override.
+
+Usage:
+  python benchmarks/check_regression.py [--quick] [--update-baseline]
+
+``--update-baseline`` rewrites the ``recorded_*`` fields of
+``baseline_components.json`` from this run (floors and the comment are
+preserved) — the intentional re-baselining path after a known perf
+change, instead of hand-editing JSON.  With the flag set, gate failures
+are reported but do not fail the process.
+
 Env overrides: REGRESSION_MIN_ROWS_PER_S, REGRESSION_MIN_SPEEDUP,
 REGRESSION_MIN_MLP_SPEEDUP, REGRESSION_MIN_ADAPTIVE_SPEEDUP,
 REGRESSION_MIN_SHARDED_SPEEDUP, REGRESSION_MAX_CONSENSUS_MS.
@@ -43,7 +36,9 @@ from __future__ import annotations
 import json
 import os
 import sys
+from dataclasses import dataclass
 from pathlib import Path
+from typing import List, Optional
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
@@ -54,14 +49,85 @@ from benchmarks.bench_components import (  # noqa: E402
     bench_proxy_throughput,
     write_bench_json,
 )
-from benchmarks.bench_sharded import bench_sharded_throughput  # noqa: E402
+from benchmarks.bench_sharded import (  # noqa: E402
+    bench_fault_tolerance,
+    bench_sharded_throughput,
+)
 
 BASELINE = Path(__file__).resolve().parent / "baseline_components.json"
+
+
+@dataclass
+class Gate:
+    """One gated metric: a current value checked against a floor (or
+    ceiling), with the baseline's recorded value alongside for the
+    before/after delta table."""
+
+    name: str
+    current: float
+    floor: Optional[float]  # None = informational row, never fails
+    recorded: Optional[float] = None  # baseline value (before)
+    higher_is_better: bool = True
+    enforced: bool = True  # False = advisory (warn, don't fail)
+    fmt: str = "{:.2f}"
+    record_key: Optional[str] = None  # baseline key --update-baseline rewrites
+
+    @property
+    def ok(self) -> bool:
+        if self.floor is None:
+            return True
+        return (self.current >= self.floor if self.higher_is_better
+                else self.current <= self.floor)
+
+    @property
+    def margin(self) -> Optional[float]:
+        if self.floor is None:
+            return None
+        return (self.current - self.floor if self.higher_is_better
+                else self.floor - self.current)
+
+    @property
+    def status(self) -> str:
+        if self.floor is None:
+            return "info"
+        if self.ok:
+            return "OK" if self.enforced else "OK (advisory)"
+        return "FAIL" if self.enforced else "WARN (advisory)"
+
+
+def _print_delta_table(gates: List[Gate]) -> None:
+    header = (f"{'metric':<34} {'baseline':>12} {'current':>12} "
+              f"{'floor':>10} {'margin':>10}  status")
+    print("\n== regression gate delta table (baseline vs this run) ==")
+    print(header)
+    print("-" * len(header))
+    for g in gates:
+        def fv(v):
+            return "-" if v is None else g.fmt.format(v)
+
+        print(f"{g.name:<34} {fv(g.recorded):>12} {fv(g.current):>12} "
+              f"{fv(g.floor):>10} {fv(g.margin):>10}  {g.status}")
+    print("-" * len(header))
+
+
+def _update_baseline(base: dict, gates: List[Gate]) -> None:
+    for g in gates:
+        if g.record_key:
+            # count-valued gates (fmt {:.0f}) stay ints in the baseline —
+            # every Gate.current is a float, so type-sniffing would churn
+            # recorded counts to 2.0/1.0 on each re-baseline
+            base[g.record_key] = (int(round(g.current))
+                                  if g.fmt == "{:.0f}"
+                                  else round(g.current, 4))
+    BASELINE.write_text(json.dumps(base, indent=2) + "\n")
+    print(f"baseline updated: {BASELINE} "
+          f"({sum(1 for g in gates if g.record_key)} recorded values)")
 
 
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     quick = "--quick" in argv
+    update_baseline = "--update-baseline" in argv
     throughput = bench_proxy_throughput(n_rows=24_576 if quick else 49_152)
     mlp = bench_mlp_throughput(n_rows=24_576 if quick else 49_152)
     # deliberately NOT shrunk by --quick: the 1.3x floor is an acceptance
@@ -73,7 +139,9 @@ def main(argv=None) -> int:
     sharded = bench_sharded_throughput(
         n_before=1_500 if quick else 2_000,
         n_after=4_000 if quick else 6_000)
-    write_bench_json(throughput, adaptive, mlp, sharded)
+    # fixed-seed fixed-size scenarios: deterministic in --quick and full
+    ft = bench_fault_tolerance()
+    write_bench_json(throughput, adaptive, mlp, sharded, fault_tolerance=ft)
     print(f"wrote {BENCH_JSON}")
 
     base = json.loads(BASELINE.read_text())
@@ -91,94 +159,118 @@ def main(argv=None) -> int:
     max_consensus = (float(consensus_env) if consensus_env
                      else float(base["advisory_max_consensus_ms"]))
 
-    failures = []
-    if sharded["sharded_speedup"] < min_sharded:
-        failures.append(
-            f"K={sharded['n_hosts']} sharded/single aggregate throughput "
-            f"{sharded['sharded_speedup']:.2f}x < floor {min_sharded:.2f}x"
-        )
-    if sharded["swaps_committed"] < 1:
-        failures.append(
-            "sharded serving never committed a quorum-voted plan swap")
-    if not sharded["conserved"]:
-        failures.append("sharded serving lost or duplicated records")
-    if sharded["consensus_lag_records"] != 0:
-        failures.append(
-            f"{sharded['consensus_lag_records']} records served while a "
-            f"two-phase swap barrier was open"
-        )
     worst_consensus = max(sharded["consensus_ms_per_swap"] or [0.0])
-    if worst_consensus > max_consensus:
-        msg = (
-            f"swap consensus overhead {worst_consensus:.1f} ms "
-            f"> bound {max_consensus:.1f} ms"
-        )
-        if consensus_env:  # wall-clock: only enforce on a pinned host
-            failures.append(msg)
-        else:
-            print(f"WARNING (advisory, host-dependent): {msg}")
-    if mlp["mlp_fused_speedup"] < min_mlp:
-        failures.append(
-            f"fused-MLP/reference-MLP speedup {mlp['mlp_fused_speedup']:.2f}x "
-            f"< floor {min_mlp:.2f}x"
-        )
-    if not all(mlp["fused_used_kernel"]):
-        failures.append(
-            f"fused MLP run fell off the kernel path: {mlp['fused_used_kernel']}"
-        )
-    if adaptive["adaptive_speedup"] < min_adaptive:
-        failures.append(
-            f"adaptive/static drift speedup {adaptive['adaptive_speedup']:.2f}x "
-            f"< floor {min_adaptive:.2f}x"
-        )
-    if adaptive["adaptive_accuracy"] < adaptive["accuracy_target"]:
-        failures.append(
-            f"adaptive accuracy {adaptive['adaptive_accuracy']:.3f} misses "
-            f"target {adaptive['accuracy_target']}"
-        )
-    if adaptive["warm_nodes"] >= adaptive["cold_nodes"]:
-        failures.append(
-            f"warm-started B&B visited {adaptive['warm_nodes']} nodes, not "
-            f"strictly fewer than cold ({adaptive['cold_nodes']})"
-        )
-    if adaptive["plan_swaps"] < 1:
-        failures.append("adaptive server never re-optimized on the drifting stream")
-    if throughput["fused_rows_per_s"] < min_rows:
-        msg = (
-            f"fused throughput {throughput['fused_rows_per_s']:.0f} rows/s "
-            f"< floor {min_rows:.0f}"
-        )
-        if rows_env:  # absolute floor only enforces on a pinned host
-            failures.append(msg)
-        else:
-            print(f"WARNING (advisory, host-dependent): {msg}")
-    if throughput["speedup"] < min_speedup:
-        failures.append(
-            f"fused/per-stage speedup {throughput['speedup']:.2f}x "
-            f"< floor {min_speedup:.2f}x"
-        )
-    if not all(throughput["fused_used_kernel"]):
-        failures.append(
-            f"fused run fell off the kernel path: {throughput['fused_used_kernel']}"
-        )
+    fo, strag, pooled = (ft["failover"], ft["straggler"], ft["pooled_kappa"])
+    gates = [
+        # ----- fused scoring hot path -----
+        Gate("fused_rows_per_s", throughput["fused_rows_per_s"], min_rows,
+             base.get("recorded_fused_rows_per_s"), fmt="{:.0f}",
+             enforced=bool(rows_env), record_key="recorded_fused_rows_per_s"),
+        Gate("fused_speedup", throughput["speedup"], min_speedup,
+             base.get("recorded_speedup"), record_key="recorded_speedup"),
+        Gate("fused_used_kernel", float(all(throughput["fused_used_kernel"])),
+             1.0, 1.0, fmt="{:.0f}"),
+        Gate("mlp_fused_speedup", mlp["mlp_fused_speedup"], min_mlp,
+             base.get("recorded_mlp_fused_speedup"),
+             record_key="recorded_mlp_fused_speedup"),
+        Gate("mlp_used_kernel", float(all(mlp["fused_used_kernel"])),
+             1.0, 1.0, fmt="{:.0f}"),
+        # ----- adaptive serving -----
+        Gate("adaptive_speedup", adaptive["adaptive_speedup"], min_adaptive,
+             base.get("recorded_adaptive_speedup"),
+             record_key="recorded_adaptive_speedup"),
+        Gate("adaptive_accuracy", adaptive["adaptive_accuracy"],
+             adaptive["accuracy_target"],
+             base.get("recorded_adaptive_accuracy"), fmt="{:.3f}",
+             record_key="recorded_adaptive_accuracy"),
+        Gate("warm_bnb_nodes", float(adaptive["warm_nodes"]),
+             float(adaptive["cold_nodes"] - 1),
+             base.get("recorded_warm_nodes"), higher_is_better=False,
+             fmt="{:.0f}", record_key="recorded_warm_nodes"),
+        Gate("adaptive_plan_swaps", float(adaptive["plan_swaps"]), 1.0,
+             None, fmt="{:.0f}"),
+        # ----- sharded serving -----
+        Gate("sharded_speedup", sharded["sharded_speedup"], min_sharded,
+             base.get("recorded_sharded_speedup"),
+             record_key="recorded_sharded_speedup"),
+        Gate("sharded_swaps_committed", float(sharded["swaps_committed"]),
+             1.0, base.get("recorded_sharded_swaps"), fmt="{:.0f}",
+             record_key="recorded_sharded_swaps"),
+        Gate("sharded_conserved", float(sharded["conserved"]), 1.0, 1.0,
+             fmt="{:.0f}"),
+        Gate("consensus_lag_records",
+             float(sharded["consensus_lag_records"]), 0.0, 0.0,
+             higher_is_better=False, fmt="{:.0f}"),
+        Gate("worst_consensus_ms", worst_consensus, max_consensus,
+             base.get("recorded_worst_consensus_ms"),
+             higher_is_better=False, fmt="{:.1f}",
+             enforced=bool(consensus_env),
+             record_key="recorded_worst_consensus_ms"),
+        # ----- fault tolerance: coordinator failover mid-epoch -----
+        Gate("failover_count", float(fo["failovers"]), 1.0,
+             base.get("recorded_failover_count"), fmt="{:.0f}",
+             record_key="recorded_failover_count"),
+        Gate("failover_swaps_committed", float(fo["swaps_committed"]), 1.0,
+             base.get("recorded_failover_swaps"), fmt="{:.0f}",
+             record_key="recorded_failover_swaps"),
+        Gate("failover_conserved",
+             float(fo["conserved"] and fo["epochs_agree"]), 1.0, 1.0,
+             fmt="{:.0f}"),
+        # ----- fault tolerance: straggler fencing -----
+        Gate("straggler_commits_unblocked",
+             float(strag["committed_while_fenced"]), 1.0, 1.0, fmt="{:.0f}"),
+        Gate("straggler_resynced", float(strag["straggler_resynced"]), 1.0,
+             base.get("recorded_straggler_resyncs"), fmt="{:.0f}",
+             record_key="recorded_straggler_resyncs"),
+        Gate("straggler_conserved",
+             float(strag["conserved"] and strag["epochs_agree"]), 1.0, 1.0,
+             fmt="{:.0f}"),
+        # ----- fault tolerance: pooled kappa² escalation -----
+        Gate("pooled_local_votes", float(pooled["votes_cast"]), 0.0, 0.0,
+             higher_is_better=False, fmt="{:.0f}"),
+        Gate("pooled_swaps_committed", float(pooled["pooled_swaps"]), 1.0,
+             base.get("recorded_pooled_swaps"), fmt="{:.0f}",
+             record_key="recorded_pooled_swaps"),
+        Gate("pooled_escalated_bnb", float(pooled["all_bnb"]), 1.0, 1.0,
+             fmt="{:.0f}"),
+        Gate("pooled_conserved", float(pooled["conserved"]), 1.0, 1.0,
+             fmt="{:.0f}"),
+    ]
+
+    _print_delta_table(gates)
+
+    failures = [
+        f"{g.name} {g.fmt.format(g.current)} vs floor {g.fmt.format(g.floor)}"
+        for g in gates if not g.ok and g.enforced
+    ]
+    for g in gates:
+        if not g.ok and not g.enforced:
+            print(f"WARNING (advisory, host-dependent): {g.name} "
+                  f"{g.fmt.format(g.current)} vs bound "
+                  f"{g.fmt.format(g.floor)}")
+
+    if update_baseline:
+        _update_baseline(base, gates)
+        if failures:
+            print("NOTE: gates failing while re-baselining:",
+                  *failures, sep="\n  ")
+        return 0
     if failures:
         print("REGRESSION:", *failures, sep="\n  ")
         return 1
     print(
         f"OK: fused {throughput['fused_rows_per_s']:.0f} rows/s "
-        f"({throughput['speedup']:.2f}x over per-stage; floors: "
-        f"{min_rows:.0f} rows/s, {min_speedup:.2f}x); fused-MLP "
-        f"{mlp['mlp_fused_speedup']:.2f}x over reference (floor "
-        f"{min_mlp:.2f}x); adaptive drift "
-        f"{adaptive['adaptive_speedup']:.2f}x over static (floor "
-        f"{min_adaptive:.2f}x), accuracy {adaptive['adaptive_accuracy']:.3f} "
-        f">= {adaptive['accuracy_target']}, warm B&B "
-        f"{adaptive['warm_nodes']} < cold {adaptive['cold_nodes']} nodes; "
-        f"sharded K={sharded['n_hosts']} "
-        f"{sharded['sharded_speedup']:.2f}x over single (floor "
-        f"{min_sharded:.2f}x), {sharded['swaps_committed']} quorum "
-        f"swap(s), lag {sharded['consensus_lag_records']} records, worst "
-        f"consensus {worst_consensus:.1f} ms"
+        f"({throughput['speedup']:.2f}x over per-stage); fused-MLP "
+        f"{mlp['mlp_fused_speedup']:.2f}x; adaptive drift "
+        f"{adaptive['adaptive_speedup']:.2f}x, accuracy "
+        f"{adaptive['adaptive_accuracy']:.3f}; sharded K="
+        f"{sharded['n_hosts']} {sharded['sharded_speedup']:.2f}x, "
+        f"{sharded['swaps_committed']} quorum swap(s); failover "
+        f"{fo['resolution']} ({fo['swaps_committed']} committed); "
+        f"straggler fenced+resynced ({strag['fences']}/"
+        f"{strag['straggler_resynced']}); pooled kappa² "
+        f"{pooled['pooled_swaps']} bnb swap(s) on {pooled['votes_cast']} "
+        f"votes"
     )
     return 0
 

@@ -1,27 +1,105 @@
 #!/usr/bin/env bash
-# Single-entry CI: tier-1 tests + regression gates (fused proxy scoring,
-# adaptive serving, K=4 sharded serving with quorum-voted swaps).
-#   scripts/ci.sh           full run
-#   scripts/ci.sh --quick   smaller benchmark workload
-#   scripts/ci.sh --fast    iteration lane: skip @slow tests, quick benchmarks
-set -euo pipefail
+# Tiered CI lanes: tier-1 tests + regression gates (fused proxy scoring,
+# adaptive serving, K=4 sharded serving, fault-tolerance scenarios).
+#
+#   scripts/ci.sh                          default: tier1 + bench (full)
+#   scripts/ci.sh --lane fast              iteration lane (no @slow/@flaky)
+#   scripts/ci.sh --lane tier1,fast        comma-separated / repeated lanes
+#   scripts/ci.sh --lane bench --quick     quick benchmark workload
+#   scripts/ci.sh --lane slow              only @slow/@flaky tests
+#   scripts/ci.sh --lane all               tier1 + bench + slow
+#   scripts/ci.sh --fast                   back-compat: fast + quick bench
+#
+# Lanes:
+#   tier1  python -m pytest -x -q          (the ROADMAP tier-1 command)
+#   fast   pytest -m "not slow and not flaky"
+#   bench  benchmarks/check_regression.py  (prints the gate delta table)
+#   slow   pytest -m "slow or flaky"       (subprocess fleets, wall-clock)
+#
+# Every requested lane runs even if an earlier one failed; the lane
+# report at the end lists per-lane wall time and status, and the script
+# exits nonzero if ANY lane failed.
+set -uo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-PYTEST_ARGS=()
+LANES=()
 BENCH_ARGS=()
-for a in "$@"; do
-  case "$a" in
-    --fast) PYTEST_ARGS+=(-m "not slow"); BENCH_ARGS+=(--quick) ;;
-    *) BENCH_ARGS+=("$a") ;;
+while [ $# -gt 0 ]; do
+  case "$1" in
+    --lane)
+      shift
+      IFS=',' read -ra _L <<<"${1:?--lane needs a value}"
+      LANES+=("${_L[@]}")
+      ;;
+    --lane=*)
+      IFS=',' read -ra _L <<<"${1#--lane=}"
+      LANES+=("${_L[@]}")
+      ;;
+    --fast) LANES+=(fast bench); BENCH_ARGS+=(--quick) ;;
+    --quick) BENCH_ARGS+=(--quick) ;;
+    *) BENCH_ARGS+=("$1") ;;
+  esac
+  shift
+done
+[ ${#LANES[@]} -eq 0 ] && LANES=(tier1 bench)
+
+EXPANDED=()
+for lane in "${LANES[@]}"; do
+  if [ "$lane" = "all" ]; then
+    EXPANDED+=(tier1 bench slow)
+  else
+    EXPANDED+=("$lane")
+  fi
+done
+
+NAMES=()
+RCS=()
+SECS=()
+
+run_lane() {
+  local name="$1"
+  shift
+  echo
+  echo "== lane: $name =="
+  local t0=$SECONDS
+  "$@"
+  local rc=$?
+  NAMES+=("$name")
+  RCS+=("$rc")
+  SECS+=("$((SECONDS - t0))")
+}
+
+for lane in "${EXPANDED[@]}"; do
+  case "$lane" in
+    tier1) run_lane tier1 python -m pytest -x -q ;;
+    fast) run_lane fast python -m pytest -q -m "not slow and not flaky" ;;
+    slow) run_lane slow python -m pytest -q -m "slow or flaky" ;;
+    bench) run_lane bench python benchmarks/check_regression.py \
+      ${BENCH_ARGS[@]+"${BENCH_ARGS[@]}"} ;;
+    *)
+      echo "unknown lane: $lane (tier1|fast|bench|slow|all)" >&2
+      NAMES+=("$lane"); RCS+=(2); SECS+=(0)
+      ;;
   esac
 done
 
-echo "== tier-1 tests =="
-python -m pytest -x -q ${PYTEST_ARGS[@]+"${PYTEST_ARGS[@]}"}
+echo
+echo "== lane report =="
+FAILED=0
+for i in "${!NAMES[@]}"; do
+  if [ "${RCS[$i]}" -eq 0 ]; then
+    status="OK"
+  else
+    status="FAIL (rc=${RCS[$i]})"
+    FAILED=1
+  fi
+  printf '  %-8s %6ss  %s\n' "${NAMES[$i]}" "${SECS[$i]}" "$status"
+done
 
-echo "== regression gates (fused scoring + adaptive + sharded serving) =="
-python benchmarks/check_regression.py ${BENCH_ARGS[@]+"${BENCH_ARGS[@]}"}
-
+if [ "$FAILED" -ne 0 ]; then
+  echo "CI FAILED"
+  exit 1
+fi
 echo "CI OK"

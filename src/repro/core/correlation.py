@@ -50,7 +50,10 @@ class StreamingKappa2:
 
     def __init__(self):
         self.counts: Dict[Tuple[int, int], float] = {}
-        self.n = 0.0
+        self.n = 0.0  # weighted mass (HT population estimate)
+        self.n_rows = 0  # actual label rows folded — the statistical
+        # information really available; with IPW weights ~1/audit_rate,
+        # ``n`` overstates it by that factor
 
     def update(self, col1: np.ndarray, col2: np.ndarray,
                weights: np.ndarray = None) -> None:
@@ -75,6 +78,27 @@ class StreamingKappa2:
             key = (int(a), int(b))
             self.counts[key] = self.counts.get(key, 0.0) + float(c)
         self.n += total
+        self.n_rows += len(col1)
+
+    def export(self) -> Tuple[Dict[Tuple[int, int], float], float, int]:
+        """Snapshot of the weighted contingency table
+        ``(counts, n, n_rows)`` — the unit of cross-host pooling: tables
+        from shards of one population sum into the population's table
+        (``merge_counts``).  ``n_rows`` rides along so poolers can gate
+        decisions on actual label counts, not IPW-inflated mass."""
+        return dict(self.counts), self.n, self.n_rows
+
+    def merge_counts(self, counts: Dict[Tuple[int, int], float],
+                     n: float, n_rows: int = 0) -> None:
+        """Fold another table's exported ``(counts, n, n_rows)`` into this
+        one.  Because the statistic depends only on the accumulated table,
+        merging K shards' exports yields exactly the value of one tracker
+        fed the union of their rows — the fleet-pooling property."""
+        for key, c in counts.items():
+            k = (int(key[0]), int(key[1]))
+            self.counts[k] = self.counts.get(k, 0.0) + float(c)
+        self.n += float(n)
+        self.n_rows += int(n_rows)
 
     def value(self) -> float:
         if not self.counts:

@@ -213,6 +213,8 @@ def make_sharded_drifting_streams(
     corr_gain: float = 1.0,
     drift_skew: float = 0.3,
     boundary_jitter: float = 0.0,
+    shift: float = 1.5,
+    skew_corr: bool = False,
     seed: int = 0,
 ) -> List[DriftingStream]:
     """Per-host drifting shards of the SAME underlying population drift —
@@ -231,6 +233,14 @@ def make_sharded_drifting_streams(
     ``n_before`` / ``n_after`` are PER-SHARD lengths; shards are disjoint
     samples (per-shard seeds), as if a load balancer hash-partitioned one
     stream.
+
+    A **correlation-only** fleet drift (the cross-host kappa² pooling
+    workload, DESIGN.md §6) is ``shift_targets={}`` with ``shift=0.0``
+    and ``corr_gain > 1``: no predicate's marginal selectivity moves, so
+    per-host detectors have nothing loud to fire on, while the label
+    co-occurrence structure shifts everywhere.  ``skew_corr=True``
+    additionally spreads the correlation magnitude across shards with
+    the same ``drift_skew`` scaling used for selectivity targets.
     """
     if n_hosts < 1:
         raise ValueError("n_hosts must be >= 1")
@@ -241,14 +251,18 @@ def make_sharded_drifting_streams(
     for k in range(n_hosts):
         scale = 1.0 + drift_skew * float(gains[k])
         targets_k = {c: t * scale for c, t in shift_targets.items()}
+        gain_k = (1.0 + (corr_gain - 1.0) * scale if skew_corr
+                  else corr_gain)
         jitter = int(boundary_jitter * n_before * (rng.random_sample() - 0.5) * 2)
         nb = max(1, n_before + jitter)
         stream = make_drifting_stream(
             ds, nb, n_after + (n_before - nb),
-            shift_targets=targets_k, corr_gain=corr_gain, seed=seed + 7 * k + 1,
+            shift_targets=targets_k, corr_gain=gain_k,
+            shift=shift * scale, seed=seed + 7 * k + 1,
         )
         stream.meta["host"] = k
         stream.meta["drift_scale"] = scale
+        stream.meta["corr_gain"] = gain_k
         streams.append(stream)
     return streams
 

@@ -28,19 +28,79 @@ Protocol (one swap):
    single NACK aborts the epoch (staged plans are dropped, votes cleared).
    No host ever *serves* a plan version a peer has not acknowledged —
    the two-phase barrier is what the conservation property test leans on.
+
+Fault tolerance (DESIGN.md §6, failure model):
+
+* **Standby coordinator** — every state transition emits an epoch-stamped
+  ``StateDelta`` through the ``replicate`` callback (the transport
+  piggybacks it on the vote/prepare traffic it already carries).  A
+  ``StandbyCoordinator`` mirrors the protocol state from those deltas and
+  ``take_over()`` resolves an in-flight two-phase swap after primary
+  loss: it COMPLETES the commit when any host already installed the new
+  epoch or every active host had acked, and cleanly ABORTS otherwise.
+  Optimizer warm-start state (builder / B&B tree) is deliberately NOT
+  replicated — after failover, re-optimizations rebase from the seed
+  plan's builder.
+* **Straggler fencing** — the transport collects prepare-acks under a
+  deadline; ``resolve_prepare_deadline`` converts the silent hosts into
+  a NACK (policy ``"nack"``) or FENCES them (policy ``"fence"``): the
+  fleet commits without them, quorum/ack arithmetic shrinks to the
+  active hosts, and the fenced host keeps serving its pinned old epoch
+  until a COREWIRE re-sync frame catches it up (``mark_rejoined``).
+* **Cross-host kappa² pooling** — hosts stream their weighted IPW
+  contingency counts (``DriftVote.kappa`` and the periodic
+  ``offer_stats`` sync); the coordinator sums them into fleet-level
+  ``StreamingKappa2`` tables.  The pooled table reaches statistical
+  maturity ~K× sooner than any single shard's, so a correlation drift
+  split evenly across shards — invisible to every local detector —
+  still escalates to a B&B re-search (``propose_pooled``).
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
+from repro.core.correlation import StreamingKappa2
 from repro.serving.stats import (
     DriftEvent,
     ReservoirSample,
     ipw_selectivity,
     merge_reservoir_samples,
 )
+
+# host kappa export:
+#   (pred_i, pred_j) -> ((label_a, label_b) -> weight, n_weighted, n_rows)
+KappaExport = Dict[Tuple[int, int],
+                   Tuple[Dict[Tuple[int, int], float], float, int]]
+
+
+def kappa_export_to_json(kappa: Optional[KappaExport]) -> Optional[dict]:
+    """Wire-friendly form of a host kappa export (tuple keys -> strings);
+    the process transport's newline-delimited control protocol is JSON."""
+    if kappa is None:
+        return None
+    return {
+        f"{i},{j}": {
+            "counts": [[int(a), int(b), float(c)]
+                       for (a, b), c in counts.items()],
+            "n": float(n), "rows": int(rows),
+        }
+        for (i, j), (counts, n, rows) in kappa.items()
+    }
+
+
+def kappa_export_from_json(obj: Optional[dict]) -> Optional[KappaExport]:
+    if obj is None:
+        return None
+    out: KappaExport = {}
+    for key, entry in obj.items():
+        i, j = (int(v) for v in key.split(","))
+        out[(i, j)] = (
+            {(int(a), int(b)): float(c) for a, b, c in entry["counts"]},
+            float(entry["n"]), int(entry["rows"]),
+        )
+    return out
 
 
 # ------------------------------------------------------------- messages
@@ -52,6 +112,10 @@ class DriftVote:
     epoch: int  # plan epoch the host was serving when its detector fired
     event: DriftEvent
     reservoir: ReservoirSample
+    # the host's weighted IPW contingency counts (engine.kappa_export()):
+    # pooled coordinator-side so fleet-level correlation evidence exists
+    # even when every per-shard kappa estimate is immature or sub-threshold
+    kappa: Optional[KappaExport] = None
 
 
 @dataclass
@@ -78,6 +142,22 @@ class SwapCommit:
 
 
 @dataclass
+class StateDelta:
+    """One replicated protocol transition (primary -> standby).
+
+    Deltas are epoch-stamped and piggybacked on the message traffic the
+    transport already carries; applying them in order reconstructs
+    everything a standby needs to resolve an in-flight swap: who voted,
+    the pending prepare (with its artifact), which hosts acked, and the
+    commit/abort/fence outcomes."""
+
+    kind: str  # "vote" | "prepare" | "ack" | "commit" | "abort" | "fence" | "rejoin"
+    epoch: int
+    host: Optional[int] = None
+    artifact: Optional[bytes] = None
+
+
+@dataclass
 class SwapRecord:
     """Coordinator-side log entry for one attempted swap."""
 
@@ -88,6 +168,13 @@ class SwapRecord:
     committed: bool
     aborted_by: Optional[int] = None
     merged_rows: int = 0
+    # hosts excluded from this epoch's barrier (straggler fencing): they
+    # keep serving the previous epoch until a re-sync catches them up
+    fenced: List[int] = field(default_factory=list)
+    # what opened the swap: "quorum" (voted), "pooled:kappa2" (fleet-level
+    # correlation evidence, no vote quorum), "failover" (standby resolved
+    # an in-flight epoch after primary loss)
+    initiated_by: str = "quorum"
     # records submitted anywhere between quorum and commit: >0 would mean
     # a host kept serving while the two-phase barrier was still open
     # (filled by the transport; the state machine cannot see submissions)
@@ -125,13 +212,19 @@ class QuorumSwapCoordinator:
                  reopt_fn: Callable[[object, ReservoirSample, str], object],
                  quorum_frac: float = 0.5,
                  choose_mode: Optional[Callable[[object, Dict[int, float]], str]] = None,
-                 max_tile: int = 8192):
+                 max_tile: int = 8192,
+                 kappa_tol: float = 0.08,
+                 kappa_pool_baseline: float = 120.0,
+                 replicate: Optional[Callable[[StateDelta], None]] = None):
         self.plan = plan
         self.n_hosts = int(n_hosts)
         self.quorum_frac = float(quorum_frac)
         self.reopt_fn = reopt_fn
         self.choose_mode = choose_mode
         self.max_tile = max_tile
+        self.kappa_tol = float(kappa_tol)
+        self.kappa_pool_baseline = float(kappa_pool_baseline)
+        self.replicate = replicate
         self.epoch = 0  # current committed epoch
         self._votes: Dict[int, DriftVote] = {}  # host -> vote (current epoch)
         self.swap_log: List[SwapRecord] = []
@@ -139,11 +232,28 @@ class QuorumSwapCoordinator:
         self._pending_record: Optional[SwapRecord] = None
         self._new_plan = None
         self._acks: Dict[int, SwapAck] = {}
+        # straggler fencing: hosts excluded from barriers + quorum math
+        self.fenced: Set[int] = set()
+        # committed artifact of the current epoch (re-sync source)
+        self.last_artifact: Optional[bytes] = None
+        # cross-host kappa² pooling (per current epoch)
+        self._kappa_by_host: Dict[int, KappaExport] = {}
+        self._kappa_baseline: Optional[Dict[Tuple[int, int], float]] = None
+        self._pooled_fired = False
+
+    def _emit(self, delta: StateDelta) -> None:
+        if self.replicate is not None:
+            self.replicate(delta)
 
     # ------------------------------------------------------------ voting
     @property
+    def active_hosts(self) -> int:
+        """Hosts participating in quorum/barrier math (not fenced)."""
+        return self.n_hosts - len(self.fenced)
+
+    @property
     def quorum_size(self) -> int:
-        return quorum(self.n_hosts, self.quorum_frac)
+        return quorum(self.active_hosts, self.quorum_frac)
 
     @property
     def votes_pending(self) -> int:
@@ -156,14 +266,101 @@ class QuorumSwapCoordinator:
     def offer_vote(self, vote: DriftVote) -> bool:
         """Register one host's drift vote.  Returns True when this vote
         completes a quorum (caller should then run ``propose``).  Votes
-        for a superseded epoch, duplicate votes from the same host, and
-        votes arriving while a swap is already in flight are discarded."""
+        for a superseded epoch, duplicate votes from the same host, votes
+        from fenced hosts, and votes arriving while a swap is already in
+        flight are discarded."""
+        if vote.kappa is not None:
+            self.offer_stats(vote.host, vote.epoch, vote.kappa)
         if vote.epoch != self.epoch or self.pending is not None:
             return False
-        if vote.host in self._votes:
+        if vote.host in self._votes or vote.host in self.fenced:
             return False
         self._votes[vote.host] = vote
+        self._emit(StateDelta(kind="vote", epoch=self.epoch, host=vote.host))
         return len(self._votes) >= self.quorum_size
+
+    # ----------------------------------------------- cross-host kappa² pool
+    def offer_stats(self, host: int, epoch: int,
+                    kappa: Optional[KappaExport]) -> bool:
+        """Fold one host's cumulative IPW contingency counts into the
+        fleet pool (latest export wins — host tables are cumulative per
+        epoch and reset on install, so no double counting).  Returns True
+        when the POOLED kappa² has drifted beyond ``kappa_tol`` from the
+        pooled baseline — the caller should then run ``propose_pooled``.
+
+        The pooled table crosses the ``kappa_pool_baseline`` label count
+        ~K× sooner than any single host's local guard arms, which is
+        exactly why an evenly-split correlation drift is visible here
+        and nowhere else.  ``kappa_pool_baseline <= 0`` disables pooled
+        detection entirely (the default policy: pooling lets the
+        coordinator open swaps without any vote quorum, so fleets opt
+        in)."""
+        if self.kappa_pool_baseline <= 0:
+            return False
+        if kappa is None or epoch != self.epoch or host in self.fenced:
+            return False
+        self._kappa_by_host[host] = kappa
+        if self._kappa_baseline is not None \
+                and (self._pooled_fired or self.pending is not None):
+            # nothing can fire this round: skip the O(K · pairs) re-merge
+            # (the per-host exports are stored; pooling resumes next call)
+            return False
+        pooled, n_min = self._pooled_kappa()
+        if self._kappa_baseline is None:
+            if pooled and n_min >= self.kappa_pool_baseline:
+                self._kappa_baseline = pooled
+            return False
+        if n_min < 2.0 * self.kappa_pool_baseline:
+            # evidence accumulated since the freeze must at least match
+            # the baseline mass: small-sample kappa² estimates right
+            # after an install are noisy enough to flap across the tol
+            return False
+        return self._pooled_shift(pooled) > self.kappa_tol
+
+    def _pooled_kappa(self) -> Tuple[Dict[Tuple[int, int], float], float]:
+        """Fleet-level kappa² per predicate pair (summed contingency
+        tables) plus the smallest per-pair pooled LABEL count (actual
+        audited rows — the IPW-weighted mass ``n`` overstates the
+        statistical information by ~1/audit_rate)."""
+        pairs = sorted({p for k in self._kappa_by_host.values() for p in k})
+        pooled: Dict[Tuple[int, int], float] = {}
+        n_min = float("inf")
+        for pair in pairs:
+            sk = StreamingKappa2()
+            for export in self._kappa_by_host.values():
+                entry = export.get(pair)
+                if entry is not None:
+                    sk.merge_counts(*entry)
+            pooled[pair] = sk.value()
+            n_min = min(n_min, sk.n_rows)
+        return pooled, (0.0 if n_min == float("inf") else float(n_min))
+
+    def _pooled_shift(self, pooled: Optional[Dict[Tuple[int, int], float]] = None
+                      ) -> float:
+        """Largest |pooled kappa² − pooled baseline| over pairs; 0 until
+        the pooled baseline has frozen."""
+        if self._kappa_baseline is None:
+            return 0.0
+        if pooled is None:
+            pooled, _ = self._pooled_kappa()
+        return max((abs(pooled.get(k, 0.0) - v)
+                    for k, v in self._kappa_baseline.items()), default=0.0)
+
+    def mark_fenced(self, host: int) -> None:
+        """Exclude a silent host from quorum/barrier arithmetic; it keeps
+        serving its pinned epoch (serve-behind) until ``mark_rejoined``."""
+        if host not in self.fenced:
+            self.fenced.add(host)
+            self._votes.pop(host, None)
+            self._kappa_by_host.pop(host, None)
+            self._emit(StateDelta(kind="fence", epoch=self.epoch, host=host))
+
+    def mark_rejoined(self, host: int) -> None:
+        """Re-admit a fenced host after its COREWIRE re-sync installed the
+        current epoch."""
+        if host in self.fenced:
+            self.fenced.discard(host)
+            self._emit(StateDelta(kind="rejoin", epoch=self.epoch, host=host))
 
     # ---------------------------------------------------------- proposing
     def propose(self, extra_reservoirs: Optional[List[ReservoirSample]] = None
@@ -173,18 +370,37 @@ class QuorumSwapCoordinator:
         ``extra_reservoirs``: exports pulled from hosts that did NOT vote
         — their rows are just as fresh, and the merged sample should span
         every shard, not only the drifted ones."""
-        from repro.kernels.ops import serialize_scorer
-
         if len(self._votes) < self.quorum_size:
             raise RuntimeError(
                 f"propose() before quorum: {len(self._votes)} votes < "
                 f"{self.quorum_size}")
-        if self.pending is not None:
-            raise RuntimeError("a swap is already in flight")
         merged = merge_reservoir_samples(
             [v.reservoir for v in self._votes.values()]
             + list(extra_reservoirs or []))
-        mode = self._decide_mode(merged)
+        return self._propose(
+            merged, self._decide_mode(merged), voters=sorted(self._votes),
+            signals=[v.event.signal for v in self._votes.values()],
+            initiated_by="quorum")
+
+    def propose_pooled(self, reservoirs: List[ReservoirSample]) -> SwapPrepare:
+        """Coordinator-initiated swap on pooled fleet evidence: the pooled
+        kappa² drifted beyond tolerance while no vote quorum exists (each
+        shard's local view is too weak to fire).  A correlation-structure
+        shift invalidates the marginal-only regret estimate, so the mode
+        is always the B&B re-search."""
+        self._pooled_fired = True
+        merged = merge_reservoir_samples(list(reservoirs))
+        return self._propose(merged, "bnb", voters=[],
+                             signals=["pooled:kappa2"],
+                             initiated_by="pooled:kappa2")
+
+    def _propose(self, merged: ReservoirSample, mode: str, *,
+                 voters: List[int], signals: List[str],
+                 initiated_by: str) -> SwapPrepare:
+        from repro.kernels.ops import serialize_scorer
+
+        if self.pending is not None:
+            raise RuntimeError("a swap is already in flight")
         t0 = time.perf_counter()
         new_plan = self.reopt_fn(self.plan, merged, mode)
         reopt_ms = (time.perf_counter() - t0) * 1e3
@@ -194,14 +410,15 @@ class QuorumSwapCoordinator:
         new_epoch = self.epoch + 1
         self.pending = SwapPrepare(epoch=new_epoch, artifact=artifact)
         self._pending_record = SwapRecord(
-            epoch=new_epoch,
-            voters=sorted(self._votes),
-            signals=[v.event.signal for v in self._votes.values()],
+            epoch=new_epoch, voters=voters, signals=signals,
             mode=mode, committed=False, merged_rows=merged.n_rows,
+            fenced=sorted(self.fenced), initiated_by=initiated_by,
             reopt_ms=reopt_ms, serialize_ms=ser_ms,
         )
         self._new_plan = new_plan
         self._acks = {}
+        self._emit(StateDelta(kind="prepare", epoch=new_epoch,
+                              artifact=self.pending.artifact))
         return self.pending
 
     def _decide_mode(self, merged: ReservoirSample) -> str:
@@ -223,32 +440,84 @@ class QuorumSwapCoordinator:
         escalated = sum(1 for v in self._votes.values() if v.event.escalated)
         if escalated * 2 > len(self._votes):
             mode = "bnb"
+        elif self._pooled_shift() > self.kappa_tol:
+            # pooled fleet evidence outranks the marginal-only regret
+            # estimate even when no single vote carried an escalation hint
+            mode = "bnb"
         return mode
 
     # ------------------------------------------------------- ack / commit
     def offer_ack(self, ack: SwapAck) -> Optional[SwapCommit]:
-        """Phase-1 responses.  Returns the ``SwapCommit`` once EVERY host
-        has acked; a NACK aborts the epoch immediately (returns None and
-        clears the in-flight state — callers observe via ``pending``)."""
+        """Phase-1 responses.  Returns the ``SwapCommit`` once every
+        ACTIVE (non-fenced) host has acked; a NACK aborts the epoch
+        immediately (returns None and clears the in-flight state —
+        callers observe via ``pending``)."""
         if self.pending is None or ack.epoch != self.pending.epoch:
             return None
         if not ack.ok:
-            rec = self._pending_record
-            rec.aborted_by = ack.host
-            self.swap_log.append(rec)
-            self._clear_round()
+            self._abort(aborted_by=ack.host)
             return None
         self._acks[ack.host] = ack
-        if len(self._acks) < self.n_hosts:
+        self._emit(StateDelta(kind="ack", epoch=ack.epoch, host=ack.host))
+        return self._maybe_commit()
+
+    def resolve_prepare_deadline(self, missing: List[int],
+                                 policy: str = "fence"
+                                 ) -> Optional[SwapCommit]:
+        """The transport's ack deadline expired with ``missing`` hosts
+        silent.  ``policy="nack"`` treats the first straggler as a NACK
+        (epoch aborts fleet-wide); ``policy="fence"`` excludes the
+        stragglers from the barrier — they keep serving their pinned old
+        epoch and the remaining hosts commit without them (serve-behind
+        version fencing; the fenced hosts catch up via re-sync)."""
+        if self.pending is None or not missing:
+            return None
+        if policy == "nack":
+            self._abort(aborted_by=missing[0])
+            return None
+        if policy != "fence":
+            raise ValueError(f"unknown straggler policy {policy!r}")
+        for host in missing:
+            self.mark_fenced(host)
+        if self._pending_record is not None:
+            self._pending_record.fenced = sorted(
+                set(self._pending_record.fenced) | set(missing))
+        if self.active_hosts == 0:
+            # every host went silent: nothing left to commit on — abort
+            # rather than leave the epoch pending forever
+            self._abort(aborted_by=missing[0])
+            return None
+        return self._maybe_commit()
+
+    def _maybe_commit(self) -> Optional[SwapCommit]:
+        active = set(range(self.n_hosts)) - self.fenced
+        if not active or not active.issubset(self._acks):
             return None
         commit = SwapCommit(epoch=self.pending.epoch)
         self.epoch = self.pending.epoch
         self.plan = self._new_plan
+        self.last_artifact = self.pending.artifact
         rec = self._pending_record
         rec.committed = True
         self.swap_log.append(rec)
+        self._emit(StateDelta(kind="commit", epoch=commit.epoch,
+                              artifact=self.last_artifact))
         self._clear_round()
+        self._reset_epoch_stats()
         return commit
+
+    def _abort(self, aborted_by: Optional[int]) -> None:
+        rec = self._pending_record
+        rec.aborted_by = aborted_by
+        self.swap_log.append(rec)
+        self._emit(StateDelta(kind="abort", epoch=self.pending.epoch,
+                              host=aborted_by))
+        self._clear_round()
+        # fences deliberately SURVIVE the abort: a fenced host may be
+        # several epochs behind, and only the re-sync/rejoin path may
+        # re-admit it — clearing here would strand it (unfenced but
+        # behind, its votes discarded on epoch mismatch forever)
+        self._pooled_fired = False
 
     def note_prepare_ms(self, ms: float) -> None:
         """Transport-side hook: wall time spent distributing the prepare
@@ -272,7 +541,149 @@ class QuorumSwapCoordinator:
         self._acks = {}
         self._votes = {}
 
+    def _reset_epoch_stats(self) -> None:
+        """A committed install resets every host's streaming tables, so
+        the pooled mirror restarts with the new epoch too."""
+        self._kappa_by_host = {}
+        self._kappa_baseline = None
+        self._pooled_fired = False
+
     # ------------------------------------------------------------- stats
     @property
     def swaps_committed(self) -> int:
         return sum(1 for r in self.swap_log if r.committed)
+
+
+class StandbyCoordinator:
+    """Replicated mirror of a ``QuorumSwapCoordinator``'s protocol state.
+
+    The primary emits ``StateDelta``s (piggybacked on the vote/prepare
+    traffic); ``apply`` folds them into a mirror of the epoch, the voted
+    hosts, the in-flight prepare (with its artifact), the collected acks,
+    and the fence set.  On primary heartbeat loss, ``take_over`` probes
+    the hosts and resolves any in-flight two-phase swap:
+
+    * **complete** — some host already installed the proposed epoch
+      (primary died mid-commit-broadcast; aborting would strand it), or
+      every active host had acked (the barrier was closed; only the
+      commit broadcast was lost): the standby re-broadcasts the commit.
+      A host that cannot commit (never staged) is fenced for re-sync
+      rather than blocking the takeover.
+    * **abort** — anything less: staged copies are dropped fleet-wide and
+      voting re-arms.  No host ever serves an epoch its peers have not
+      acknowledged, through the failover included.
+
+    Optimizer warm-start state is deliberately not replicated: the new
+    coordinator re-optimizes from the seed plan's builder (protocol
+    safety over search warmth)."""
+
+    def __init__(self, base_plan, n_hosts: int, *,
+                 reopt_fn: Callable[[object, ReservoirSample, str], object],
+                 quorum_frac: float = 0.5,
+                 choose_mode: Optional[Callable] = None,
+                 max_tile: int = 8192,
+                 kappa_tol: float = 0.08,
+                 kappa_pool_baseline: float = 120.0):
+        self.base_plan = base_plan
+        self.n_hosts = int(n_hosts)
+        self._kw = dict(reopt_fn=reopt_fn, quorum_frac=quorum_frac,
+                        choose_mode=choose_mode, max_tile=max_tile,
+                        kappa_tol=kappa_tol,
+                        kappa_pool_baseline=kappa_pool_baseline)
+        self.epoch = 0
+        self.voted: Set[int] = set()
+        self.fenced: Set[int] = set()
+        self.pending: Optional[Tuple[int, bytes]] = None  # (epoch, artifact)
+        self.acks: Set[int] = set()
+        self.last_artifact: Optional[bytes] = None
+        self.deltas_applied = 0
+
+    def apply(self, delta: StateDelta) -> None:
+        self.deltas_applied += 1
+        if delta.kind == "vote":
+            self.voted.add(delta.host)
+        elif delta.kind == "prepare":
+            self.pending = (delta.epoch, delta.artifact)
+            self.acks = set()
+        elif delta.kind == "ack":
+            self.acks.add(delta.host)
+        elif delta.kind == "commit":
+            self.epoch = delta.epoch
+            self.last_artifact = delta.artifact
+            self.pending = None
+            self.acks = set()
+            self.voted = set()
+        elif delta.kind == "abort":
+            self.pending = None
+            self.acks = set()
+            self.voted = set()
+        elif delta.kind == "fence":
+            self.fenced.add(delta.host)
+            self.voted.discard(delta.host)
+        elif delta.kind == "rejoin":
+            self.fenced.discard(delta.host)
+        else:
+            raise ValueError(f"unknown delta kind {delta.kind!r}")
+
+    def take_over(self, hosts, *, unreachable: Optional[Set[int]] = None
+                  ) -> Tuple[QuorumSwapCoordinator, str]:
+        """Build a live coordinator from the mirrored state, resolving any
+        in-flight swap against the probed host fleet.  Returns
+        ``(coordinator, resolution)`` with resolution one of
+        ``"completed"``, ``"aborted"``, ``"idle"``.  ``unreachable``
+        hosts are skipped (still partitioned); they stay fenced."""
+        unreachable = unreachable or set()
+        coord = QuorumSwapCoordinator(
+            self.base_plan, self.n_hosts, replicate=None, **self._kw)
+        coord.epoch = self.epoch
+        coord.last_artifact = self.last_artifact
+        coord.fenced = set(self.fenced) | (unreachable & set(
+            h.host_id for h in hosts))
+        resolution = "idle"
+        reachable = [h for h in hosts if h.host_id not in unreachable]
+        if self.pending is not None:
+            epoch, artifact = self.pending
+            active = [h for h in reachable if h.host_id not in self.fenced]
+            installed = [h for h in active if h.epoch >= epoch]
+            all_acked = {h.host_id for h in active}.issubset(self.acks)
+            if installed or all_acked:
+                for h in active:
+                    if h.epoch >= epoch:
+                        continue
+                    try:
+                        h.commit(SwapCommit(epoch=epoch))
+                    except Exception:
+                        # never staged (prepare was lost with the primary):
+                        # fence for re-sync instead of blocking takeover
+                        coord.mark_fenced(h.host_id)
+                coord.epoch = epoch
+                coord.last_artifact = artifact
+                coord.swap_log.append(SwapRecord(
+                    epoch=epoch, voters=sorted(self.voted),
+                    signals=["failover"], mode="takeover", committed=True,
+                    fenced=sorted(coord.fenced), initiated_by="failover"))
+                resolution = "completed"
+            else:
+                for h in reachable:
+                    h.abort()
+                coord.swap_log.append(SwapRecord(
+                    epoch=epoch, voters=sorted(self.voted),
+                    signals=["failover"], mode="takeover", committed=False,
+                    aborted_by=-1, initiated_by="failover"))
+                resolution = "aborted"
+        else:
+            # re-arm voting: the primary's collected votes died with it
+            for h in reachable:
+                h.abort()
+        # hosts still behind the resolved epoch (the primary committed and
+        # died before finishing the broadcast, or they were already
+        # fenced): fence them so the driver's re-sync path installs the
+        # committed artifact — no host ever serves an epoch its peers
+        # have not acknowledged, failover included
+        behind = [h for h in reachable
+                  if h.epoch < coord.epoch and h.host_id not in coord.fenced]
+        for h in behind:
+            coord.mark_fenced(h.host_id)
+        if resolution == "idle" and behind:
+            resolution = "resync"
+        return coord, resolution

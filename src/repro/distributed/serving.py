@@ -13,7 +13,7 @@ In-flight records still finish under the plan version that scored them
 (the engine's versioned ``_PlanState`` machinery), so record conservation
 holds across global swaps exactly as it does across local ones.
 
-Two transports share all protocol logic:
+Three transports share all protocol logic:
 
 * ``transport="inline"`` — hosts are plain objects driven round-robin by
   the caller's thread; deterministic, the benchmark/test default.
@@ -21,6 +21,20 @@ Two transports share all protocol logic:
   command queue; the coordinator talks to it only via messages.  Same
   code path as inline (``_ThreadHost`` proxies ``ShardHost``), but the
   prepare/commit barrier crosses real thread boundaries.
+* ``transport="process"`` — one host per OS subprocess
+  (``distributed/procworker.py``): the parent speaks a newline-delimited
+  JSON control protocol over pipes, with COREWIRE blobs (artifacts,
+  re-sync frames) riding base64-embedded.  The worker runs the same
+  ``ShardHost`` the other transports drive — one protocol core.
+
+Fault tolerance (DESIGN.md §6 failure model): the coordinator replicates
+its state machine to a ``StandbyCoordinator`` via epoch-stamped deltas;
+heartbeat loss promotes the standby, which completes or cleanly aborts
+any in-flight two-phase swap.  The prepare barrier runs under an ack
+deadline: silent hosts become a NACK or get FENCED (serve-behind on
+their pinned epoch, excluded from quorum math, COREWIRE re-sync on
+rejoin).  Hosts additionally stream their IPW kappa² contingency counts
+so the coordinator pools correlation evidence fleet-wide.
 
 A real deployment would replace the transport with RPC; the protocol core
 (``distributed/consensus.py``) is transport-agnostic by construction.
@@ -31,7 +45,7 @@ import queue
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -39,11 +53,14 @@ from repro.core.query import PhysicalPlan
 from repro.distributed.consensus import (
     DriftVote,
     QuorumSwapCoordinator,
+    StandbyCoordinator,
+    StateDelta,
     SwapAck,
     SwapCommit,
     SwapPrepare,
     SwapRecord,
 )
+from repro.distributed.fault_tolerance import HeartbeatMonitor
 from repro.serving.engine import CascadeServer, ServeStats
 from repro.serving.stats import AdaptivePolicy, DriftEvent
 
@@ -61,6 +78,12 @@ class ShardedServeStats:
     final_epoch: int = 0
     swap_log: List[SwapRecord] = field(default_factory=list)
     wall_ms: float = 0.0
+    # ----- fault tolerance -----
+    failovers: int = 0
+    failover_resolution: str = ""  # "completed" | "aborted" | "idle"
+    fences: int = 0  # hosts fenced out of a barrier (stragglers)
+    resyncs: int = 0  # COREWIRE catch-up installs on rejoin
+    pooled_swaps: int = 0  # swaps initiated by pooled kappa² evidence
 
     @property
     def submitted(self) -> int:
@@ -109,6 +132,7 @@ class ShardHost:
         self._voted_epoch = -1
         self._staged: Optional[Tuple[int, PhysicalPlan, object]] = None
         self.submitted = 0
+        self.resyncs = 0
         # idx -> engine plan version current when the record was submitted
         # (None until a test enables tracking; kept off the hot path)
         self.track_versions = False
@@ -152,14 +176,23 @@ class ShardHost:
                 escalated=escalated, plan_version=self.epoch,
             ),
             reservoir=self.engine.reservoir_export(),
+            kappa=self.engine.kappa_export(),
         )
 
     def reservoir_export(self):
         return self.engine.reservoir_export()
 
+    def kappa_export(self):
+        """Cumulative IPW contingency counts for fleet-level pooling."""
+        return self.engine.kappa_export()
+
     # --------------------------------------------------------- two-phase
-    def prepare(self, msg: SwapPrepare) -> SwapAck:
-        """Phase 1: deserialize + stage the artifact; serve nothing new."""
+    def prepare(self, msg: SwapPrepare,
+                timeout: Optional[float] = None) -> SwapAck:
+        """Phase 1: deserialize + stage the artifact; serve nothing new.
+        ``timeout`` is accepted for transport-API uniformity — an inline
+        host cannot be silent (the deadline is enforced by the threaded /
+        process transports, whose calls really can hang)."""
         from repro.kernels.ops import deserialize_scorer
 
         try:
@@ -195,6 +228,38 @@ class ShardHost:
         self._staged = None
         self._voted_epoch = -1
 
+    def resync(self, frame: bytes) -> int:
+        """Catch-up install for a fenced host rejoining the fleet: a
+        COREWIRE v1.1 re-sync frame carries the committed artifact of the
+        fleet's CURRENT epoch.  Unlike ``prepare``, there is no two-phase
+        dance — every active peer already acked this artifact — and the
+        epoch may jump by more than one (the host serve-behinds through
+        however many swaps it missed).  Returns the installed epoch."""
+        from repro.kernels.ops import (
+            FRAME_RESYNC,
+            deserialize_frame,
+            deserialize_scorer,
+        )
+
+        kind, epoch, payload, _meta = deserialize_frame(frame)
+        if kind != FRAME_RESYNC:
+            raise ValueError(f"host {self.host_id}: expected a resync "
+                             f"frame, got {kind!r}")
+        if epoch <= self.epoch:
+            return self.epoch  # stale resync: already caught up
+        plan, scorer = deserialize_scorer(payload, self.query)
+        self.engine.install_plan(plan, scorer=scorer, version=epoch)
+        self.epoch = epoch
+        self._staged = None
+        self._voted_epoch = -1
+        self.resyncs += 1
+        return self.epoch
+
+
+class HostTimeout(Exception):
+    """A host RPC missed its deadline (thread/process transports): the
+    caller decides between NACK-on-deadline and straggler fencing."""
+
 
 class _ThreadHost:
     """Thread-isolated ``ShardHost``: the host's engine lives entirely on
@@ -220,10 +285,14 @@ class _ThreadHost:
             except Exception as e:  # surfaced on the caller thread
                 reply.put((False, e))
 
-    def _call(self, fn, *args):
+    def _call(self, fn, *args, timeout: Optional[float] = None):
         reply: "queue.Queue" = queue.Queue()
         self._req.put((fn, args, reply))
-        ok, out = reply.get()
+        try:
+            ok, out = reply.get(timeout=timeout)
+        except queue.Empty:
+            raise HostTimeout(
+                f"host {self.host_id} silent past {timeout}s deadline")
         if not ok:
             raise out
         return out
@@ -258,20 +327,30 @@ class _ThreadHost:
     def drain(self):
         return self._call(self._host.drain)
 
+    @property
+    def resyncs(self) -> int:
+        return self._host.resyncs
+
     def poll_vote(self):
         return self._call(self._host.poll_vote)
 
     def reservoir_export(self):
         return self._call(self._host.reservoir_export)
 
-    def prepare(self, msg):
-        return self._call(self._host.prepare, msg)
+    def kappa_export(self):
+        return self._call(self._host.kappa_export)
+
+    def prepare(self, msg, timeout: Optional[float] = None):
+        return self._call(self._host.prepare, msg, timeout=timeout)
 
     def commit(self, msg):
         return self._call(self._host.commit, msg)
 
     def abort(self):
         return self._call(self._host.abort)
+
+    def resync(self, frame):
+        return self._call(self._host.resync, frame)
 
     def stop(self):
         reply: "queue.Queue" = queue.Queue()
@@ -288,33 +367,110 @@ class ShardedCascadeServer:
     serialized artifact (builder state never fans out).  ``n_hosts=1``
     degrades to single-host serving THROUGH the consensus path (quorum of
     one), which is what the sharded benchmark uses as its baseline.
+
+    Fault-tolerance knobs:
+
+    * ``standby`` — maintain a ``StandbyCoordinator`` mirror (replicated
+      state deltas ride a COREWIRE v1.1 frame per transition).  On
+      primary heartbeat loss the standby takes over mid-epoch.
+    * ``kill_coordinator_at`` — failure injection: ``"prepare"`` kills
+      the primary after half the prepare broadcast (partial staging —
+      takeover must ABORT), ``"commit"`` after the barrier closed but
+      before the commit broadcast, ``"mid-commit"`` after one host
+      installed (takeover must COMPLETE / re-sync), or an int record
+      count (idle death at a chunk boundary).
+    * ``straggler_host`` / ``straggler_policy`` — host made silent for
+      the first prepare barrier; ``"fence"`` commits without it under
+      serve-behind version fencing (re-sync on rejoin), ``"nack"``
+      converts the deadline miss into an abort.
+    * ``ack_deadline_s`` — the prepare barrier's per-host ack deadline
+      (enforced for real by the thread/process transports).
     """
 
     def __init__(self, plan: PhysicalPlan, n_hosts: int = 4, *,
                  tile: int = 1024, policy: Optional[AdaptivePolicy] = None,
                  quorum_frac: float = 0.5, seed: int = 0,
                  use_kernel: bool = True, transport: str = "inline",
-                 max_tile: int = 8192):
-        if transport not in ("inline", "thread"):
+                 max_tile: int = 8192,
+                 standby: bool = True,
+                 kill_coordinator_at=None,
+                 straggler_host: Optional[int] = None,
+                 straggler_policy: str = "fence",
+                 ack_deadline_s: float = 30.0,
+                 heartbeat_rounds: float = 1.5,
+                 worker_spec: Optional[dict] = None):
+        if transport not in ("inline", "thread", "process"):
             raise ValueError(f"unknown transport {transport!r}")
+        if straggler_policy not in ("fence", "nack"):
+            raise ValueError(f"unknown straggler policy {straggler_policy!r}")
+        if kill_coordinator_at is not None \
+                and kill_coordinator_at not in ("prepare", "commit",
+                                                "mid-commit") \
+                and not isinstance(kill_coordinator_at, int):
+            # a typo here would silently disable the failure injection —
+            # a fault-tolerance test would then pass exercising nothing
+            raise ValueError(
+                f"unknown kill point {kill_coordinator_at!r}: expected "
+                f"'prepare' | 'commit' | 'mid-commit' | record count")
         self.n_hosts = int(n_hosts)
         self.policy = policy or AdaptivePolicy()
         self.plan0 = plan
         self.query = plan.query
-        self.coordinator = QuorumSwapCoordinator(
-            plan, self.n_hosts, reopt_fn=self._reopt,
-            quorum_frac=quorum_frac,
+        self.max_tile = max_tile
+        self.ack_deadline_s = float(ack_deadline_s)
+        self.straggler_policy = straggler_policy
+        # the injected straggler is partitioned from the coordinator from
+        # the start (it still serves its shard); its link heals right
+        # after the first barrier it goes missing from — see _finish_swap
+        self._straggler_pending = straggler_host
+        self._kill_at = kill_coordinator_at
+        self._silent: Set[int] = (
+            set() if straggler_host is None else {int(straggler_host)})
+        self._primary_alive = True
+        self._round = 0
+        self._swap_log_prefix: List[SwapRecord] = []
+        coord_kw = dict(
+            reopt_fn=self._reopt, quorum_frac=quorum_frac,
             choose_mode=lambda p, fresh: self.policy.choose_escalation(p, fresh)[0],
-            max_tile=max_tile,
+            max_tile=max_tile, kappa_tol=self.policy.kappa_tol,
+            kappa_pool_baseline=self.policy.kappa_pool_baseline,
         )
-        hosts = [
-            ShardHost(k, plan, tile=tile, policy=self.policy,
-                      seed=seed + 1000 * k, use_kernel=use_kernel)
-            for k in range(self.n_hosts)
-        ]
+        self.standby = (StandbyCoordinator(plan, self.n_hosts, **coord_kw)
+                        if standby else None)
+        self.coordinator = QuorumSwapCoordinator(
+            plan, self.n_hosts,
+            replicate=self._replicate if standby else None, **coord_kw)
+        # heartbeat clock = driver rounds (deterministic in simulation);
+        # a real deployment would beat on wall time
+        self._hb = HeartbeatMonitor(["coordinator"],
+                                    timeout=float(heartbeat_rounds),
+                                    clock=lambda: float(self._round))
         self.transport = transport
-        self.hosts: List = (
-            [_ThreadHost(h) for h in hosts] if transport == "thread" else hosts)
+        if transport == "process":
+            from repro.distributed.procworker import ProcessHost
+            from repro.kernels.ops import serialize_scorer
+
+            if worker_spec is None:
+                raise ValueError(
+                    "transport='process' needs worker_spec: the worker "
+                    "rebuilds the synthetic workload from its seeds (UDF "
+                    "closures cannot travel over the pipe)")
+            artifact = serialize_scorer(plan, max_tile=max_tile)
+            self.hosts = [
+                ProcessHost(k, spec=worker_spec, artifact=artifact,
+                            tile=tile, policy=self.policy,
+                            seed=seed + 1000 * k, use_kernel=use_kernel)
+                for k in range(self.n_hosts)
+            ]
+        else:
+            hosts = [
+                ShardHost(k, plan, tile=tile, policy=self.policy,
+                          seed=seed + 1000 * k, use_kernel=use_kernel)
+                for k in range(self.n_hosts)
+            ]
+            self.hosts = (
+                [_ThreadHost(h) for h in hosts] if transport == "thread"
+                else hosts)
         self.stats = ShardedServeStats(
             n_hosts=self.n_hosts,
             per_host=[h.engine.stats for h in self.hosts],
@@ -328,9 +484,68 @@ class ShardedCascadeServer:
         return reoptimize(plan, merged.x, known_sigma=merged.known_sigma,
                           mode=mode, step=self.policy.step)
 
+    # ------------------------------------------------------- replication
+    def _replicate(self, delta: StateDelta) -> None:
+        """Ship one coordinator transition to the standby as a COREWIRE
+        v1.1 delta frame — the same envelope a cross-machine deployment
+        would piggyback on its vote/prepare traffic (serialize +
+        deserialize both run, so the frame path is exercised on every
+        transition of every sharded run)."""
+        from repro.kernels.ops import FRAME_DELTA, deserialize_frame, serialize_frame
+
+        frame = serialize_frame(
+            FRAME_DELTA, delta.epoch, delta.artifact or b"",
+            meta={"kind": delta.kind, "host": delta.host,
+                  "has_artifact": delta.artifact is not None})
+        kind, epoch, payload, meta = deserialize_frame(frame)
+        assert kind == FRAME_DELTA
+        self.standby.apply(StateDelta(
+            kind=meta["kind"], epoch=epoch, host=meta["host"],
+            artifact=payload if meta["has_artifact"] else None))
+
+    # ------------------------------------------------------ failure control
+    def set_silent(self, host_id: int, silent: bool = True) -> None:
+        """Simulate a network partition: a silent host receives no
+        coordinator RPCs (prepare/commit/poll) but keeps serving its
+        local shard — exactly a straggler behind a dead link."""
+        if silent:
+            self._silent.add(host_id)
+        else:
+            self._silent.discard(host_id)
+
+    def _kill_primary(self) -> None:
+        """Failure injection: the primary stops beating and processing;
+        its swap log survives (it is OUR log for reporting — a real
+        deployment loses it, which is why the standby mirrors state)."""
+        self._swap_log_prefix.extend(self.coordinator.swap_log)
+        self._primary_alive = False
+        self._kill_at = None
+
+    def _consume_kill(self, point: str) -> bool:
+        if self._kill_at == point:
+            self._kill_primary()
+            return True
+        return False
+
+    def _failover(self) -> None:
+        coord, resolution = self.standby.take_over(
+            self.hosts, unreachable=set(self._silent))
+        self.coordinator = coord
+        self.standby = None  # one standby in the sim; a fleet would re-elect
+        self._primary_alive = True
+        self._hb.beat("coordinator")
+        self.stats.failovers += 1
+        self.stats.failover_resolution = resolution
+
     # ------------------------------------------------------------ protocol
+    def _reachable(self, h) -> bool:
+        return h.host_id not in self._silent
+
     def _handle_votes(self) -> None:
+        fenced = self.coordinator.fenced
         for h in self.hosts:
+            if not self._reachable(h) or h.host_id in fenced:
+                continue
             vote = h.poll_vote()
             if vote is None:
                 continue
@@ -338,44 +553,134 @@ class ShardedCascadeServer:
             if self.coordinator.offer_vote(vote):
                 self._run_swap()
 
+    def _sync_stats(self) -> None:
+        """Periodic fleet stats sync: pool every reachable host's kappa²
+        contingency counts coordinator-side; pooled drift beyond
+        tolerance opens a coordinator-initiated (unvoted) swap.  Opt-in
+        via ``policy.kappa_pool_baseline > 0``."""
+        if self.policy.kappa_pool_baseline <= 0:
+            return
+        coord = self.coordinator
+        for h in self.hosts:
+            if not self._reachable(h) or h.host_id in coord.fenced:
+                continue
+            if coord.offer_stats(h.host_id, h.epoch, h.kappa_export()):
+                reservoirs = [x.reservoir_export() for x in self.hosts
+                              if self._reachable(x)
+                              and x.host_id not in coord.fenced]
+                self._finish_swap(coord.propose_pooled(reservoirs))
+                return
+
+    def _handle_rejoins(self) -> None:
+        """Fenced hosts whose link healed catch up: a COREWIRE re-sync
+        frame installs the fleet's committed epoch directly (every active
+        peer acked that artifact when it committed), then the host
+        re-enters quorum math."""
+        from repro.kernels.ops import FRAME_RESYNC, serialize_frame
+
+        coord = self.coordinator
+        if not coord.fenced or coord.pending is not None:
+            return
+        for h in self.hosts:
+            if h.host_id not in coord.fenced or not self._reachable(h):
+                continue
+            if h.epoch < coord.epoch:
+                if coord.last_artifact is None:
+                    continue  # nothing committed to sync from (shouldn't happen)
+                frame = serialize_frame(FRAME_RESYNC, coord.epoch,
+                                        coord.last_artifact,
+                                        meta={"host": h.host_id})
+                h.resync(frame)
+                self.stats.resyncs += 1
+            coord.mark_rejoined(h.host_id)
+
     def _run_swap(self) -> None:
         """Quorum reached: merge + re-optimize + two-phase broadcast."""
         voters = set(self.coordinator.voters)
         extras = [h.reservoir_export() for h in self.hosts
-                  if h.host_id not in voters]
+                  if h.host_id not in voters and self._reachable(h)
+                  and h.host_id not in self.coordinator.fenced]
+        self._finish_swap(self.coordinator.propose(extra_reservoirs=extras))
+
+    def _finish_swap(self, prepare: SwapPrepare) -> None:
+        """Drive one two-phase barrier: prepare broadcast under the ack
+        deadline, straggler resolution, commit broadcast — with the
+        failure-injection kill points threaded through."""
+        coord = self.coordinator
+        initiated_by = coord._pending_record.initiated_by
         submitted_at_quorum = sum(h.submitted for h in self.hosts)
-        prepare = self.coordinator.propose(extra_reservoirs=extras)
+        barrier = [h for h in self.hosts if h.host_id not in coord.fenced]
         t0 = time.perf_counter()
         commit = None
-        for h in self.hosts:
-            ack = h.prepare(prepare)
-            commit = self.coordinator.offer_ack(ack)
+        missing: List[int] = []
+        delivered = 0
+        for h in barrier:
+            if delivered >= (len(barrier) + 1) // 2 \
+                    and self._consume_kill("prepare"):
+                return  # primary died mid-prepare: some hosts staged, some not
+            if not self._reachable(h):
+                missing.append(h.host_id)
+                continue
+            try:
+                # the deadline is only real where a call can hang; inline
+                # hosts are same-thread (and tests monkeypatch prepare)
+                ack = (h.prepare(prepare) if self.transport == "inline"
+                       else h.prepare(prepare, timeout=self.ack_deadline_s))
+            except HostTimeout:
+                missing.append(h.host_id)
+                continue
+            delivered += 1
+            commit = coord.offer_ack(ack)
             if not ack.ok:
                 break
-        self.coordinator.note_prepare_ms((time.perf_counter() - t0) * 1e3)
-        if commit is None:  # aborted (NACK) — drop every host's staged copy
-            for h in self.hosts:
-                h.abort()
+        if commit is None and coord.pending is not None and missing:
+            # deadline expired with silent hosts: fence or NACK them
+            commit = coord.resolve_prepare_deadline(missing,
+                                                    self.straggler_policy)
+            self.stats.fences += sum(1 for hid in missing
+                                     if hid in coord.fenced)
+        coord.note_prepare_ms((time.perf_counter() - t0) * 1e3)
+        if commit is None:
+            # aborted (NACK / nack-policy straggler): drop staged copies
+            for h in barrier:
+                if self._reachable(h):
+                    h.abort()
             self.stats.swaps_aborted += 1
+            self._heal_straggler(missing)
             return
+        if self._consume_kill("commit"):
+            return  # barrier closed, commit broadcast lost with the primary
         t0 = time.perf_counter()
-        for h in self.hosts:
+        installed = 0
+        for h in barrier:
+            if h.host_id in coord.fenced or not self._reachable(h):
+                continue
             h.commit(commit)
-        self.coordinator.note_commit_ms((time.perf_counter() - t0) * 1e3)
-        # the barrier is synchronous in both transports: any submissions
+            installed += 1
+            if installed == 1 and self._consume_kill("mid-commit"):
+                return  # one host installed; the rest must catch up via standby
+        coord.note_commit_ms((time.perf_counter() - t0) * 1e3)
+        # the barrier is synchronous in every transport: any submissions
         # while it was open would show up here
-        self.coordinator.swap_log[-1].lag_records = (
+        coord.swap_log[-1].lag_records = (
             sum(h.submitted for h in self.hosts) - submitted_at_quorum)
         self.stats.swaps_committed += 1
+        if initiated_by == "pooled:kappa2":
+            self.stats.pooled_swaps += 1
+        self._heal_straggler(missing)
 
     # -------------------------------------------------------------- driver
     def _drive(self, streams: List[np.ndarray], idx_map: List[np.ndarray],
                chunk: int) -> ShardedServeStats:
-        """Round-robin the hosts one chunk at a time, handling votes (and
-        any resulting swap) at every chunk boundary."""
+        """Round-robin the hosts one chunk at a time, handling votes,
+        stats pooling, straggler rejoins (and any resulting swap) at
+        every chunk boundary; heartbeat loss promotes the standby."""
         t_start = time.perf_counter()
         pos = [0] * self.n_hosts
         while any(pos[k] < len(streams[k]) for k in range(self.n_hosts)):
+            self._round += 1
+            if self._primary_alive:
+                self._hb.beat("coordinator")
             for k, h in enumerate(self.hosts):
                 lo = pos[k]
                 if lo >= len(streams[k]):
@@ -383,17 +688,50 @@ class ShardedCascadeServer:
                 hi = min(lo + chunk, len(streams[k]))
                 h.submit_chunk(idx_map[k][lo:hi], streams[k][lo:hi])
                 pos[k] = hi
-            self._handle_votes()
+            if isinstance(self._kill_at, int) and self._primary_alive \
+                    and sum(h.submitted for h in self.hosts) >= self._kill_at:
+                self._kill_primary()
+            if self._primary_alive:
+                self._handle_votes()
+                self._sync_stats()
+                self._handle_rejoins()
+            elif self.standby is not None and self._hb.dead_hosts():
+                self._failover()
+        if not self._primary_alive and self.standby is not None:
+            self._failover()  # stream ended inside the detection window
+        # catch up any still-fenced reachable host before the drain: a
+        # barrier (or failover) resolving on the final round otherwise
+        # leaves it serving behind with no round left to re-sync it
+        self._heal_straggler(list(self._silent))
+        self._handle_rejoins()
         for k, h in enumerate(self.hosts):
             h.drain()
             self.stats.submitted_per_host[k] = h.submitted
         self.stats.final_epoch = self.coordinator.epoch
-        self.stats.swap_log = list(self.coordinator.swap_log)
+        self.stats.swap_log = (list(self._swap_log_prefix)
+                               + list(self.coordinator.swap_log))
+        # recount from the authoritative log: a swap can commit inside the
+        # coordinator while the primary died before broadcasting (the
+        # standby finishes the install) — the incremental counters only
+        # see barriers the DRIVER completed
+        self.stats.swaps_committed = sum(
+            1 for r in self.stats.swap_log if r.committed)
+        self.stats.swaps_aborted = sum(
+            1 for r in self.stats.swap_log if not r.committed)
         self.stats.wall_ms = (time.perf_counter() - t_start) * 1e3
-        if self.transport == "thread":
+        if self.transport in ("thread", "process"):
             for h in self.hosts:
                 h.stop()
         return self.stats
+
+    def _heal_straggler(self, missing: List[int]) -> None:
+        """The injected straggler misses exactly one barrier; once that
+        barrier resolved (committed without it, or aborted), its link
+        heals and the next round's rejoin path re-syncs it."""
+        if self._straggler_pending is not None \
+                and self._straggler_pending in missing:
+            self._silent.discard(self._straggler_pending)
+            self._straggler_pending = None
 
     def run_streams(self, streams: Sequence[np.ndarray], *,
                     chunk: int = 2048,

@@ -380,6 +380,15 @@ def cascade_scorer_for_plan(plan, *, max_tile: int = 8192):
 # truth; the training-side parameterization never travels).
 WIRE_MAGIC = b"COREWIRE"
 WIRE_VERSION = 1
+# v1.1: the two pad bytes after the version become a MINOR field.  Minor 0
+# is the v1 scorer artifact (bytes unchanged — round-trips stay bit-exact);
+# minor 1 is a control FRAME wrapping a kind-tagged payload (re-sync
+# catch-up installs, replicated coordinator state deltas).  v1 readers
+# never see frames (they ride the control channel, not the artifact
+# broadcast), and v1.1 readers still parse v1 artifacts byte-for-byte.
+WIRE_MINOR_FRAME = 1
+FRAME_RESYNC = "resync"  # payload: a v1 scorer artifact for a fenced host
+FRAME_DELTA = "delta"  # payload: JSON-encoded consensus StateDelta
 
 
 class WireFormatError(ValueError):
@@ -490,6 +499,60 @@ def serialize_scorer(plan, scorer=None, *, max_tile: int = 8192) -> bytes:
     return bytes(out)
 
 
+def serialize_frame(kind: str, epoch: int, payload: bytes,
+                    meta: dict | None = None) -> bytes:
+    """Wrap a control payload in a COREWIRE v1.1 frame:
+
+      b"COREWIRE" | u16 major=1 | u16 minor=1 | u64 header_len
+      | header JSON {"kind", "epoch", "meta", "payload_len"} | payload
+
+    Frames carry the fault-tolerance control plane — re-sync catch-up
+    artifacts for fenced hosts (``FRAME_RESYNC``, payload = a v1 scorer
+    artifact) and replicated coordinator state deltas (``FRAME_DELTA``)
+    — over the same wire family as the artifact broadcast.  Minor-version
+    discrimination keeps it backward-compatible: a v1 scorer blob's bytes
+    are untouched, and ``deserialize_scorer`` rejects frames explicitly
+    instead of misparsing them."""
+    import json
+
+    hdr = json.dumps(
+        {"kind": str(kind), "epoch": int(epoch), "meta": meta or {},
+         "payload_len": len(payload)},
+        sort_keys=True, separators=(",", ":")).encode("utf-8")
+    out = bytearray()
+    out += WIRE_MAGIC
+    out += int(WIRE_VERSION).to_bytes(2, "little")
+    out += int(WIRE_MINOR_FRAME).to_bytes(2, "little")
+    out += len(hdr).to_bytes(8, "little")
+    out += hdr
+    out += payload
+    return bytes(out)
+
+
+def deserialize_frame(blob: bytes):
+    """Inverse of ``serialize_frame``: returns (kind, epoch, payload,
+    meta).  Raises ``WireFormatError`` on v1 artifacts (minor 0) so the
+    two channels cannot be confused."""
+    import json
+
+    if blob[:len(WIRE_MAGIC)] != WIRE_MAGIC:
+        raise WireFormatError("bad magic: not a COREWIRE frame")
+    ver = int.from_bytes(blob[8:10], "little")
+    minor = int.from_bytes(blob[10:12], "little")
+    if ver != WIRE_VERSION or minor != WIRE_MINOR_FRAME:
+        raise WireFormatError(
+            f"wire {ver}.{minor} is not a v{WIRE_VERSION}.{WIRE_MINOR_FRAME} "
+            f"control frame")
+    hdr_len = int.from_bytes(blob[12:20], "little")
+    header = json.loads(blob[20:20 + hdr_len].decode("utf-8"))
+    payload = bytes(blob[20 + hdr_len:])
+    if len(payload) != int(header["payload_len"]):
+        raise WireFormatError(
+            f"frame payload truncated: {len(payload)} != "
+            f"{header['payload_len']}")
+    return header["kind"], int(header["epoch"]), payload, header["meta"]
+
+
 def deserialize_scorer(blob: bytes, query):
     """Inverse of ``serialize_scorer``: rebuild ``(plan, scorer)`` against
     the locally-bound ``query``.  The scorer's packed tensors, thresholds,
@@ -507,6 +570,11 @@ def deserialize_scorer(blob: bytes, query):
     ver = int.from_bytes(blob[8:10], "little")
     if ver != WIRE_VERSION:
         raise WireFormatError(f"wire version {ver} != supported {WIRE_VERSION}")
+    minor = int.from_bytes(blob[10:12], "little")
+    if minor != 0:
+        raise WireFormatError(
+            f"wire minor {minor} is a control frame, not a scorer artifact "
+            f"(use deserialize_frame)")
     hdr_len = int.from_bytes(blob[12:20], "little")
     header = json.loads(blob[20:20 + hdr_len].decode("utf-8"))
     payload = memoryview(blob)[20 + hdr_len:]

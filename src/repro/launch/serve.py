@@ -48,6 +48,21 @@ def main():
                          "quorum-voted plan swaps (K > 1 implies adaptive)")
     ap.add_argument("--drift-skew", type=float, default=0.3,
                     help="per-shard drift magnitude skew (multi-host only)")
+    ap.add_argument("--transport", default="inline",
+                    choices=["inline", "thread", "process"],
+                    help="multi-host transport: same-thread objects, one "
+                         "worker thread per host, or one OS subprocess per "
+                         "host (COREWIRE + newline-JSON control pipes)")
+    ap.add_argument("--kill-coordinator-at", default=None,
+                    help="failure injection: kill the primary coordinator "
+                         "at 'prepare' | 'commit' | 'mid-commit' (phases "
+                         "of an in-flight swap) or an integer submitted-"
+                         "record count; the standby takes over on "
+                         "heartbeat loss (DESIGN.md §6 failure model)")
+    ap.add_argument("--straggler-host", type=int, default=None,
+                    help="failure injection: this host misses the first "
+                         "prepare barrier; the fleet commits without it "
+                         "(serve-behind fencing) and re-syncs it on rejoin")
     args = ap.parse_args()
 
     ds = make_dataset(n=args.n, correlation=args.correlation, seed=args.seed)
@@ -154,8 +169,26 @@ def _serve_sharded(args, ds, q, plan):
     policy = AdaptivePolicy(audit_rate=0.03, threshold=50.0,
                             min_reservoir=128, cooldown_records=1024,
                             reservoir_capacity=512)
+    kill_at = args.kill_coordinator_at
+    if kill_at is not None and kill_at not in ("prepare", "commit",
+                                               "mid-commit"):
+        kill_at = int(kill_at)
+    worker_spec = None
+    if args.transport == "process":
+        worker_spec = {
+            "dataset": dict(n=args.n, correlation=args.correlation,
+                            seed=args.seed),
+            "udfs": dict(hidden=64, depth=2, train_rows=3000,
+                         seed=args.seed, declared_cost_ms=args.udf_cost_ms),
+            "query": dict(columns=list(range(args.preds)),
+                          target_selectivity=0.5,
+                          accuracy_target=args.accuracy, seed=args.seed + 1),
+        }
     srv = ShardedCascadeServer(plan, K, tile=args.tile, seed=args.seed,
-                               policy=policy)
+                               policy=policy, transport=args.transport,
+                               kill_coordinator_at=kill_at,
+                               straggler_host=args.straggler_host,
+                               worker_spec=worker_spec)
     stats = srv.run_streams(xs)
     x_all = np.concatenate(xs)
     orig_res = execute_plan(orig_plan(q), x_all)
@@ -171,10 +204,17 @@ def _serve_sharded(args, ds, q, plan):
           f"(+{stats.swaps_aborted} aborted), final epoch "
           f"{stats.final_epoch}, protocol overhead "
           f"{stats.consensus_ms_total:.1f} ms total")
+    if stats.failovers or stats.fences or stats.resyncs or stats.pooled_swaps:
+        print(f"fault tolerance: {stats.failovers} failover(s) "
+              f"({stats.failover_resolution or 'n/a'}), {stats.fences} "
+              f"fence(s), {stats.resyncs} re-sync(s), "
+              f"{stats.pooled_swaps} pooled-kappa² swap(s)")
     for r in stats.swap_log:
-        print(f"  epoch {r.epoch}: voters {r.voters} [{', '.join(r.signals)}] "
-              f"-> {r.mode} on {r.merged_rows} merged reservoir rows "
-              f"(reopt {r.reopt_ms:.0f} ms, consensus {r.consensus_ms:.1f} ms)")
+        extra = f", fenced {r.fenced}" if r.fenced else ""
+        print(f"  epoch {r.epoch} [{r.initiated_by}]: voters {r.voters} "
+              f"[{', '.join(r.signals)}] -> {r.mode} on {r.merged_rows} "
+              f"merged reservoir rows (reopt {r.reopt_ms:.0f} ms, "
+              f"consensus {r.consensus_ms:.1f} ms{extra})")
     cp = stats.critical_path_cost_ms
     print(f"cost model: critical path {cp / max(stats.submitted, 1):.3f} "
           f"ms/rec aggregate ({stats.aggregate_rows_per_cost_s:.0f} rows/s; "

@@ -278,6 +278,14 @@ class CascadeServer:
         weights) for coordinator-side merging."""
         return self._reservoir.export()
 
+    def kappa_export(self):
+        """Cumulative weighted IPW contingency counts per predicate pair
+        (reset at every plan install) — the fleet coordinator sums these
+        across hosts into pooled ``StreamingKappa2`` tables, so
+        correlation evidence too weak for any single shard's guard still
+        escalates at the fleet level (DESIGN.md §6)."""
+        return {pair: k.export() for pair, k in self._kappa.items()}
+
     def in_flight(self) -> int:
         """Records sitting in ANY plan version's stage queues — zero after
         a full drain, or something was lost in the pipe (the falsifiable

@@ -39,6 +39,14 @@ class AdaptivePolicy:
     min_reservoir: int = 256  # don't re-optimize on fewer sampled rows
     cooldown_records: int = 2048  # records between consecutive swaps
     kappa_tol: float = 0.08  # |kappa^2 shift| that escalates alloc -> B&B resume
+    # pooled labels (fleet-wide, IPW-weighted) that freeze the coordinator's
+    # cross-host kappa^2 baseline — reached ~K× sooner than any single
+    # host's local audit_baseline, which is what makes evenly-split
+    # correlation drifts visible at the fleet level (DESIGN.md §6).
+    # 0 (default) disables coordinator-initiated pooled swaps: pooling
+    # changes WHO may open a swap (the coordinator, without any vote
+    # quorum), so fleets opt in explicitly; ~120 is a typical setting
+    kappa_pool_baseline: int = 0
     regret_tol: float = 0.1  # relative cost-model regret that escalates alloc -> B&B
     step: float = 0.05  # Algorithm-1 grid for re-optimization
     escalate: str = "auto"  # "auto" (cost-model regret) | "alloc" | "bnb"

@@ -493,6 +493,7 @@ SUBPROC = textwrap.dedent(
 
 
 @pytest.mark.slow
+@pytest.mark.flaky  # cold-interpreter subprocess under a wall-clock timeout
 def test_sharded_serving_subprocess():
     """Whole-fleet run inside an isolated OS process (the
     test_distribution harness pattern): the sharded server, quorum swap,
