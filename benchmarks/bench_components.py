@@ -166,6 +166,7 @@ def bench_mlp_throughput(*, n_rows: int = 49_152, n_features: int = 64,
 def write_bench_json(throughput: dict, adaptive: dict | None = None,
                      mlp: dict | None = None, sharded: dict | None = None,
                      fault_tolerance: dict | None = None,
+                     quant: dict | None = None,
                      path: Path = BENCH_JSON) -> None:
     payload = {
         "bench": "components",
@@ -180,6 +181,8 @@ def write_bench_json(throughput: dict, adaptive: dict | None = None,
         payload["sharded_serving"] = sharded
     if fault_tolerance is not None:
         payload["fault_tolerance"] = fault_tolerance
+    if quant is not None:
+        payload["quantized_cascade"] = quant
     path.write_text(json.dumps(payload, indent=2) + "\n")
 
 

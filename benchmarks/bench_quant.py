@@ -1,0 +1,183 @@
+"""Quantized-cascade benchmark: the numbers behind the quant gates.
+
+Measures, for one mixed MLP cascade plan:
+
+  * ``quant_fused_speedup`` — the bandwidth-bound speedup of the int8
+    packed cascade over the fp32 one at a serving chunk, computed from
+    the EXACT operand bytes the fused kernel streams per launch (the
+    bucket-padded x tile, the lane-padded packed weights at storage
+    width, the keep-mask output).  Modeled, not wall-clock: in this
+    container Pallas runs in interpret mode, where timing measures the
+    Python interpreter, so the byte ratio — which IS what bounds the
+    kernel at serving batch sizes on real hardware — is the
+    host-independent gate, and wall-clock rides along as an advisory.
+  * the quant-parity gate — decision flips only within the calibrated
+    threshold tolerance, bounded selectivity deltas
+    (``kernels.ops.quant_parity_report``).
+  * end-to-end cascade accuracy delta fp32 vs quantized through
+    ``execute_plan`` (same plan, meta-stamped dtype).
+  * the autotune sweep — tuned (block_m, dtype) beats the old static
+    heuristic on >= 2 of 3 workload shapes, and repeat lookups hit the
+    config cache instead of re-sweeping.
+
+Run directly for a human-readable report:
+
+    PYTHONPATH=src python benchmarks/bench_quant.py
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+
+import numpy as np
+
+SWEEP_JSON = Path(__file__).resolve().parent.parent / "results" / \
+    "autotune_sweep.json"
+
+
+def _ceil128(n: int) -> int:
+    return -(-int(n) // 128) * 128
+
+
+def serving_bytes(scorer, n_rows: int) -> int:
+    """Exact bytes the masks-only serving path streams for one launch:
+    bucket-padded x tile + keep-mask output + the lane-padded packed
+    weights at their storage width + the f32 bias/threshold/scale rows."""
+    from repro.core.proxy_family import QUANT_WEIGHT_BYTES
+
+    hpp = _ceil128(int(scorer.w1.shape[1]))
+    pp = _ceil128(scorer.n_proxies)
+    wb = QUANT_WEIGHT_BYTES[scorer.dtype]
+    npad = scorer._bucket(n_rows)
+    return (npad * scorer.n_features * 4      # x tile (f32)
+            + npad * pp                        # keep-mask output (bool)
+            + scorer.n_features * hpp * wb     # w1 stacked hidden weights
+            + hpp * 4                          # b1 (f32, scale-folded)
+            + hpp * pp * wb                    # w2 block-diagonal readout
+            + 3 * pp * 4)                      # b2 + thresholds + out_scale
+
+
+def _wall_ms(scorer, x, repeats: int = 5) -> float:
+    scorer.score_masks(x)  # warm the jit cache
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        scorer.score_masks(x)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+def bench_quant(dtype: str = "int8", chunk: int = 256,
+                n_rows: int = 12_000) -> dict:
+    from repro.core import execute_plan, optimize, orig_plan
+    from repro.data.synthetic import make_dataset, make_query, make_udfs
+    from repro.kernels import autotune
+    from repro.kernels.ops import CascadeScorer, quant_parity_report
+
+    ds = make_dataset(n=n_rows, n_columns=6, correlation=0.85, seed=7)
+    udfs = make_udfs(ds, hidden=32, depth=1, train_rows=2_000, seed=7,
+                     declared_cost_ms=5.0)
+    q = make_query(ds, udfs, columns=[0, 1, 2, 3, 4, 5],
+                   target_selectivity=0.5, seed=8)
+    sample = ds.x[:2_000]
+    plan_f = optimize(q, sample, mode="core-a", kind="mlp")
+    plan_q = dataclasses.replace(
+        plan_f, meta={**plan_f.meta, "quant_dtype": dtype})
+
+    # same tiling for both sides: the gate compares storage width, not
+    # block choice (autotune would pick the same block here anyway)
+    scorer_f = CascadeScorer.from_plan(plan_f, max_tile=1024,
+                                       n_rows_hint=chunk)
+    scorer_q = CascadeScorer.from_plan(plan_q, max_tile=1024,
+                                       n_rows_hint=chunk)
+    assert scorer_f.dtype == "float32" and scorer_q.dtype == dtype
+    bytes_f = serving_bytes(scorer_f, chunk)
+    bytes_q = serving_bytes(scorer_q, chunk)
+    speedup = bytes_f / bytes_q
+
+    eval_x = ds.x[2_000:]
+    parity = quant_parity_report(plan_f, eval_x, dtype=dtype)
+
+    # end-to-end: same records through the full cascade (proxy gates +
+    # UDF escalation), fp32 vs quantized scorer, accuracy vs exact ORIG
+    truth = set(execute_plan(orig_plan(q), eval_x).passed.tolist())
+    res_f = execute_plan(plan_f, eval_x)
+    res_q = execute_plan(plan_q, eval_x)
+    acc_f = sum(1 for i in res_f.passed.tolist() if i in truth) / max(
+        len(truth), 1)
+    acc_q = sum(1 for i in res_q.passed.tolist() if i in truth) / max(
+        len(truth), 1)
+
+    wall_f = _wall_ms(scorer_f, eval_x[:chunk])
+    wall_q = _wall_ms(scorer_q, eval_x[:chunk])
+
+    # autotune: sweep the three gate shapes, then prove repeat lookups
+    # are cache hits (serving re-installs must skip the sweep)
+    from benchmarks.roofline import SWEEP_SHAPES
+
+    autotune.clear_autotune_cache()
+    autotune.reset_autotune_stats()
+    rows = autotune.sweep_table(SWEEP_SHAPES, dtypes=("float32", dtype))
+    wins = {}
+    for r in rows:
+        wins.setdefault(r["shape"], False)
+        wins[r["shape"]] |= bool(r["beats_static"])
+    before = autotune.autotune_stats()
+    rerun = autotune.sweep_table(SWEEP_SHAPES, dtypes=("float32", dtype))
+    after = autotune.autotune_stats()
+    cache_hit = (after["sweeps"] == before["sweeps"]
+                 and after["hits"] >= len(rerun))
+
+    mbu_rows = [r for r in rows
+                if r["dtype"] == dtype and r["n_rows"] == chunk]
+    return {
+        "dtype": dtype,
+        "chunk": chunk,
+        "n_stages": len(plan_f.stages),
+        "hp": int(scorer_f.w1.shape[1]),
+        "bytes_fp32": int(bytes_f),
+        "bytes_quant": int(bytes_q),
+        "quant_fused_speedup": float(speedup),
+        "wall_ms_fp32": wall_f,
+        "wall_ms_quant": wall_q,
+        "parity": parity,
+        "accuracy_fp32": float(acc_f),
+        "accuracy_quant": float(acc_q),
+        "accuracy_delta": float(abs(acc_f - acc_q)),
+        "autotune_wins": int(sum(wins.values())),
+        "autotune_shapes": len(wins),
+        "autotune_cache_hit": bool(cache_hit),
+        "autotune_mbu": float(np.mean([r["mbu"] for r in mbu_rows])
+                              if mbu_rows else 0.0),
+        "sweep_rows": rows,
+    }
+
+
+def main():
+    out = bench_quant()
+    p = out["parity"]
+    print(f"plan: {out['n_stages']} MLP stages, HP={out['hp']}, "
+          f"chunk={out['chunk']}")
+    print(f"quant_fused_speedup ({out['dtype']}): "
+          f"{out['quant_fused_speedup']:.2f}x  "
+          f"({out['bytes_fp32'] / 1024:.0f} KB -> "
+          f"{out['bytes_quant'] / 1024:.0f} KB per launch)")
+    print(f"wall-clock advisory: fp32 {out['wall_ms_fp32']:.2f} ms, "
+          f"{out['dtype']} {out['wall_ms_quant']:.2f} ms (interpret mode)")
+    print(f"parity: tol={p['tol']:.4f} flips={p['n_flips']}/{p['n_eval']} "
+          f"within_tol={p['flips_within_tol']} "
+          f"max_sel_delta={p['max_sel_delta']:.4f}")
+    print(f"end-to-end accuracy: fp32 {out['accuracy_fp32']:.4f} vs "
+          f"{out['dtype']} {out['accuracy_quant']:.4f} "
+          f"(delta {out['accuracy_delta']:.4f})")
+    print(f"autotune: beats static on {out['autotune_wins']}/"
+          f"{out['autotune_shapes']} shapes, cache_hit="
+          f"{out['autotune_cache_hit']}, MBU={out['autotune_mbu']:.3f}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    main()

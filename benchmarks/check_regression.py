@@ -1,14 +1,18 @@
 """CI regression gate for the fused proxy-scoring hot path, the adaptive
-serving loop, K=4 sharded serving, and the fault-tolerance scenarios.
+serving loop, K=4 sharded serving, the fault-tolerance scenarios, and
+the quantized packed cascade.
 
 Runs the components benchmark's proxy-throughput measurement, the
 drifting-stream adaptive-serving benchmark, the K=4 quorum-swap fleet
-benchmark, and the three fault-tolerance scenarios (coordinator failover
-mid-epoch, straggler fencing, pooled-kappa² escalation), writes
-``BENCH_components.json`` at the repo root, prints a unified
-**before/after delta table** for every gated metric (baseline recorded
-value vs this run, floor, margin, status), and exits nonzero when any
-ENFORCED gate regresses against the checked-in baseline
+benchmark, the three fault-tolerance scenarios (coordinator failover
+mid-epoch, straggler fencing, pooled-kappa² escalation), and the
+quantized-cascade benchmark (int8 bytes-moved speedup, decision-flip
+parity, autotune sweep), writes ``BENCH_components.json`` at the repo
+root plus the autotune sweep table under ``results/autotune_sweep.json``
+(the nightly CI artifact), prints a unified **before/after delta table**
+for every gated metric (baseline recorded value vs this run, floor,
+margin, status), and exits nonzero when any ENFORCED gate regresses
+against the checked-in baseline
 (``benchmarks/baseline_components.json``).
 
 Gate classes:
@@ -29,7 +33,8 @@ are reported but do not fail the process.
 
 Env overrides: REGRESSION_MIN_ROWS_PER_S, REGRESSION_MIN_SPEEDUP,
 REGRESSION_MIN_MLP_SPEEDUP, REGRESSION_MIN_ADAPTIVE_SPEEDUP,
-REGRESSION_MIN_SHARDED_SPEEDUP, REGRESSION_MAX_CONSENSUS_MS.
+REGRESSION_MIN_SHARDED_SPEEDUP, REGRESSION_MAX_CONSENSUS_MS,
+REGRESSION_MIN_QUANT_SPEEDUP.
 """
 from __future__ import annotations
 
@@ -49,6 +54,7 @@ from benchmarks.bench_components import (  # noqa: E402
     bench_proxy_throughput,
     write_bench_json,
 )
+from benchmarks.bench_quant import SWEEP_JSON, bench_quant  # noqa: E402
 from benchmarks.bench_sharded import (  # noqa: E402
     bench_fault_tolerance,
     bench_sharded_throughput,
@@ -141,8 +147,17 @@ def main(argv=None) -> int:
         n_after=4_000 if quick else 6_000)
     # fixed-seed fixed-size scenarios: deterministic in --quick and full
     ft = bench_fault_tolerance()
-    write_bench_json(throughput, adaptive, mlp, sharded, fault_tolerance=ft)
+    quant = bench_quant()
+    write_bench_json(throughput, adaptive, mlp, sharded, fault_tolerance=ft,
+                     quant={k: v for k, v in quant.items()
+                            if k != "sweep_rows"})
     print(f"wrote {BENCH_JSON}")
+    SWEEP_JSON.parent.mkdir(parents=True, exist_ok=True)
+    SWEEP_JSON.write_text(json.dumps(
+        {"rows": quant["sweep_rows"],
+         "wins": quant["autotune_wins"],
+         "shapes": quant["autotune_shapes"]}, indent=1) + "\n")
+    print(f"wrote {SWEEP_JSON}")
 
     base = json.loads(BASELINE.read_text())
     rows_env = os.environ.get("REGRESSION_MIN_ROWS_PER_S")
@@ -158,6 +173,9 @@ def main(argv=None) -> int:
     consensus_env = os.environ.get("REGRESSION_MAX_CONSENSUS_MS")
     max_consensus = (float(consensus_env) if consensus_env
                      else float(base["advisory_max_consensus_ms"]))
+    min_quant = float(os.environ.get(
+        "REGRESSION_MIN_QUANT_SPEEDUP", base["min_quant_speedup"]))
+    max_quant_acc_delta = float(base["max_quant_accuracy_delta"])
 
     worst_consensus = max(sharded["consensus_ms_per_swap"] or [0.0])
     fo, strag, pooled = (ft["failover"], ft["straggler"], ft["pooled_kappa"])
@@ -235,6 +253,29 @@ def main(argv=None) -> int:
              fmt="{:.0f}"),
         Gate("pooled_conserved", float(pooled["conserved"]), 1.0, 1.0,
              fmt="{:.0f}"),
+        # ----- quantized packed cascade (bytes-moved model; see
+        # ----- bench_quant.py for why the speedup gate is modeled) -----
+        Gate("quant_fused_speedup", quant["quant_fused_speedup"], min_quant,
+             base.get("recorded_quant_speedup"),
+             record_key="recorded_quant_speedup"),
+        Gate("quant_parity_within_tol",
+             float(quant["parity"]["flips_within_tol"]), 1.0, 1.0,
+             fmt="{:.0f}"),
+        Gate("quant_accuracy_delta", quant["accuracy_delta"],
+             max_quant_acc_delta, base.get("recorded_quant_accuracy_delta"),
+             higher_is_better=False, fmt="{:.4f}",
+             record_key="recorded_quant_accuracy_delta"),
+        Gate("quant_sel_delta", quant["parity"]["max_sel_delta"], None,
+             None, fmt="{:.4f}"),
+        Gate("quant_bytes_per_launch_kb",
+             quant["bytes_quant"] / 1024.0, None, None, fmt="{:.0f}"),
+        Gate("quant_mbu_advisory", quant["autotune_mbu"], None, None,
+             fmt="{:.3f}"),
+        Gate("autotune_beats_static_shapes", float(quant["autotune_wins"]),
+             2.0, base.get("recorded_autotune_wins"), fmt="{:.0f}",
+             record_key="recorded_autotune_wins"),
+        Gate("autotune_cache_hit", float(quant["autotune_cache_hit"]),
+             1.0, 1.0, fmt="{:.0f}"),
     ]
 
     _print_delta_table(gates)
@@ -270,7 +311,10 @@ def main(argv=None) -> int:
         f"straggler fenced+resynced ({strag['fences']}/"
         f"{strag['straggler_resynced']}); pooled kappa² "
         f"{pooled['pooled_swaps']} bnb swap(s) on {pooled['votes_cast']} "
-        f"votes"
+        f"votes; quant {quant['quant_fused_speedup']:.2f}x bytes-moved, "
+        f"parity {'OK' if quant['parity']['flips_within_tol'] else 'FAIL'}, "
+        f"autotune {quant['autotune_wins']}/{quant['autotune_shapes']} "
+        f"shapes"
     )
     return 0
 

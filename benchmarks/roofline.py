@@ -1,31 +1,110 @@
-"""Roofline table: reads the dry-run JSON cache and prints the per-cell
-compute/memory/collective terms, dominant bottleneck, and MODEL_FLOPS
-ratios (assignment deliverable g)."""
+"""Roofline sweep for the fused cascade scorer (default mode), plus the
+legacy model-zoo dry-run table behind ``--zoo``.
+
+Default mode drives ``repro.kernels.autotune.sweep_table`` over three
+workload shapes x weight dtypes x serving-chunk sizes and prints, per
+cell: the tuner's winning ``block_m`` vs the old static heuristic's
+pick, exact modeled bytes moved, roofline time, and model bandwidth
+utilization (MBU).  ``--json PATH`` additionally writes the full table
+(the nightly CI artifact).  ``--measure`` appends an advisory wall-clock
+column by timing ``score_masks`` on synthetic proxies — advisory because
+in interpret mode (this container) it times Python, not the memory
+system.
+
+    PYTHONPATH=src python benchmarks/roofline.py
+    PYTHONPATH=src python benchmarks/roofline.py --json results/autotune_sweep.json
+    PYTHONPATH=src python benchmarks/roofline.py --zoo   # legacy table
+"""
 from __future__ import annotations
 
+import argparse
 import json
 from pathlib import Path
 
 RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
 
+# the three gate shapes: (name, F, HP=stacked hidden, P=stages) spanning
+# a small linear cascade, a mid mixed cascade, and a wide/deep one
+SWEEP_SHAPES = (
+    ("small-linear", 64, 128, 2),
+    ("mid-mixed", 64, 512, 4),
+    ("wide-mlp", 256, 2048, 16),
+)
+SWEEP_DTYPES = ("float32", "int8", "fp8")
+SWEEP_HINTS = (256, 1024, 8192)
 
-def load_cells(mesh_tag: str = "pod16x16"):
-    out = []
+
+def cascade_sweep(measure: bool = False):
+    """Run the autotune sweep; returns (rows, wins_by_shape)."""
+    from repro.kernels import autotune
+
+    rows = autotune.sweep_table(SWEEP_SHAPES, dtypes=SWEEP_DTYPES,
+                                n_rows_hints=SWEEP_HINTS)
+    if measure:
+        from repro.kernels.ops import CascadeScorer
+        from repro.training.proxy_models import MLPParams
+        import numpy as np
+
+        rng = np.random.RandomState(0)
+        for r in rows:
+            h = max(r["HP"] // r["P"], 2)
+            params = [MLPParams(
+                w1=rng.randn(r["F"], h).astype(np.float32),
+                b1=rng.randn(h).astype(np.float32),
+                w2=rng.randn(h).astype(np.float32), b2=np.float32(0),
+                mean=np.zeros(r["F"], np.float32),
+                scale=np.ones(r["F"], np.float32),
+            ) for _ in range(r["P"])]
+            scorer = CascadeScorer(params, [0.0] * r["P"],
+                                   block_m=r["block_m"],
+                                   max_tile=max(r["n_rows"], 256),
+                                   dtype=r["dtype"])
+            r["wall_s"] = autotune.measure_cell(scorer, r["n_rows"])
+    wins = {}
+    for r in rows:
+        wins.setdefault(r["shape"], False)
+        wins[r["shape"]] |= bool(r["beats_static"])
+    return rows, wins
+
+
+def print_sweep(rows, wins):
+    print("# Cascade scorer autotune sweep: modeled roofline per "
+          "(shape, dtype, chunk)")
+    print("# t_model from exact operand bytes; block_m* marks cells where "
+          "the tuner beats the old static heuristic")
+    hdr = (f"{'shape':<14}{'dtype':<9}{'chunk':>6}{'block_m':>9}"
+           f"{'static':>8}{'t_model':>10}{'t_static':>10}{'KB moved':>10}"
+           f"{'MBU':>7}")
+    if rows and "wall_s" in rows[0]:
+        hdr += f"{'wall_ms':>9}"
+    print(hdr)
+    for r in rows:
+        star = "*" if r["beats_static"] else " "
+        line = (f"{r['shape']:<14}{r['dtype']:<9}{r['n_rows']:>6}"
+                f"{r['block_m']:>8}{star}{r['static_block_m']:>8}"
+                f"{r['t_model_us']:>8.1f}us{r['t_static_us']:>8.1f}us"
+                f"{r['bytes_moved'] / 1024:>10.0f}{r['mbu']:>7.2f}")
+        if "wall_s" in r:
+            line += f"{r['wall_s'] * 1e3:>9.2f}"
+        print(line)
+    n_win = sum(wins.values())
+    print(f"# autotune beats static on {n_win}/{len(wins)} shapes "
+          f"({', '.join(s for s, w in wins.items() if w)})")
+
+
+def zoo_table(mesh_tag: str = "pod16x16"):
+    """Legacy model-zoo roofline table from the dry-run JSON cache."""
+    cells = []
     d = RESULTS / mesh_tag
-    if not d.exists():
-        return out
-    for f in sorted(d.glob("*.json")):
-        out.append(json.loads(f.read_text()))
-    return out
-
-
-def run(quick: bool = True, mesh_tag: str = "pod16x16"):
-    cells = load_cells(mesh_tag)
+    if d.exists():
+        for f in sorted(d.glob("*.json")):
+            cells.append(json.loads(f.read_text()))
     if not cells:
-        print(f"# no dry-run results under {RESULTS/mesh_tag}; run "
+        print(f"# no dry-run results under {RESULTS / mesh_tag}; run "
               "`python -m repro.launch.dryrun --all` first")
         return
-    print(f"# Roofline ({mesh_tag}): terms in seconds per step, per-device program")
+    print(f"# Roofline ({mesh_tag}): terms in seconds per step, "
+          f"per-device program")
     print("cell,us_per_call,derived")
     for c in cells:
         name = f"roofline_{c['arch']}__{c['shape']}"
@@ -44,5 +123,30 @@ def run(quick: bool = True, mesh_tag: str = "pod16x16"):
         )
 
 
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--zoo", action="store_true",
+                    help="legacy model-zoo dry-run table instead of the "
+                         "cascade scorer sweep")
+    ap.add_argument("--mesh-tag", default="pod16x16")
+    ap.add_argument("--measure", action="store_true",
+                    help="append advisory wall-clock per cell (meaningful "
+                         "on compiled backends only)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the sweep table as JSON (CI artifact)")
+    args = ap.parse_args()
+    if args.zoo:
+        zoo_table(args.mesh_tag)
+        return
+    rows, wins = cascade_sweep(measure=args.measure)
+    print_sweep(rows, wins)
+    if args.json:
+        out = Path(args.json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(
+            {"rows": rows, "wins_by_shape": wins}, indent=1))
+        print(f"# wrote {out}")
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -59,10 +59,15 @@ def optimize(
     seed: int = 0,
     builder: Optional[ProxyBuilder] = None,
     keep_state: bool = False,
+    quant_dtype: Optional[str] = None,
 ) -> PhysicalPlan:
     """``keep_state=True`` attaches the live builder (and B&B tree for
     mode="core") to ``plan.meta`` so a later ``reoptimize`` can warm-start
-    instead of cold-searching — the adaptive serving loop's path."""
+    instead of cold-searching — the adaptive serving loop's path.
+
+    ``quant_dtype`` ("int8" | "fp8") stamps ``plan.meta["quant_dtype"]``:
+    every scorer compiled for the plan (executor, serving install, wire
+    artifact) then packs its cascade weights at that storage dtype."""
     t_start = time.perf_counter()
     A = query.accuracy_target
     builder = builder or ProxyBuilder(query, x_sample, kind=kind, eps=eps, seed=seed)
@@ -90,6 +95,12 @@ def optimize(
         "wall_ms": (time.perf_counter() - t_start) * 1e3,
         "plan_version": 0,
     }
+    if quant_dtype is not None and quant_dtype != "float32":
+        from repro.core.proxy_family import QUANT_DTYPES
+
+        if quant_dtype not in QUANT_DTYPES:
+            raise ValueError(f"unknown quant_dtype {quant_dtype!r}")
+        meta["quant_dtype"] = quant_dtype
     if trace is not None:
         meta["trace"] = _trace_dict(trace)
     if keep_state:
@@ -174,6 +185,12 @@ def reoptimize(
         "plan_version": int(plan.meta.get("plan_version", 0)) + 1,
         "warm_start": warm,
     }
+    # a quantized incumbent stays quantized across adaptive re-plans: the
+    # coordinator's reoptimize -> serialize -> quorum-swap path must ship
+    # the same storage dtype it was serving, or a hot-swap would silently
+    # de-quantize the fleet
+    if plan.meta.get("quant_dtype"):
+        meta["quant_dtype"] = plan.meta["quant_dtype"]
     if trace is not None:
         meta["trace"] = _trace_dict(trace)
     if keep_state:

@@ -26,7 +26,7 @@ is property-tested round-trip in ``tests/test_proxy_family.py``.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, List, NamedTuple, Sequence, Tuple, Type
+from typing import Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple, Type
 
 import jax
 import numpy as np
@@ -154,14 +154,29 @@ class PackedCascade(NamedTuple):
     ``h >= hidden[p]`` are zero-padded (``relu(0 + 0) = 0`` and a zero
     readout weight keeps them inert).  ``H`` is the shared hidden bucket:
     ``hidden_bucket(max(hidden))``.
+
+    ``dtype`` names the WEIGHT storage format (DESIGN.md §3, quantized
+    packed format).  ``"float32"`` is the seed format: ``w1``/``w2`` are
+    fp32 and ``out_scale`` is None.  Under ``"int8"`` (weight-only
+    symmetric quantization, ``quantize_cascade``) ``w1``/``w2`` hold
+    integer codes and the per-column hidden scales are FOLDED away at
+    quantization time — ``b1`` is pre-divided by the hidden scale and the
+    hidden scale is pre-multiplied into the readout before ITS
+    quantization — so execution needs exactly one dequantizing multiply:
+    ``scores = (relu(x @ w1 + b1) @ w2) * out_scale + b2`` with
+    ``out_scale`` the (P,) per-stage readout scales.  ``"fp8"`` is the
+    simulated-e4m3 variant (values rounded to the fp8 grid, stored fp32 —
+    accuracy studies on hardware without native fp8).
     """
 
-    w1: np.ndarray  # (F, H, P) float32
-    b1: np.ndarray  # (H, P) float32
-    w2: np.ndarray  # (H, P) float32 readout
+    w1: np.ndarray  # (F, H, P) float32 | int8 codes
+    b1: np.ndarray  # (H, P) float32 (scale-folded when quantized)
+    w2: np.ndarray  # (H, P) float32 | int8 readout codes
     b2: np.ndarray  # (P,) float32
     hidden: Tuple[int, ...]  # true per-stage hidden widths
     families: Tuple[str, ...]  # per-stage family names
+    dtype: str = "float32"  # weight storage format
+    out_scale: Optional[np.ndarray] = None  # (P,) f32 readout scales (quantized only)
 
     @property
     def n_features(self) -> int:
@@ -211,15 +226,99 @@ def pack_cascade(param_list: Sequence[object], *,
 
 
 def unpack_cascade(packed: PackedCascade, col: int) -> PackedProxy:
-    """Exact inverse of ``pack_cascade`` for one stage: strips the hidden
-    bucket padding and returns the stage's folded PackedProxy."""
+    """Inverse of ``pack_cascade`` for one stage: strips the hidden bucket
+    padding and returns the stage's folded PackedProxy.  Exact (bit-for-bit)
+    for fp32 cascades.  For a QUANTIZED cascade the returned proxy is the
+    fp32 depth-1 MLP that computes the identical quantized function —
+    integer codes as hidden weights, scale-folded bias, and the per-stage
+    ``out_scale`` multiplied back into the readout — so reference scoring,
+    regret estimation, and re-serialization of a deserialized quantized
+    artifact all see exactly what the kernel computes."""
     h = packed.hidden[col]
+    w1 = np.ascontiguousarray(packed.w1[:, :h, col], np.float32)
+    w2 = np.ascontiguousarray(packed.w2[:h, col], np.float32)
+    if packed.out_scale is not None:
+        w2 = w2 * np.float32(packed.out_scale[col])
     return PackedProxy(
-        w1=np.ascontiguousarray(packed.w1[:, :h, col]),
+        w1=w1,
         b1=np.ascontiguousarray(packed.b1[:h, col]),
-        w2=np.ascontiguousarray(packed.w2[:h, col]),
+        w2=w2,
         b2=np.float32(packed.b2[col]),
         hidden=h,
+    )
+
+
+# ---------------------------------------------------- weight-only quantization
+QUANT_DTYPES = ("float32", "int8", "fp8")
+# bytes per weight element as MOVED by the kernel — fp8 is simulated
+# (stored fp32 in this container) but modeled at its native width so the
+# roofline sweep prices what real-hardware fp8 would move
+QUANT_WEIGHT_BYTES = {"float32": 4, "int8": 1, "fp8": 1}
+
+
+def _fp8_grid(x: np.ndarray) -> np.ndarray:
+    """Round to the float8_e4m3 grid and back to fp32 (saturating — e4m3
+    overflow encodes NaN, so inputs are pre-clipped to ±448)."""
+    import ml_dtypes
+
+    clipped = np.clip(x, -448.0, 448.0).astype(np.float32)
+    return clipped.astype(ml_dtypes.float8_e4m3fn).astype(np.float32)
+
+
+def quantize_cascade(packed: PackedCascade, dtype: str = "int8") -> PackedCascade:
+    """Weight-only symmetric quantization of a packed fp32 cascade, scales
+    folded so the kernel dequantizes ONCE per tile (DESIGN.md §3):
+
+    * per hidden column ``(h, p)``: ``s1[h,p] = max|w1[:,h,p]| / 127``;
+      codes ``q1 = rint(w1 / s1)``.  Because ``relu(a·s) = s·relu(a)`` for
+      ``s > 0``, the column scale commutes through the relu, so it is
+      folded OUT of the hidden pass — ``b1`` becomes ``b1 / s1`` and
+      ``s1`` multiplies into the readout weights — leaving the hidden GEMM
+      pure integer codes.
+    * per stage ``p`` over the scale-folded readout ``w2' = w2 · s1``:
+      ``s2[p] = max|w2'[:,p]| / 127``; codes ``q2 = rint(w2' / s2)``;
+      ``s2`` survives as ``out_scale``, the single dequantizing multiply
+      ``scores = (relu(x @ q1 + b1') @ q2) · s2 + b2``.
+
+    All-zero columns (hidden bucket padding) take scale 1 so the codes
+    stay zero and the fold is the identity.  The linear family's exact
+    ``relu(z) - relu(-z) == z`` embedding survives quantization: the +/-
+    column pair shares one max-abs, hence one scale, and ``rint`` is odd,
+    so the paired codes stay exact negations (tested).
+
+    ``dtype="fp8"`` simulates float8_e4m3: same per-column scaling (to the
+    e4m3 max of 448) and fold, values rounded to the fp8 grid but STORED
+    fp32 — a fidelity study for hardware this container does not have; the
+    roofline model prices it at 1 byte/weight, the wire ships fp32 bytes.
+    """
+    if packed.dtype != "float32":
+        raise ValueError(f"cascade is already quantized ({packed.dtype})")
+    if dtype == "float32":
+        return packed
+    if dtype not in QUANT_DTYPES:
+        raise ValueError(f"unknown quantization dtype {dtype!r}; "
+                         f"supported: {QUANT_DTYPES}")
+    w1 = np.asarray(packed.w1, np.float32)
+    w2 = np.asarray(packed.w2, np.float32)
+    max_q = 127.0 if dtype == "int8" else 448.0
+    a1 = np.max(np.abs(w1), axis=0)  # (H, P) per-hidden-column max
+    s1 = np.where(a1 > 0, a1 / max_q, 1.0).astype(np.float32)
+    if dtype == "int8":
+        q1 = np.clip(np.rint(w1 / s1), -127, 127).astype(np.int8)
+    else:
+        q1 = _fp8_grid(w1 / s1)
+    b1 = (np.asarray(packed.b1, np.float32) / s1).astype(np.float32)
+    w2f = (w2 * s1).astype(np.float32)  # hidden scales folded into readout
+    a2 = np.max(np.abs(w2f), axis=0)  # (P,) per-stage max
+    s2 = np.where(a2 > 0, a2 / max_q, 1.0).astype(np.float32)
+    if dtype == "int8":
+        q2 = np.clip(np.rint(w2f / s2), -127, 127).astype(np.int8)
+    else:
+        q2 = _fp8_grid(w2f / s2)
+    return PackedCascade(
+        w1=q1, b1=b1, w2=q2, b2=np.asarray(packed.b2, np.float32),
+        hidden=packed.hidden, families=packed.families,
+        dtype=dtype, out_scale=s2,
     )
 
 
@@ -229,10 +328,13 @@ def cascade_kernel_operands(packed: PackedCascade):
     Returns ``(w1 (F, H*P), b1 (H*P,), w2 (H*P, P), b2 (P,))`` in h-major
     column order (column ``h*P + p`` is hidden unit ``h`` of stage ``p``);
     ``w2`` is the block-diagonal readout matrix of the second GEMM.
+    Weight dtypes are preserved — a quantized cascade hands the kernel
+    int8 code matrices (dequantized in-register via ``out_scale``, which
+    travels separately on the scorer, not through this layout).
     """
     F, H, P = packed.w1.shape
     w1 = np.ascontiguousarray(packed.w1.reshape(F, H * P))
     b1 = np.ascontiguousarray(packed.b1.reshape(H * P))
-    w2 = np.zeros((H * P, P), np.float32)
+    w2 = np.zeros((H * P, P), packed.w2.dtype)
     w2[np.arange(H * P), np.tile(np.arange(P), H)] = packed.w2.reshape(H * P)
     return w1, b1, w2, np.asarray(packed.b2, np.float32)

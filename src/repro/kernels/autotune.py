@@ -1,0 +1,317 @@
+"""Roofline-driven tile autotuner for the fused cascade scorer.
+
+Replaces the static ~8 MB VMEM heuristic in ``CascadeScorer.__init__``
+with a swept cost model: for each candidate ``block_m`` (and weight
+dtype) it computes the bytes the kernel actually moves per launch — the
+bucket-padded x tile, the stacked packed weights at their storage width
+(fp32 = 4 B, int8/fp8 codes = 1 B), and the mask/compaction outputs —
+plus the GEMM FLOPs, and scores the cell with a two-knee roofline
+
+    t = LAUNCH + nb * STEP + max(bytes / HBM_BW, flops / PEAK)
+
+The sweep is deliberately a MODEL, not a wall-clock timer: in this
+container Pallas runs in interpret mode, where per-cell timings measure
+the Python interpreter, not the memory system.  The model's byte counts
+are exact (they are the operand nbytes the compiled kernel streams), so
+the ranking is the bandwidth-bound ranking a TPU would see; wall-clock
+stays an advisory column (``measure_cell``) for runs on real hardware.
+
+Feasibility reuses the PREVIOUS static heuristic's bound — per-row VMEM
+footprint ``4*(F + HPp) + 9*Pp`` bytes against an 8 MB budget — so with
+the default full-tile row hint the tuner picks exactly the block the old
+heuristic picked (no disruption to compiled-program caches), and only
+diverges where the old rule was wrong: small serving chunks, where a
+full-budget block pads 8-16x the rows actually scored.
+
+Winning configs are cached keyed by (F, HP-bucket, P-bucket, dtype,
+backend, hint-bucket, max_tile); set ``CORE_AUTOTUNE_CACHE=/path.json``
+to persist the table across processes so repeat serving runs skip the
+sweep entirely.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import NamedTuple, Optional, Tuple
+
+import numpy as np
+
+# Nominal single-core accelerator envelope (TPUv4-ish).  Only RATIOS of
+# modeled times ever gate anything, so the absolute calibration is free
+# to be nominal; the byte counts feeding them are exact.
+HBM_BYTES_PER_S = 1.2e12
+PEAK_FLOPS = 7.0e13
+LAUNCH_OVERHEAD_S = 5.0e-6
+GRID_STEP_OVERHEAD_S = 1.5e-6
+VMEM_BLOCK_BUDGET = 8 << 20  # same budget the old static heuristic used
+WEIGHT_RESIDENT_BYTES = 4 << 20  # weights this small stay pinned in VMEM
+
+
+def _ceil128(n: int) -> int:
+    return -(-int(n) // 128) * 128
+
+
+def static_heuristic_block_m(n_features: int, hp: int, n_proxies: int,
+                             max_tile: int = 8192) -> int:
+    """The pre-autotune rule, verbatim: largest power-of-two block >= 256
+    whose per-row footprint fits the 8 MB budget.  Kept callable so the
+    sweep can report "chosen vs static" and tests can pin equivalence."""
+    hpp = _ceil128(hp)
+    pp = _ceil128(n_proxies)
+    per_row = 4 * (int(n_features) + hpp) + 9 * pp
+    budget_rows = VMEM_BLOCK_BUDGET // per_row
+    block_m = 256
+    while block_m * 2 <= min(budget_rows, max_tile):
+        block_m *= 2
+    return min(block_m, max_tile)
+
+
+class CellModel(NamedTuple):
+    """Roofline model of one (block_m, dtype) sweep cell."""
+
+    block_m: int
+    dtype: str
+    n_rows: int
+    npad: int          # bucket-padded rows the launch actually scores
+    nb: int            # grid steps
+    bytes_moved: int   # exact operand bytes streamed per launch
+    flops: int
+    t_model_s: float
+    mbu: float         # model bandwidth utilization: useful bytes / (t*BW)
+    feasible: bool     # per-block footprint within the VMEM budget
+
+
+class TunedConfig(NamedTuple):
+    block_m: int
+    dtype: str
+    t_model_s: float
+    bytes_moved: int
+    mbu: float
+    static_block_m: int  # what the old heuristic would have picked
+    source: str          # "sweep" | "cache"
+
+
+def _weight_bytes(n_features: int, hp: int, n_proxies: int, dtype: str) -> int:
+    from repro.core.proxy_family import QUANT_WEIGHT_BYTES
+
+    wb = QUANT_WEIGHT_BYTES[dtype]
+    hpp = _ceil128(hp)
+    pp = _ceil128(n_proxies)
+    # w1 (F, HPp) + w2 (HPp, Pp) at storage width; b1/b2/thr/out_scale f32
+    return (int(n_features) * hpp * wb + hpp * pp * wb
+            + hpp * 4 + 3 * pp * 4)
+
+
+def padded_rows(n_rows: int, block_m: int, max_tile: int) -> int:
+    """The scorer's bucket ladder: block_m * 2^k, capped at max_tile."""
+    size = block_m
+    while size < min(n_rows, max_tile):
+        size *= 2
+    return min(size, max_tile)
+
+
+def cell_model(n_features: int, hp: int, n_proxies: int, dtype: str,
+               block_m: int, n_rows: int, *,
+               max_tile: int = 8192) -> CellModel:
+    """Roofline-score one sweep cell for a chunk of ``n_rows`` records."""
+    hpp = _ceil128(hp)
+    pp = _ceil128(n_proxies)
+    npad = padded_rows(n_rows, block_m, max_tile)
+    nb = -(-npad // block_m)
+    wbytes = _weight_bytes(n_features, hp, n_proxies, dtype)
+    refetch = 1 if wbytes <= WEIGHT_RESIDENT_BYTES else nb
+    x_bytes = npad * n_features * 4
+    out_bytes = npad * pp * (1 + 4)  # keep mask + compacted survivor ids
+    bytes_moved = x_bytes + out_bytes + wbytes * refetch
+    flops = 2 * npad * (n_features * hpp + hpp * pp)
+    t_mem = bytes_moved / HBM_BYTES_PER_S
+    t_flop = flops / PEAK_FLOPS
+    t = LAUNCH_OVERHEAD_S + nb * GRID_STEP_OVERHEAD_S + max(t_mem, t_flop)
+    # useful bytes: the unpadded rows' traffic + one copy of the weights
+    useful = n_rows * (n_features * 4 + pp * 5) + wbytes
+    mbu = useful / (t * HBM_BYTES_PER_S)
+    per_row = 4 * (n_features + hpp) + 9 * pp
+    feasible = per_row * block_m <= VMEM_BLOCK_BUDGET
+    return CellModel(block_m=int(block_m), dtype=dtype, n_rows=int(n_rows),
+                     npad=int(npad), nb=int(nb),
+                     bytes_moved=int(bytes_moved), flops=int(flops),
+                     t_model_s=float(t), mbu=float(mbu), feasible=feasible)
+
+
+def _candidates(max_tile: int) -> Tuple[int, ...]:
+    out, c = [], 128
+    while c <= max_tile:
+        out.append(c)
+        c *= 2
+    return tuple(out) or (max_tile,)
+
+
+# ----------------------------------------------------------------- cache
+_CACHE: dict = {}
+_STATS = {"sweeps": 0, "hits": 0}
+_DISK_LOADED = False
+
+
+def autotune_stats() -> dict:
+    return dict(_STATS)
+
+
+def reset_autotune_stats() -> None:
+    _STATS["sweeps"] = 0
+    _STATS["hits"] = 0
+
+
+def clear_autotune_cache() -> None:
+    global _DISK_LOADED
+    _CACHE.clear()
+    _DISK_LOADED = False
+
+
+def _hint_bucket(n_rows_hint: int, max_tile: int) -> int:
+    return padded_rows(min(int(n_rows_hint), max_tile), 128, max_tile)
+
+
+def _cache_key(n_features, hp, n_proxies, dtype, backend, hint_b, max_tile):
+    return (int(n_features), _ceil128(hp), _ceil128(n_proxies), str(dtype),
+            str(backend), int(hint_b), int(max_tile))
+
+
+def _disk_path() -> Optional[str]:
+    return os.environ.get("CORE_AUTOTUNE_CACHE") or None
+
+
+def _load_disk_cache() -> None:
+    global _DISK_LOADED
+    _DISK_LOADED = True
+    path = _disk_path()
+    if not path or not os.path.exists(path):
+        return
+    try:
+        with open(path) as f:
+            table = json.load(f)
+    except (OSError, ValueError):
+        return
+    for key_s, cfg in table.items():
+        key = tuple(json.loads(key_s))
+        _CACHE.setdefault(key, TunedConfig(
+            block_m=int(cfg["block_m"]), dtype=str(cfg["dtype"]),
+            t_model_s=float(cfg["t_model_s"]),
+            bytes_moved=int(cfg["bytes_moved"]), mbu=float(cfg["mbu"]),
+            static_block_m=int(cfg["static_block_m"]), source="cache"))
+
+
+def _save_disk_cache() -> None:
+    path = _disk_path()
+    if not path:
+        return
+    table = {
+        json.dumps(list(k)): {
+            "block_m": v.block_m, "dtype": v.dtype,
+            "t_model_s": v.t_model_s, "bytes_moved": v.bytes_moved,
+            "mbu": v.mbu, "static_block_m": v.static_block_m,
+        }
+        for k, v in _CACHE.items()
+    }
+    try:
+        with open(path, "w") as f:
+            json.dump(table, f, indent=0, sort_keys=True)
+    except OSError:
+        pass
+
+
+def choose_block_m(n_features: int, hp: int, n_proxies: int,
+                   dtype: str = "float32", *,
+                   n_rows_hint: Optional[int] = None,
+                   max_tile: int = 8192,
+                   backend: Optional[str] = None) -> TunedConfig:
+    """Pick ``block_m`` for the fused scorer by roofline sweep.
+
+    ``n_rows_hint`` is the expected serving chunk size; None means "full
+    tiles" (n_rows_hint = max_tile), under which the winner coincides
+    with the old static heuristic by construction (same feasibility
+    bound; equal bytes at every feasible block, so fewer grid steps win).
+    """
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    if not _DISK_LOADED:
+        _load_disk_cache()
+    hint = max_tile if n_rows_hint is None else int(n_rows_hint)
+    hint_b = _hint_bucket(max(hint, 1), max_tile)
+    key = _cache_key(n_features, hp, n_proxies, dtype, backend, hint_b,
+                     max_tile)
+    hit = _CACHE.get(key)
+    if hit is not None:
+        _STATS["hits"] += 1
+        return hit._replace(source="cache")
+    _STATS["sweeps"] += 1
+    static_bm = static_heuristic_block_m(n_features, hp, n_proxies, max_tile)
+    cells = [cell_model(n_features, hp, n_proxies, dtype, bm, hint_b,
+                        max_tile=max_tile)
+             for bm in _candidates(max_tile)]
+    feasible = [c for c in cells if c.feasible]
+    if not feasible:
+        # degenerate shape: even the old heuristic's floor blows the
+        # budget — keep its pick so behavior is unchanged
+        feasible = [c for c in cells if c.block_m == static_bm] or cells[:1]
+    best = min(feasible, key=lambda c: (c.t_model_s, -c.block_m))
+    cfg = TunedConfig(block_m=best.block_m, dtype=dtype,
+                      t_model_s=best.t_model_s,
+                      bytes_moved=best.bytes_moved, mbu=best.mbu,
+                      static_block_m=static_bm, source="sweep")
+    _CACHE[key] = cfg
+    _save_disk_cache()
+    return cfg
+
+
+# ----------------------------------------------------------------- sweep
+def sweep_table(shapes, dtypes=("float32", "int8"), *,
+                n_rows_hints=(256, 1024, 8192), max_tile: int = 8192):
+    """Full sweep over workload shapes x dtypes x chunk hints; the rows
+    behind ``benchmarks/roofline.py`` and the nightly CI artifact.
+
+    ``shapes``: iterable of (name, F, HP, P).  Returns a list of dicts,
+    one per (shape, dtype, hint): the winning cell, the static
+    heuristic's cell at the same hint, and whether the tuner's pick
+    strictly beats it under the model.
+    """
+    rows = []
+    for name, f, hp, p in shapes:
+        static_bm = static_heuristic_block_m(f, hp, p, max_tile)
+        for dtype in dtypes:
+            for hint in n_rows_hints:
+                cfg = choose_block_m(f, hp, p, dtype, n_rows_hint=hint,
+                                     max_tile=max_tile, backend="model")
+                stat = cell_model(f, hp, p, dtype, static_bm, hint,
+                                  max_tile=max_tile)
+                rows.append({
+                    "shape": name, "F": int(f), "HP": int(hp), "P": int(p),
+                    "dtype": dtype, "n_rows": int(hint),
+                    "block_m": cfg.block_m, "static_block_m": static_bm,
+                    "t_model_us": cfg.t_model_s * 1e6,
+                    "t_static_us": stat.t_model_s * 1e6,
+                    "bytes_moved": cfg.bytes_moved,
+                    "bytes_static": stat.bytes_moved,
+                    "mbu": cfg.mbu,
+                    "beats_static": cfg.t_model_s < stat.t_model_s,
+                    "source": cfg.source,
+                })
+    return rows
+
+
+def measure_cell(scorer, n_rows: int, *, repeats: int = 3) -> float:
+    """Advisory wall-clock: seconds per ``score_masks`` call on a random
+    chunk.  Meaningful on compiled backends only; in interpret mode it
+    times Python, so callers must treat it as a non-gating column."""
+    import time
+
+    rng = np.random.RandomState(0)
+    x = rng.randn(n_rows, scorer.n_features).astype(np.float32)
+    scorer.score_masks(x)  # warm the jit cache
+    best = float("inf")
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        scorer.score_masks(x)
+        best = min(best, time.perf_counter() - t0)
+    return best

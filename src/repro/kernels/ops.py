@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import autotune
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.proxy_score import cascade_score
 from repro.kernels.ssd_scan import ssd_chunk
@@ -108,36 +109,47 @@ class CascadeScorer:
     """
 
     def __init__(self, param_list, thresholds, *, block_m: int = None,
-                 interpret=None, max_tile: int = 8192):
-        from repro.core.proxy_family import cascade_kernel_operands, pack_cascade
+                 interpret=None, max_tile: int = 8192,
+                 dtype: str = "float32", n_rows_hint: int = None,
+                 packed=None):
+        from repro.core.proxy_family import (
+            cascade_kernel_operands, pack_cascade, quantize_cascade)
 
         if not param_list:
             raise ValueError("CascadeScorer needs at least one proxy")
-        self.packed = pack_cascade(list(param_list), pack_fn=pack_proxy_cached)
+        if packed is None:
+            packed = pack_cascade(list(param_list), pack_fn=pack_proxy_cached)
+            if dtype != "float32":
+                # weight-only quantization at plan-compile time: scales
+                # folded so the kernel dequantizes once per tile
+                packed = quantize_cascade(packed, dtype)
+        self.packed = packed
+        self.dtype = packed.dtype
         w1, b1, w2, b2 = cascade_kernel_operands(self.packed)
-        self.w1 = jnp.asarray(w1)  # (F, H*P) stacked hidden weights
+        self.w1 = jnp.asarray(w1)  # (F, H*P) stacked hidden weights/codes
         self.b1 = jnp.asarray(b1)
         self.w2 = jnp.asarray(w2)  # (H*P, P) block-diagonal readout
         self.b2 = jnp.asarray(b2)
+        self.out_scale = (None if self.packed.out_scale is None
+                          else jnp.asarray(self.packed.out_scale))
         self.thr = jnp.asarray(np.asarray(thresholds, np.float32))
         self.families = self.packed.families
         self.n_proxies = len(param_list)
         self.n_features = int(self.w1.shape[0])
         if block_m is None:
-            # auto: biggest block whose per-row VMEM footprint fits an
-            # ~8MB budget (half a TPU core's VMEM; the rest covers the
-            # stacked weights + double buffering) — fewer, larger blocks
-            # amortize per-block launch overhead.  The footprint counts
-            # the x tile, the (block_m, HPp) relu intermediate the
-            # two-pass kernel materializes, and the padded score/mask/
-            # compaction output columns.
-            hpp = -(-(self.w1.shape[1]) // 128) * 128
-            pp = -(-self.n_proxies // 128) * 128
-            per_row = 4 * (self.n_features + hpp) + 9 * pp  # bytes (f32 + bool)
-            budget_rows = (8 << 20) // per_row
-            block_m = 256  # largest power of two within budget: tiles the
-            while block_m * 2 <= min(budget_rows, max_tile):  # usual 2^k
-                block_m *= 2  # batch sizes without row padding
+            # roofline autotune (kernels/autotune.py): sweep candidate
+            # blocks against exact per-launch byte counts at the expected
+            # chunk size.  With no row hint the winner coincides with the
+            # previous static 8MB-budget heuristic by construction (same
+            # feasibility bound, equal bytes at every feasible block, so
+            # fewer grid steps win); a small hint right-sizes the block
+            # for serving chunks instead of padding 8-16x.  Cache-keyed
+            # on (F, HP-bucket, P-bucket, dtype, backend, hint), so
+            # repeat installs skip the sweep.
+            cfg = autotune.choose_block_m(
+                self.n_features, int(self.w1.shape[1]), self.n_proxies,
+                self.dtype, n_rows_hint=n_rows_hint, max_tile=max_tile)
+            block_m = cfg.block_m
         self.block_m = min(block_m, max_tile)
         self.interpret = interpret_default() if interpret is None else interpret
         buckets = []
@@ -156,8 +168,11 @@ class CascadeScorer:
         """Build a scorer over ALL of the plan's proxied stages (any
         family).  Returns None only when no stage carries a proxy.
         ``scorer.stage_cols[si]`` maps stage index to its proxy column, or
-        None for proxy-less stages.
+        None for proxy-less stages.  A plan stamped with
+        ``meta["quant_dtype"]`` (optimizer flag or wire artifact) builds
+        its scorer at that weight dtype unless the caller overrides.
         """
+        kw.setdefault("dtype", plan.meta.get("quant_dtype", "float32"))
         params, thrs, cols = [], [], []
         for stage in plan.stages:
             if stage.proxy is not None:
@@ -202,7 +217,7 @@ class CascadeScorer:
         n = x_tile.shape[0]
         scores, mask, packed, counts = cascade_score(
             jnp.asarray(self._pad_tile(x_tile)), self.w1, self.b1,
-            self.w2, self.b2, self.thr, n,
+            self.w2, self.b2, self.thr, n, out_scale=self.out_scale,
             block_m=self.block_m, interpret=self.interpret,
             with_scores=need_scores, with_compaction=need_compaction,
             compact_cols=compact_cols,
@@ -293,7 +308,7 @@ class CascadeScorer:
             m = tile.shape[0]
             scores, mask, _pk, _cnt = cascade_score(
                 jnp.asarray(self._pad_tile(tile)), self.w1, self.b1,
-                self.w2, self.b2, self.thr, m,
+                self.w2, self.b2, self.thr, m, out_scale=self.out_scale,
                 block_m=self.block_m, interpret=self.interpret,
                 with_scores=True, with_compaction=False,
             )
@@ -338,13 +353,16 @@ def params_fingerprint(params) -> str:
 def _plan_scorer_key(plan, max_tile: int):
     # no family component: the packed fingerprint already determines the
     # compiled program bit-for-bit, so e.g. a deserialized wire copy
-    # ("packed1" family) of a locally-built linear plan hits the same entry
+    # ("packed1" family) of a locally-built linear plan hits the same entry.
+    # The quant dtype IS a key component: the same fp32 params packed at
+    # int8 vs fp32 are different compiled programs (different codes and
+    # masks), so a stale-dtype scorer must never be served.
     return tuple(
         (s.pred_idx,
          params_fingerprint(s.proxy.params) if s.proxy is not None else None,
          float(s.threshold))
         for s in plan.stages
-    ) + (int(max_tile),)
+    ) + (int(max_tile), str(plan.meta.get("quant_dtype", "float32")))
 
 
 def cascade_scorer_for_plan(plan, *, max_tile: int = 8192):
@@ -389,6 +407,13 @@ WIRE_VERSION = 1
 WIRE_MINOR_FRAME = 1
 FRAME_RESYNC = "resync"  # payload: a v1 scorer artifact for a fenced host
 FRAME_DELTA = "delta"  # payload: JSON-encoded consensus StateDelta
+# v1.2: minor 2 is a QUANTIZED scorer artifact — the packed tensors travel
+# as int8 (or fp8-simulated) codes, and the scorer header gains "dtype"
+# plus a per-stage "out_scale" array ref.  fp32 artifacts keep minor 0
+# with byte-identical layout (no new header keys), so v1.0 readers and
+# blobs are untouched; readers reject any OTHER minor explicitly rather
+# than misparsing a future format.
+WIRE_MINOR_QUANT = 2
 
 
 class WireFormatError(ValueError):
@@ -486,12 +511,21 @@ def serialize_scorer(plan, scorer=None, *, max_tile: int = 8192) -> bytes:
         },
         "arrays": pool.descs,
     }
+    # v1.2 quantized artifact: dtype + per-stage readout scales ride the
+    # header; minor stays 0 for fp32 so those blobs are byte-identical to
+    # every earlier release (round-trip tests pin this).
+    minor = 0
+    if packed.dtype != "float32":
+        minor = WIRE_MINOR_QUANT
+        header["scorer"]["dtype"] = str(packed.dtype)
+        header["scorer"]["out_scale"] = pool.put(
+            np.asarray(packed.out_scale, np.float32))
     hdr = json.dumps(header, sort_keys=True,
                      separators=(",", ":")).encode("utf-8")
     out = bytearray()
     out += WIRE_MAGIC
     out += int(WIRE_VERSION).to_bytes(2, "little")
-    out += b"\x00\x00"
+    out += int(minor).to_bytes(2, "little")
     out += len(hdr).to_bytes(8, "little")
     out += hdr
     for raw in pool.blobs:
@@ -571,10 +605,15 @@ def deserialize_scorer(blob: bytes, query):
     if ver != WIRE_VERSION:
         raise WireFormatError(f"wire version {ver} != supported {WIRE_VERSION}")
     minor = int.from_bytes(blob[10:12], "little")
-    if minor != 0:
+    if minor == WIRE_MINOR_FRAME:
         raise WireFormatError(
             f"wire minor {minor} is a control frame, not a scorer artifact "
             f"(use deserialize_frame)")
+    if minor not in (0, WIRE_MINOR_QUANT):
+        raise WireFormatError(
+            f"unknown wire minor {minor}: this reader supports scorer "
+            f"artifacts v{WIRE_VERSION}.0 (fp32) and "
+            f"v{WIRE_VERSION}.{WIRE_MINOR_QUANT} (quantized)")
     hdr_len = int.from_bytes(blob[12:20], "little")
     header = json.loads(blob[20:20 + hdr_len].decode("utf-8"))
     payload = memoryview(blob)[20 + hdr_len:]
@@ -589,6 +628,7 @@ def deserialize_scorer(blob: bytes, query):
     sh = header["scorer"]
     from repro.core.proxy_family import PackedCascade
 
+    quant_dtype = str(sh.get("dtype", "float32"))
     packed = PackedCascade(
         w1=_pool_get(descs, payload, sh["w1"]),
         b1=_pool_get(descs, payload, sh["b1"]),
@@ -596,6 +636,9 @@ def deserialize_scorer(blob: bytes, query):
         b2=_pool_get(descs, payload, sh["b2"]),
         hidden=tuple(int(h) for h in sh["hidden"]),
         families=tuple(ph["src_families"]),
+        dtype=quant_dtype,
+        out_scale=(_pool_get(descs, payload, sh["out_scale"])
+                   if minor == WIRE_MINOR_QUANT else None),
     )
     thr = _pool_get(descs, payload, sh["thr"])
     params_by_col = [unpack_cascade(packed, c) for c in range(packed.n_stages)]
@@ -628,22 +671,80 @@ def deserialize_scorer(blob: bytes, query):
             est_selectivity=float(st["est_selectivity"]),
             est_cost=float(st["est_cost"]),
         ))
+    meta = {
+        "mode": "wire",
+        "plan_version": int(ph["plan_version"]),
+        "wire_src_families": tuple(ph["src_families"]),
+    }
+    if quant_dtype != "float32":
+        meta["quant_dtype"] = quant_dtype
     plan = PhysicalPlan(
         query=query, stages=stages,
         est_total_cost=float(ph["est_total_cost"]),
-        meta={
-            "mode": "wire",
-            "plan_version": int(ph["plan_version"]),
-            "wire_src_families": tuple(ph["src_families"]),
-        },
+        meta=meta,
     )
+    # packed= hands the wire codes straight to the scorer — no re-pack,
+    # no re-quantize — so the receiving host's masks are bit-identical to
+    # the sender's and re-serializing reproduces the original bytes
     scorer = CascadeScorer(
         [params_by_col[c] for c in range(packed.n_stages)], thr,
         block_m=int(sh["block_m"]), max_tile=int(sh["max_tile"]),
+        packed=packed,
     )
     scorer.stage_cols = [None if c is None else int(c)
                          for c in sh["stage_cols"]]
     return plan, scorer
+
+
+# ------------------------------------------------------ quant parity gate
+def quant_parity_report(plan, x, *, dtype: str = "int8",
+                        calib_frac: float = 0.5,
+                        max_tile: int = 8192) -> dict:
+    """Decision-flip audit of a quantized cascade against its fp32 twin.
+
+    The contract (DESIGN.md §3): quantization may flip a keep decision
+    ONLY for records whose fp32 score sits within ``tol`` of the stage
+    threshold, where ``tol`` is calibrated as 2x the max |quant - fp32|
+    score error over the first ``calib_frac`` of ``x`` and VALIDATED on
+    the held-out remainder.  Records with real margin must be untouched.
+
+    Returns a report dict; ``flips_within_tol`` is the gate bit, the
+    rest (score errors, per-stage selectivity deltas) are advisory.
+    """
+    x = np.asarray(x, np.float32)
+    f32 = CascadeScorer.from_plan(plan, max_tile=max_tile, dtype="float32")
+    if f32 is None:
+        raise ValueError("plan has no proxied stage: nothing to audit")
+    qs = CascadeScorer.from_plan(plan, max_tile=max_tile, dtype=dtype)
+    n_cal = int(np.clip(int(len(x) * calib_frac), 1, len(x) - 1))
+    thr = np.asarray(f32.thr)
+
+    def _scores_masks(scorer, chunk):
+        s, m, _pk, _cnt = scorer.score_compact(chunk, need_scores=True)
+        return s, m
+
+    s_f, m_f = _scores_masks(f32, x[:n_cal])
+    s_q, _ = _scores_masks(qs, x[:n_cal])
+    tol = 2.0 * float(np.max(np.abs(s_q - s_f)))
+    ev_f, mask_f = _scores_masks(f32, x[n_cal:])
+    ev_q, mask_q = _scores_masks(qs, x[n_cal:])
+    flips = mask_f != mask_q
+    near = np.abs(ev_f - thr[None, :]) <= tol
+    sel_f = mask_f.mean(axis=0)
+    sel_q = mask_q.mean(axis=0)
+    return {
+        "dtype": dtype,
+        "tol": tol,
+        "max_err_calib": float(np.max(np.abs(s_q - s_f))),
+        "max_err_eval": float(np.max(np.abs(ev_q - ev_f))),
+        "n_eval": int(flips.shape[0]),
+        "n_flips": int(flips.sum()),
+        "flip_rate": float(flips.mean()),
+        "flips_within_tol": bool(np.all(near[flips])),
+        "max_sel_delta": float(np.max(np.abs(sel_f - sel_q))),
+        "sel_fp32": [float(v) for v in sel_f],
+        "sel_quant": [float(v) for v in sel_q],
+    }
 
 
 # -------------------------------------------------------------- attention

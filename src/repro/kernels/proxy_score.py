@@ -45,9 +45,12 @@ def _make_cascade_kernel(n_proxies, with_scores, with_compaction):
     engine gates on masks alone, the executor needs masks + compaction.
     """
 
-    def kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, thr_ref, valid_ref,
-               *out_refs):
+    def kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, thr_ref, scale_ref,
+               valid_ref, *out_refs):
         x = x_ref[...]
+        # weight loads dequantize in-register: int8 codes (quantized packed
+        # cascade) widen to f32 on the way into the MXU — the HBM->VMEM
+        # traffic is 1 byte/weight, the arithmetic stays f32
         hid = jnp.dot(x.astype(jnp.float32), w1_ref[...].astype(jnp.float32),
                       preferred_element_type=jnp.float32)
         hid = jnp.maximum(hid + b1_ref[...][None, :], 0.0)
@@ -56,7 +59,10 @@ def _make_cascade_kernel(n_proxies, with_scores, with_compaction):
         # ~128/P for nothing (the MXU pads the n-dim internally either way)
         s = jnp.dot(hid, w2_ref[...][:, :n_proxies].astype(jnp.float32),
                     preferred_element_type=jnp.float32)
-        s = s + b2_ref[...][None, :n_proxies]
+        # the single dequantizing multiply: per-stage readout scales (all
+        # ones for fp32 cascades — ``x * 1.0`` is an IEEE identity, so the
+        # fp32 path stays bit-exact through this op)
+        s = s * scale_ref[...][None, :n_proxies] + b2_ref[...][None, :n_proxies]
         m = (s >= thr_ref[...][None, :n_proxies]) & valid_ref[...]
         pad = w2_ref.shape[1] - n_proxies
         refs = list(out_refs)
@@ -106,6 +112,7 @@ def proxy_score(x, w, b, thresholds, *, block_m: int = 256, interpret: bool = Tr
 @functools.partial(jax.jit, static_argnames=(
     "block_m", "interpret", "with_scores", "with_compaction", "compact_cols"))
 def cascade_score(x, w1, b1, w2, b2, thresholds, n_valid, *,
+                  out_scale=None,
                   block_m: int = 256, interpret: bool = True,
                   with_scores: bool = True, with_compaction: bool = True,
                   compact_cols=None):
@@ -116,6 +123,12 @@ def cascade_score(x, w1, b1, w2, b2, thresholds, n_valid, *,
     hidden bucket x stages, h-major — see
     ``core.proxy_family.cascade_kernel_operands``); b1: (HP,); w2:
     (HP, P) block-diagonal readout; b2, thresholds: (P,).
+
+    ``out_scale`` (P,) are per-stage readout dequantization scales for
+    weight-only-quantized cascades (``scores = readout * out_scale + b2``);
+    None means ones — the fp32 path, bit-identical to the pre-quantization
+    kernel (``x * 1.0`` preserves every bit).  ``w1``/``w2`` may be int8
+    code matrices; they widen to f32 in-register after the VMEM load.
 
     Returns:
       scores (N, P) f32          raw proxy scores (None if not with_scores)
@@ -144,6 +157,8 @@ def cascade_score(x, w1, b1, w2, b2, thresholds, n_valid, *,
     N, F = x.shape
     HP = w1.shape[1]
     P = w2.shape[1]
+    if out_scale is None:
+        out_scale = jnp.ones_like(b2)
     pad_n = (-N) % block_m
     pad_hp = (-HP) % 128
     pad_p = (-P) % 128
@@ -157,6 +172,7 @@ def cascade_score(x, w1, b1, w2, b2, thresholds, n_valid, *,
         w2 = jnp.pad(w2, ((0, 0), (0, pad_p)))
         b2 = jnp.pad(b2, (0, pad_p))
         thresholds = jnp.pad(thresholds, (0, pad_p), constant_values=jnp.inf)
+        out_scale = jnp.pad(out_scale, (0, pad_p), constant_values=1.0)
     Np, HPp, Pp = x.shape[0], w1.shape[1], w2.shape[1]
     valid = (jnp.arange(Np, dtype=jnp.int32) < n_valid)[:, None]
 
@@ -182,12 +198,13 @@ def cascade_score(x, w1, b1, w2, b2, thresholds, n_valid, *,
             pl.BlockSpec((HPp, Pp), lambda i: (0, 0)),
             pl.BlockSpec((Pp,), lambda i: (0,)),
             pl.BlockSpec((Pp,), lambda i: (0,)),
+            pl.BlockSpec((Pp,), lambda i: (0,)),
             pl.BlockSpec((block_m, 1), lambda i: (i, 0)),
         ],
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
-    )(x, w1, b1, w2, b2, thresholds, valid)
+    )(x, w1, b1, w2, b2, thresholds, out_scale, valid)
     outs = list(outs)
     scores = outs.pop(0) if with_scores else None
     mask = outs.pop(0)

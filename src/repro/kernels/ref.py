@@ -15,20 +15,27 @@ def proxy_score_ref(x, w, b, thresholds):
     return scores, scores >= thresholds.astype(jnp.float32)
 
 
-def cascade_score_ref(x, w1, b1, w2, b2, thresholds):
+def cascade_score_ref(x, w1, b1, w2, b2, thresholds, out_scale=None):
     """Two-pass packed-cascade oracle (the parity reference for the fused
     ``cascade_score`` kernel, every proxy family included).
 
     x: (N, F); w1: (F, HP) stacked folded hidden weights; b1: (HP,);
     w2: (HP, P) block-diagonal readout; b2, thresholds: (P,).
+    ``out_scale`` (P,) are the per-stage readout dequantization scales of
+    a weight-only-quantized cascade (``w1``/``w2`` then carry int8 codes);
+    None means the fp32 path — multiplying by ones is an IEEE identity, so
+    the oracle stays bit-compatible with its pre-quantization self.
     Returns (scores (N, P) f32, mask (N, P) bool, packed survivor index
     lists per stage) — ``packed[p]`` are the ascending row indices where
     stage p's mask is True.
     """
+    if out_scale is None:
+        out_scale = jnp.ones_like(b2.astype(jnp.float32))
     hid = jnp.maximum(
         jnp.dot(x.astype(jnp.float32), w1.astype(jnp.float32))
         + b1.astype(jnp.float32), 0.0)
-    scores = jnp.dot(hid, w2.astype(jnp.float32)) + b2.astype(jnp.float32)
+    scores = (jnp.dot(hid, w2.astype(jnp.float32))
+              * out_scale.astype(jnp.float32) + b2.astype(jnp.float32))
     mask = scores >= thresholds.astype(jnp.float32)
     m = np.asarray(mask)
     packed = [np.flatnonzero(m[:, p]).astype(np.int32) for p in range(m.shape[1])]

@@ -35,6 +35,12 @@ def main():
     ap.add_argument("--proxy-kind", default="svm", choices=["svm", "mlp", "mixed"],
                     help="proxy family per predicate: all-linear, all-MLP, "
                          "or alternating (every kind rides the fused scorer)")
+    ap.add_argument("--quant-dtype", default="fp32",
+                    choices=["fp32", "int8", "fp8"],
+                    help="weight storage dtype for the packed cascade: "
+                         "int8/fp8 quantize at plan-compile time (scales "
+                         "folded into the readout; masks flip only within "
+                         "the calibrated threshold tolerance)")
     ap.add_argument("--preds", type=int, default=2)
     ap.add_argument("--tile", type=int, default=1024)
     ap.add_argument("--udf-cost-ms", type=float, default=20.0)
@@ -83,8 +89,12 @@ def main():
         # K > 1 implies the adaptive loop: the coordinator's quorum
         # re-optimizations need the builder/B&B state to warm-start
         plan = optimize(q, ds.x[:k], mode=args.mode, kind=args.proxy_kind,
-                        keep_state=args.adaptive or args.hosts > 1)
+                        keep_state=args.adaptive or args.hosts > 1,
+                        quant_dtype=(None if args.quant_dtype == "fp32"
+                                     else args.quant_dtype))
     print(plan.describe())
+    if plan.meta.get("quant_dtype"):
+        print(f"packed cascade weights: {plan.meta['quant_dtype']}")
     if any(s.proxy is not None for s in plan.stages):
         print("proxy families:",
               " ".join(s.proxy.family for s in plan.stages if s.proxy is not None))
