@@ -167,6 +167,7 @@ def write_bench_json(throughput: dict, adaptive: dict | None = None,
                      mlp: dict | None = None, sharded: dict | None = None,
                      fault_tolerance: dict | None = None,
                      quant: dict | None = None,
+                     frontend: dict | None = None,
                      path: Path = BENCH_JSON) -> None:
     payload = {
         "bench": "components",
@@ -183,6 +184,8 @@ def write_bench_json(throughput: dict, adaptive: dict | None = None,
         payload["fault_tolerance"] = fault_tolerance
     if quant is not None:
         payload["quantized_cascade"] = quant
+    if frontend is not None:
+        payload["serving_frontend"] = frontend
     path.write_text(json.dumps(payload, indent=2) + "\n")
 
 

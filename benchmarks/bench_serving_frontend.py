@@ -1,0 +1,183 @@
+"""SLO-aware serving front-end benchmark (DESIGN.md §7): goodput vs raw
+throughput under overload, with and without backpressure.
+
+The workload is an offline arrival trace on the cost-model clock:
+requests of ``rows_per`` records arrive Poisson at ~1.3x the full plan's
+Eq. 3.1 capacity (mild sustained overload — the regime the backpressure
+policy exists for), each carrying the same reference SLO.  Gated by
+``check_regression.py``:
+
+  * ``goodput_ratio`` — requests meeting the SLO / requests completed
+    with backpressure ON (degrade ladder + deadline shedding), floor
+    0.9: under overload the ladder sacrifices trailing cascade stages so
+    almost every request still lands inside its deadline.
+  * ``goodput_ratio_nobp`` — the SAME trace with backpressure OFF is the
+    control: the queue grows without bound, per-request latency diverges,
+    and the ratio collapses (ceiling-gated ≤ 0.5) — the gap between the
+    two runs is the whole point of the front end.
+  * ``frontend_conserved`` — every submitted record is exactly one of
+    {emitted, rejected, explicitly shed}; ``in_flight() == 0`` after the
+    drain; no shed record ever emitted.  Checked on BOTH runs and on the
+    K=4 sharded run below.
+  * ``frontend_sharded_swaps`` — the K=4 fleet submits through per-host
+    front ends (shed-only backpressure: plan versions stay pinned to
+    quorum epochs) while a drifting stream forces a quorum-voted plan
+    swap: the request path and the consensus path compose, conservation
+    holding across the epoch install.
+
+Every gated number is cost-model/seeded (no wall-clock), so runs are
+deterministic per host.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import optimize
+from repro.data.synthetic import (
+    make_dataset,
+    make_query,
+    make_sharded_drifting_streams,
+    make_udfs,
+)
+from repro.serving.engine import CascadeServer
+from repro.serving.frontend import ServingFrontEnd, SLOPolicy
+from repro.serving.stats import AdaptivePolicy
+
+# reference point: deadline = SLO_FACTOR x the full plan's per-request
+# Eq. 3.1 cost; arrivals at OVERLOAD x the full plan's capacity
+SLO_FACTOR = 3.0
+OVERLOAD = 1.3
+
+
+def _workload(seed: int = 41):
+    ds = make_dataset(n=12_000, n_features=64, n_columns=3, correlation=0.9,
+                      feature_noise=0.9, label_noise=0.2, seed=seed)
+    udfs = make_udfs(ds, hidden=16, depth=1, train_rows=1200, seed=seed,
+                     declared_cost_ms=10.0)
+    q = make_query(ds, udfs, columns=[0, 1, 2], target_selectivity=0.5,
+                   accuracy_target=0.9, seed=seed + 1)
+    plan = optimize(q, ds.x[:1500], mode="core", step=0.05)
+    return ds, q, plan
+
+
+def _arrival_trace(plan, n_req: int, rows_per: int, seed: int):
+    """Poisson arrivals at OVERLOAD x capacity; deadline = SLO_FACTOR x
+    the per-request full-plan cost.  Seeded -> identical every run."""
+    req_ms = plan.est_total_cost * rows_per
+    rng = np.random.RandomState(seed)
+    arrivals = np.cumsum(rng.exponential(req_ms / OVERLOAD, n_req))
+    return arrivals, SLO_FACTOR * req_ms
+
+
+def bench_frontend_goodput(*, n_req: int = 48, rows_per: int = 128,
+                           seed: int = 7, tile: int = 256) -> dict:
+    ds, _q, plan = _workload()
+    arrivals, slo_ms = _arrival_trace(plan, n_req, rows_per, seed)
+    base = 2_000  # request rows drawn past the optimizer's training slice
+
+    def run(backpressure: bool):
+        engine = CascadeServer(plan, tile=tile)
+        fe = ServingFrontEnd(engine, policy=SLOPolicy(
+            degrade=backpressure, shed_expired=backpressure))
+        for r in range(n_req):
+            idx = np.arange(base + r * rows_per, base + (r + 1) * rows_per)
+            fe.submit_request(idx, ds.x[idx], deadline_ms=slo_ms,
+                              arrival_ms=float(arrivals[r]))
+        st = fe.run()
+        ok, why = fe.conserved()
+        lat = [q.latency_ms for q in fe.requests.values() if q.done]
+        return fe, st, ok, why, lat
+
+    fe_on, on, ok_on, why_on, lat_on = run(True)
+    _fe, off, ok_off, why_off, lat_off = run(False)
+    return {
+        "n_requests": n_req,
+        "rows_per_request": rows_per,
+        "slo_ms": float(slo_ms),
+        "arrival_rate_per_s": 1e3 * OVERLOAD / (plan.est_total_cost * rows_per),
+        # ---- backpressure ON (the gated configuration) ----
+        "goodput_ratio": float(on.goodput_ratio),
+        "goodput_rps": float(on.goodput_rps),
+        "throughput_rps": float(on.throughput_rps),
+        "p95_latency_ms": float(np.percentile(lat_on, 95)),
+        "degrades": on.degrades,
+        "restores": on.restores,
+        "records_shed": on.records_shed,
+        "requests_shed": on.requests_shed,
+        # ---- backpressure OFF (the collapse control) ----
+        "goodput_ratio_nobp": float(off.goodput_ratio),
+        "p95_latency_ms_nobp": float(np.percentile(lat_off, 95)),
+        "conserved": int(ok_on and ok_off),
+        "conserved_why": f"on:{why_on};off:{why_off}",
+    }
+
+
+def bench_frontend_sharded(*, seed: int = 41) -> dict:
+    """K=4 fleet, every host submitting through a shed-only front end,
+    drifting stream -> at least one quorum-voted plan swap must commit
+    THROUGH the request path with conservation intact."""
+    ds, q, _plan = _workload(seed)
+    plan = optimize(q, ds.x[:1500], mode="core", step=0.05, keep_state=True)
+    streams = make_sharded_drifting_streams(
+        ds, 4, 800, 2400, shift_targets={0: 2.8, 1: -2.6, 2: 2.8},
+        corr_gain=2.5, drift_skew=0.3, seed=seed)
+    from repro.distributed.serving import ShardedCascadeServer
+
+    srv = ShardedCascadeServer(
+        plan, 4, tile=256, seed=3,
+        policy=AdaptivePolicy(cooldown_records=1024, min_reservoir=128,
+                              threshold=50.0, audit_rate=0.03,
+                              reservoir_capacity=512),
+        slo_ms=1e6)  # generous SLO: the gate here is composition, not shed
+    for h in srv.hosts:
+        h.track_versions = True
+    st = srv.run_streams([s.x for s in streams], chunk=400)
+    shed = sum(f.records_shed for f in st.frontend_stats)
+    conserved = st.submitted == st.emitted + st.rejected + shed
+    for h in srv.hosts:
+        ok, _why = h.frontend.conserved()
+        conserved = conserved and ok and h.engine.in_flight() == 0
+        for i, v in zip(h.engine.emitted, h.engine.emitted_versions):
+            # emitted under the version current at submission — the swap
+            # happened mid-request-stream, so this is the cross-check
+            conserved = conserved and h.submit_version.get(i) == v
+    return {
+        "swaps_committed": st.swaps_committed,
+        "final_epoch": st.final_epoch,
+        "records_shed": shed,
+        "fleet_goodput_ratio": float(st.fleet_goodput_ratio),
+        "conserved": int(conserved),
+    }
+
+
+def run(quick: bool = True):
+    from benchmarks.common import csv_row
+
+    out = bench_frontend_goodput(n_req=32 if quick else 48)
+    csv_row(
+        "serving_frontend_goodput", out["goodput_ratio"],
+        (
+            f"nobp={out['goodput_ratio_nobp']:.2f};"
+            f"slo={out['slo_ms']:.0f}ms;degr={out['degrades']};"
+            f"shed={out['records_shed']};p95={out['p95_latency_ms']:.0f}ms"
+        ),
+    )
+    sh = bench_frontend_sharded()
+    csv_row(
+        "serving_frontend_sharded", float(sh["swaps_committed"]),
+        (
+            f"epoch={sh['final_epoch']};conserved={sh['conserved']};"
+            f"fleet_gr={sh['fleet_goodput_ratio']:.2f}"
+        ),
+    )
+    out["sharded"] = sh
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    import sys
+    from pathlib import Path
+
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    print(json.dumps(run(quick="--quick" in sys.argv[1:]), indent=2))

@@ -1,13 +1,16 @@
 """CI regression gate for the fused proxy-scoring hot path, the adaptive
-serving loop, K=4 sharded serving, the fault-tolerance scenarios, and
-the quantized packed cascade.
+serving loop, K=4 sharded serving, the fault-tolerance scenarios, the
+quantized packed cascade, and the SLO-aware serving front end.
 
 Runs the components benchmark's proxy-throughput measurement, the
 drifting-stream adaptive-serving benchmark, the K=4 quorum-swap fleet
 benchmark, the three fault-tolerance scenarios (coordinator failover
-mid-epoch, straggler fencing, pooled-kappa² escalation), and the
+mid-epoch, straggler fencing, pooled-kappa² escalation), the
 quantized-cascade benchmark (int8 bytes-moved speedup, decision-flip
-parity, autotune sweep), writes ``BENCH_components.json`` at the repo
+parity, autotune sweep), and the serving-front-end goodput benchmark
+(SLO goodput under overload with backpressure on vs the no-backpressure
+collapse control, plus conservation through a K=4 quorum swap),
+writes ``BENCH_components.json`` at the repo
 root plus the autotune sweep table under ``results/autotune_sweep.json``
 (the nightly CI artifact), prints a unified **before/after delta table**
 for every gated metric (baseline recorded value vs this run, floor,
@@ -34,7 +37,7 @@ are reported but do not fail the process.
 Env overrides: REGRESSION_MIN_ROWS_PER_S, REGRESSION_MIN_SPEEDUP,
 REGRESSION_MIN_MLP_SPEEDUP, REGRESSION_MIN_ADAPTIVE_SPEEDUP,
 REGRESSION_MIN_SHARDED_SPEEDUP, REGRESSION_MAX_CONSENSUS_MS,
-REGRESSION_MIN_QUANT_SPEEDUP.
+REGRESSION_MIN_QUANT_SPEEDUP, REGRESSION_MIN_GOODPUT_RATIO.
 """
 from __future__ import annotations
 
@@ -55,6 +58,10 @@ from benchmarks.bench_components import (  # noqa: E402
     write_bench_json,
 )
 from benchmarks.bench_quant import SWEEP_JSON, bench_quant  # noqa: E402
+from benchmarks.bench_serving_frontend import (  # noqa: E402
+    bench_frontend_goodput,
+    bench_frontend_sharded,
+)
 from benchmarks.bench_sharded import (  # noqa: E402
     bench_fault_tolerance,
     bench_sharded_throughput,
@@ -148,9 +155,14 @@ def main(argv=None) -> int:
     # fixed-seed fixed-size scenarios: deterministic in --quick and full
     ft = bench_fault_tolerance()
     quant = bench_quant()
+    # cost-model clock + seeded trace: deterministic per host; --quick
+    # shortens the trace, both lengths sit well inside the gates
+    fe = bench_frontend_goodput(n_req=32 if quick else 48)
+    fes = bench_frontend_sharded()
     write_bench_json(throughput, adaptive, mlp, sharded, fault_tolerance=ft,
                      quant={k: v for k, v in quant.items()
-                            if k != "sweep_rows"})
+                            if k != "sweep_rows"},
+                     frontend={**fe, "sharded": fes})
     print(f"wrote {BENCH_JSON}")
     SWEEP_JSON.parent.mkdir(parents=True, exist_ok=True)
     SWEEP_JSON.write_text(json.dumps(
@@ -176,6 +188,9 @@ def main(argv=None) -> int:
     min_quant = float(os.environ.get(
         "REGRESSION_MIN_QUANT_SPEEDUP", base["min_quant_speedup"]))
     max_quant_acc_delta = float(base["max_quant_accuracy_delta"])
+    min_goodput = float(os.environ.get(
+        "REGRESSION_MIN_GOODPUT_RATIO", base["min_goodput_ratio"]))
+    max_goodput_nobp = float(base["max_goodput_ratio_nobp"])
 
     worst_consensus = max(sharded["consensus_ms_per_swap"] or [0.0])
     fo, strag, pooled = (ft["failover"], ft["straggler"], ft["pooled_kappa"])
@@ -276,6 +291,26 @@ def main(argv=None) -> int:
              record_key="recorded_autotune_wins"),
         Gate("autotune_cache_hit", float(quant["autotune_cache_hit"]),
              1.0, 1.0, fmt="{:.0f}"),
+        # ----- SLO-aware serving front end (cost-model clock; see
+        # ----- bench_serving_frontend.py for the trace construction) -----
+        Gate("goodput_ratio", fe["goodput_ratio"], min_goodput,
+             base.get("recorded_goodput_ratio"), fmt="{:.3f}",
+             record_key="recorded_goodput_ratio"),
+        Gate("goodput_ratio_nobp", fe["goodput_ratio_nobp"],
+             max_goodput_nobp, base.get("recorded_goodput_ratio_nobp"),
+             higher_is_better=False, fmt="{:.3f}",
+             record_key="recorded_goodput_ratio_nobp"),
+        Gate("frontend_conserved", float(fe["conserved"]), 1.0, 1.0,
+             fmt="{:.0f}"),
+        Gate("frontend_p95_latency_ms", fe["p95_latency_ms"], None, None,
+             fmt="{:.0f}"),
+        Gate("frontend_records_shed", float(fe["records_shed"]), None, None,
+             fmt="{:.0f}"),
+        Gate("frontend_sharded_swaps", float(fes["swaps_committed"]), 1.0,
+             base.get("recorded_frontend_sharded_swaps"), fmt="{:.0f}",
+             record_key="recorded_frontend_sharded_swaps"),
+        Gate("frontend_sharded_conserved", float(fes["conserved"]), 1.0,
+             1.0, fmt="{:.0f}"),
     ]
 
     _print_delta_table(gates)
@@ -314,7 +349,9 @@ def main(argv=None) -> int:
         f"votes; quant {quant['quant_fused_speedup']:.2f}x bytes-moved, "
         f"parity {'OK' if quant['parity']['flips_within_tol'] else 'FAIL'}, "
         f"autotune {quant['autotune_wins']}/{quant['autotune_shapes']} "
-        f"shapes"
+        f"shapes; frontend goodput {fe['goodput_ratio']:.3f} "
+        f"(nobp {fe['goodput_ratio_nobp']:.3f}), sharded swaps "
+        f"{fes['swaps_committed']} conserved={fes['conserved']}"
     )
     return 0
 

@@ -548,6 +548,33 @@ class QuorumSwapCoordinator:
         self._kappa_baseline = None
         self._pooled_fired = False
 
+    # ----------------------------------------------------- standby re-arm
+    def snapshot_deltas(self) -> List[StateDelta]:
+        """Serialize the CURRENT protocol state as an ordered delta replay
+        — applying these to a fresh ``StandbyCoordinator`` reconstructs
+        exactly the mirror an always-attached standby would hold.  Used to
+        re-arm replication after a failover (the promoted coordinator
+        would otherwise run unreplicated forever): register a new standby,
+        replay this snapshot through the normal replication channel, then
+        point ``replicate`` at it for live deltas."""
+        deltas: List[StateDelta] = []
+        if self.epoch > 0:
+            deltas.append(StateDelta(kind="commit", epoch=self.epoch,
+                                     artifact=self.last_artifact))
+        for host in sorted(self.fenced):
+            deltas.append(StateDelta(kind="fence", epoch=self.epoch,
+                                     host=host))
+        for host in sorted(self._votes):
+            deltas.append(StateDelta(kind="vote", epoch=self.epoch,
+                                     host=host))
+        if self.pending is not None:
+            deltas.append(StateDelta(kind="prepare", epoch=self.pending.epoch,
+                                     artifact=self.pending.artifact))
+            for host in sorted(self._acks):
+                deltas.append(StateDelta(kind="ack",
+                                         epoch=self.pending.epoch, host=host))
+        return deltas
+
     # ------------------------------------------------------------- stats
     @property
     def swaps_committed(self) -> int:

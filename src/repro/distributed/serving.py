@@ -44,6 +44,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -81,9 +82,20 @@ class ShardedServeStats:
     # ----- fault tolerance -----
     failovers: int = 0
     failover_resolution: str = ""  # "completed" | "aborted" | "idle"
+    standby_rearms: int = 0  # fresh standbys registered after a failover
     fences: int = 0  # hosts fenced out of a barrier (stragglers)
     resyncs: int = 0  # COREWIRE catch-up installs on rejoin
     pooled_swaps: int = 0  # swaps initiated by pooled kappa² evidence
+    # ----- request front end (slo_ms set): per-host FrontEndStats -----
+    frontend_stats: List = field(default_factory=list)
+
+    @property
+    def fleet_goodput_ratio(self) -> float:
+        """Fleet-level goodput / throughput: requests that met their SLO
+        over requests completed, summed across every host's front end."""
+        done = sum(f.requests_done for f in self.frontend_stats)
+        met = sum(f.requests_met_slo for f in self.frontend_stats)
+        return met / done if done else 0.0
 
     @property
     def submitted(self) -> int:
@@ -122,7 +134,8 @@ class ShardHost:
     triggers are exported as votes, plus the two-phase staging slot."""
 
     def __init__(self, host_id: int, plan: PhysicalPlan, *, tile: int,
-                 policy: AdaptivePolicy, seed: int, use_kernel: bool = True):
+                 policy: AdaptivePolicy, seed: int, use_kernel: bool = True,
+                 slo_ms: Optional[float] = None):
         self.host_id = host_id
         self.engine = CascadeServer(
             plan, tile=tile, use_kernel=use_kernel, adaptive=True,
@@ -137,21 +150,59 @@ class ShardHost:
         # (None until a test enables tracking; kept off the hot path)
         self.track_versions = False
         self.submit_version: Dict[int, int] = {}
+        # request front end (DESIGN.md §7): with an SLO every chunk
+        # becomes a deadline-carrying request through the batching loop.
+        # Backpressure is SHED-ONLY here: plan versions are pinned to
+        # quorum epochs, so a host-local degrade install would break the
+        # fleet's epoch ordering (coordinator-priced degrades are the
+        # filed follow-up) — but deadline shedding and per-request
+        # goodput accounting work unchanged.
+        self.frontend = None
+        if slo_ms is not None:
+            from repro.serving.frontend import ServingFrontEnd, SLOPolicy
 
-    # ------------------------------------------------------------- serving
-    def submit_chunk(self, indices: np.ndarray, rows: np.ndarray) -> None:
+            self.slo_ms = float(slo_ms)
+            self.frontend = ServingFrontEnd(
+                self.engine, policy=SLOPolicy(degrade=False))
+            # version tracking must stamp at ACTUAL engine submission —
+            # the front end's batching loop can hold a chunk's tail rows
+            # across an epoch install, and those legitimately run (and
+            # emit) under the newer pinned version
+            self.frontend.add_submit_hook(self._note_submit_versions)
+
+    def _note_submit_versions(self, indices) -> None:
         if self.track_versions:
             v = self.engine.plan_version
             for i in indices:
                 self.submit_version[int(i)] = v
-        self.engine.submit(indices, rows)
-        self.engine.pump()
+
+    # ------------------------------------------------------------- serving
+    def submit_chunk(self, indices: np.ndarray, rows: np.ndarray) -> None:
+        if self.track_versions and self.frontend is None:
+            v = self.engine.plan_version
+            for i in indices:
+                self.submit_version[int(i)] = v
+        if self.frontend is not None:
+            fe = self.frontend
+            fe.submit_request(indices, rows, deadline_ms=self.slo_ms,
+                              arrival_ms=fe.now_ms)
+            fe.step()
+        else:
+            self.engine.submit(indices, rows)
+            self.engine.pump()
         self.submitted += len(rows)
 
     def drain(self) -> ServeStats:
-        self.engine.pump(drain=True)
+        if self.frontend is not None:
+            while self.frontend.step():
+                pass
+            self.frontend.drain()
+        else:
+            self.engine.pump(drain=True)
         st = self.engine.stats
-        st.rejected = self.submitted - st.emitted
+        shed = (self.frontend.stats.records_shed
+                if self.frontend is not None else 0)
+        st.rejected = self.submitted - st.emitted - shed
         return st
 
     # -------------------------------------------------------------- voting
@@ -321,6 +372,10 @@ class _ThreadHost:
     def submit_version(self) -> Dict[int, int]:
         return self._host.submit_version
 
+    @property
+    def frontend(self):
+        return self._host.frontend
+
     def submit_chunk(self, indices, rows):
         return self._call(self._host.submit_chunk, indices, rows)
 
@@ -398,20 +453,33 @@ class ShardedCascadeServer:
                  straggler_policy: str = "fence",
                  ack_deadline_s: float = 30.0,
                  heartbeat_rounds: float = 1.5,
-                 worker_spec: Optional[dict] = None):
+                 worker_spec: Optional[dict] = None,
+                 slo_ms: Optional[float] = None):
         if transport not in ("inline", "thread", "process"):
             raise ValueError(f"unknown transport {transport!r}")
+        if slo_ms is not None and transport == "process":
+            raise ValueError(
+                "slo_ms needs the request front end on the host engine; "
+                "the process worker protocol does not carry it yet")
         if straggler_policy not in ("fence", "nack"):
             raise ValueError(f"unknown straggler policy {straggler_policy!r}")
-        if kill_coordinator_at is not None \
-                and kill_coordinator_at not in ("prepare", "commit",
-                                                "mid-commit") \
-                and not isinstance(kill_coordinator_at, int):
-            # a typo here would silently disable the failure injection —
-            # a fault-tolerance test would then pass exercising nothing
-            raise ValueError(
-                f"unknown kill point {kill_coordinator_at!r}: expected "
-                f"'prepare' | 'commit' | 'mid-commit' | record count")
+        # one kill point, or a sequence of them: each consumed in order,
+        # so a SECOND primary death after the first failover (served by
+        # the re-armed standby) is injectable too
+        if kill_coordinator_at is None:
+            kill_points: Tuple = ()
+        elif isinstance(kill_coordinator_at, (list, tuple)):
+            kill_points = tuple(kill_coordinator_at)
+        else:
+            kill_points = (kill_coordinator_at,)
+        for kp in kill_points:
+            if kp not in ("prepare", "commit", "mid-commit") \
+                    and not isinstance(kp, int):
+                # a typo here would silently disable the failure injection —
+                # a fault-tolerance test would then pass exercising nothing
+                raise ValueError(
+                    f"unknown kill point {kp!r}: expected "
+                    f"'prepare' | 'commit' | 'mid-commit' | record count")
         self.n_hosts = int(n_hosts)
         self.policy = policy or AdaptivePolicy()
         self.plan0 = plan
@@ -423,7 +491,7 @@ class ShardedCascadeServer:
         # the start (it still serves its shard); its link heals right
         # after the first barrier it goes missing from — see _finish_swap
         self._straggler_pending = straggler_host
-        self._kill_at = kill_coordinator_at
+        self._kill_queue: deque = deque(kill_points)
         self._silent: Set[int] = (
             set() if straggler_host is None else {int(straggler_host)})
         self._primary_alive = True
@@ -435,6 +503,7 @@ class ShardedCascadeServer:
             max_tile=max_tile, kappa_tol=self.policy.kappa_tol,
             kappa_pool_baseline=self.policy.kappa_pool_baseline,
         )
+        self._coord_kw = coord_kw  # standby re-construction after failover
         self.standby = (StandbyCoordinator(plan, self.n_hosts, **coord_kw)
                         if standby else None)
         self.coordinator = QuorumSwapCoordinator(
@@ -465,7 +534,8 @@ class ShardedCascadeServer:
         else:
             hosts = [
                 ShardHost(k, plan, tile=tile, policy=self.policy,
-                          seed=seed + 1000 * k, use_kernel=use_kernel)
+                          seed=seed + 1000 * k, use_kernel=use_kernel,
+                          slo_ms=slo_ms)
                 for k in range(self.n_hosts)
             ]
             self.hosts = (
@@ -519,10 +589,11 @@ class ShardedCascadeServer:
         deployment loses it, which is why the standby mirrors state)."""
         self._swap_log_prefix.extend(self.coordinator.swap_log)
         self._primary_alive = False
-        self._kill_at = None
 
     def _consume_kill(self, point: str) -> bool:
-        if self._kill_at == point:
+        if self._primary_alive and self._kill_queue \
+                and self._kill_queue[0] == point:
+            self._kill_queue.popleft()
             self._kill_primary()
             return True
         return False
@@ -531,11 +602,23 @@ class ShardedCascadeServer:
         coord, resolution = self.standby.take_over(
             self.hosts, unreachable=set(self._silent))
         self.coordinator = coord
-        self.standby = None  # one standby in the sim; a fleet would re-elect
         self._primary_alive = True
         self._hb.beat("coordinator")
         self.stats.failovers += 1
         self.stats.failover_resolution = resolution
+        # re-arm replication: a promoted coordinator must not run
+        # unreplicated forever.  Register a fresh standby (in a real
+        # fleet: re-elected from the active host set), replay the
+        # promoted coordinator's state snapshot through the same COREWIRE
+        # delta channel live deltas use, then attach it — a SECOND
+        # primary loss after this failover resolves exactly like the
+        # first (completes or cleanly aborts any in-flight epoch).
+        self.standby = StandbyCoordinator(self.plan0, self.n_hosts,
+                                          **self._coord_kw)
+        for delta in coord.snapshot_deltas():
+            self._replicate(delta)
+        coord.replicate = self._replicate
+        self.stats.standby_rearms += 1
 
     # ------------------------------------------------------------ protocol
     def _reachable(self, h) -> bool:
@@ -688,8 +771,10 @@ class ShardedCascadeServer:
                 hi = min(lo + chunk, len(streams[k]))
                 h.submit_chunk(idx_map[k][lo:hi], streams[k][lo:hi])
                 pos[k] = hi
-            if isinstance(self._kill_at, int) and self._primary_alive \
-                    and sum(h.submitted for h in self.hosts) >= self._kill_at:
+            if self._primary_alive and self._kill_queue \
+                    and isinstance(self._kill_queue[0], int) \
+                    and sum(h.submitted for h in self.hosts) >= self._kill_queue[0]:
+                self._kill_queue.popleft()
                 self._kill_primary()
             if self._primary_alive:
                 self._handle_votes()
@@ -707,6 +792,8 @@ class ShardedCascadeServer:
         for k, h in enumerate(self.hosts):
             h.drain()
             self.stats.submitted_per_host[k] = h.submitted
+            if getattr(h, "frontend", None) is not None:
+                self.stats.frontend_stats.append(h.frontend.stats)
         self.stats.final_epoch = self.coordinator.epoch
         self.stats.swap_log = (list(self._swap_log_prefix)
                                + list(self.coordinator.swap_log))

@@ -180,43 +180,81 @@ def _disk_path() -> Optional[str]:
     return os.environ.get("CORE_AUTOTUNE_CACHE") or None
 
 
+def _read_disk_table(path: str) -> dict:
+    """Parse the on-disk table into {key tuple: TunedConfig}.  A corrupt,
+    partial, or wrong-schema file (a concurrent writer died mid-write
+    before the save path became atomic, or the user pointed
+    ``CORE_AUTOTUNE_CACHE`` at an unrelated file) yields {} with a
+    warning — the sweep is cheap, silently-poisoned configs are not."""
+    table: dict = {}
+    if not os.path.exists(path):
+        return table
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+        for key_s, cfg in raw.items():
+            table[tuple(json.loads(key_s))] = TunedConfig(
+                block_m=int(cfg["block_m"]), dtype=str(cfg["dtype"]),
+                t_model_s=float(cfg["t_model_s"]),
+                bytes_moved=int(cfg["bytes_moved"]), mbu=float(cfg["mbu"]),
+                static_block_m=int(cfg["static_block_m"]), source="cache")
+    except (OSError, ValueError, KeyError, TypeError):
+        import warnings
+
+        warnings.warn(
+            f"CORE_AUTOTUNE_CACHE at {path!r} is corrupt or partial; "
+            f"ignoring it and falling back to a fresh sweep",
+            RuntimeWarning, stacklevel=3)
+        return {}
+    return table
+
+
 def _load_disk_cache() -> None:
     global _DISK_LOADED
     _DISK_LOADED = True
     path = _disk_path()
-    if not path or not os.path.exists(path):
+    if not path:
         return
-    try:
-        with open(path) as f:
-            table = json.load(f)
-    except (OSError, ValueError):
-        return
-    for key_s, cfg in table.items():
-        key = tuple(json.loads(key_s))
-        _CACHE.setdefault(key, TunedConfig(
-            block_m=int(cfg["block_m"]), dtype=str(cfg["dtype"]),
-            t_model_s=float(cfg["t_model_s"]),
-            bytes_moved=int(cfg["bytes_moved"]), mbu=float(cfg["mbu"]),
-            static_block_m=int(cfg["static_block_m"]), source="cache"))
+    for key, cfg in _read_disk_table(path).items():
+        _CACHE.setdefault(key, cfg)
 
 
 def _save_disk_cache() -> None:
+    """Persist the in-memory table: merge-on-save + atomic replace.
+
+    K subprocess hosts all point at one cache file, so the naive
+    ``open(path, "w")`` had two failure modes: interleaved writes could
+    corrupt the JSON, and a host that swept shape A would clobber the
+    entries a peer had just saved for shape B (last writer wins on the
+    WHOLE table).  Re-reading the file immediately before writing keeps
+    peers' fresh entries (our in-memory values win only for keys we hold
+    — both sides swept the same deterministic model, so ties are
+    identical anyway), and writing via a same-directory temp file +
+    ``os.replace`` makes the publish atomic: readers see the old table
+    or the new one, never a torn prefix."""
     path = _disk_path()
     if not path:
         return
+    merged = _read_disk_table(path)
+    merged.update(_CACHE)
     table = {
         json.dumps(list(k)): {
             "block_m": v.block_m, "dtype": v.dtype,
             "t_model_s": v.t_model_s, "bytes_moved": v.bytes_moved,
             "mbu": v.mbu, "static_block_m": v.static_block_m,
         }
-        for k, v in _CACHE.items()
+        for k, v in merged.items()
     }
+    tmp = f"{path}.tmp.{os.getpid()}"
     try:
-        with open(path, "w") as f:
+        with open(tmp, "w") as f:
             json.dump(table, f, indent=0, sort_keys=True)
+        os.replace(tmp, path)
     except OSError:
-        pass
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
 
 
 def choose_block_m(n_features: int, hp: int, n_proxies: int,

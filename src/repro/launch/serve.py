@@ -69,6 +69,23 @@ def main():
                     help="failure injection: this host misses the first "
                          "prepare barrier; the fleet commits without it "
                          "(serve-behind fencing) and re-syncs it on rejoin")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="serve through the SLO-aware request front end "
+                         "(DESIGN.md §7): the stream becomes deadline-"
+                         "carrying requests, goodput (requests/s meeting "
+                         "the SLO) is reported next to raw throughput, "
+                         "and backpressure degrades to cheaper plans / "
+                         "sheds expired work instead of queueing forever")
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="request arrivals per cost-model second (Poisson; "
+                         "default ~1.3x the full plan's capacity, i.e. "
+                         "mild overload so the backpressure policy has "
+                         "something to do); needs --slo-ms")
+    ap.add_argument("--request-rows", type=int, default=128,
+                    help="records per request on the front-end path")
+    ap.add_argument("--no-backpressure", action="store_true",
+                    help="disable degrade + shedding on the front end "
+                         "(watch the latency collapse under overload)")
     args = ap.parse_args()
 
     ds = make_dataset(n=args.n, correlation=args.correlation, seed=args.seed)
@@ -101,6 +118,10 @@ def main():
 
     if args.hosts > 1:
         _serve_sharded(args, ds, q, plan)
+        return
+
+    if args.slo_ms is not None:
+        _serve_frontend(args, ds, plan, k)
         return
 
     if args.drift:
@@ -139,6 +160,56 @@ def main():
     print(f"cost model: {stats.model_cost_ms / len(x_serve):.3f} ms/rec "
           f"(ORIG {orig_res.cost_per_record(len(x_serve)):.3f}); "
           f"served accuracy {served_acc:.3f}")
+
+
+def _serve_frontend(args, ds, plan, k):
+    """Single-host serving through the SLO-aware request front end: the
+    held-out stream arrives as Poisson requests with per-request
+    deadlines; goodput is reported next to raw throughput (DESIGN.md
+    §7).  All timing is the cost-model clock, so runs are deterministic
+    for a fixed seed."""
+    import numpy as np
+
+    from repro.serving.frontend import ServingFrontEnd, SLOPolicy
+
+    held = ds.x[k:]
+    rows_per = max(1, args.request_rows)
+    n_req = len(held) // rows_per
+    if n_req == 0:
+        raise SystemExit(f"--request-rows {rows_per} larger than the "
+                         f"held-out stream ({len(held)} rows)")
+    # capacity on the cost-model clock: the plan's Eq. 3.1 estimate says
+    # one request costs est_total_cost * rows_per ms at the full plan
+    req_ms = plan.est_total_cost * rows_per
+    rate = args.arrival_rate or 1.3 / (req_ms / 1e3)
+    rng = np.random.RandomState(args.seed)
+    arrivals = np.cumsum(rng.exponential(1e3 / rate, n_req))
+    bp = not args.no_backpressure
+    server = CascadeServer(plan, tile=args.tile, use_kernel=True,
+                           seed=args.seed)
+    fe = ServingFrontEnd(server, policy=SLOPolicy(degrade=bp,
+                                                  shed_expired=bp))
+    for r in range(n_req):
+        idx = np.arange(k + r * rows_per, k + (r + 1) * rows_per)
+        fe.submit_request(idx, ds.x[idx], deadline_ms=args.slo_ms,
+                          arrival_ms=float(arrivals[r]))
+    st = fe.run()
+    ok, msg = fe.conserved()
+    lat = [r.latency_ms for r in fe.requests.values() if r.done]
+    print(f"\nfront end: {st.requests_total} requests x {rows_per} rows, "
+          f"SLO {args.slo_ms:.0f} ms, arrivals {rate:.2f} req/s "
+          f"(backpressure {'on' if bp else 'OFF'})")
+    print(f"goodput {st.goodput_rps:.2f} req/s vs throughput "
+          f"{st.throughput_rps:.2f} req/s (ratio {st.goodput_ratio:.3f}); "
+          f"p50/p95 latency {np.percentile(lat, 50):.0f}/"
+          f"{np.percentile(lat, 95):.0f} ms")
+    print(f"backpressure: {st.degrades} degrade(s), {st.restores} "
+          f"restore(s), final ladder level {st.final_level}; shed "
+          f"{st.records_shed} records across {st.requests_shed} "
+          f"request(s) [explicit, never silent]")
+    print(f"records: {st.records_submitted} submitted -> "
+          f"{st.records_emitted} emitted + {st.records_rejected} "
+          f"rejected; conservation {'OK' if ok else 'VIOLATED: ' + msg}")
 
 
 def _serve_sharded(args, ds, q, plan):
@@ -198,7 +269,8 @@ def _serve_sharded(args, ds, q, plan):
                                policy=policy, transport=args.transport,
                                kill_coordinator_at=kill_at,
                                straggler_host=args.straggler_host,
-                               worker_spec=worker_spec)
+                               worker_spec=worker_spec,
+                               slo_ms=args.slo_ms)
     stats = srv.run_streams(xs)
     x_all = np.concatenate(xs)
     orig_res = execute_plan(orig_plan(q), x_all)
@@ -214,6 +286,11 @@ def _serve_sharded(args, ds, q, plan):
           f"(+{stats.swaps_aborted} aborted), final epoch "
           f"{stats.final_epoch}, protocol overhead "
           f"{stats.consensus_ms_total:.1f} ms total")
+    if stats.frontend_stats:
+        shed = sum(f.records_shed for f in stats.frontend_stats)
+        print(f"request front end: fleet goodput ratio "
+              f"{stats.fleet_goodput_ratio:.3f} at SLO {args.slo_ms:.0f} ms "
+              f"(shed-only backpressure; {shed} record(s) shed)")
     if stats.failovers or stats.fences or stats.resyncs or stats.pooled_swaps:
         print(f"fault tolerance: {stats.failovers} failover(s) "
               f"({stats.failover_resolution or 'n/a'}), {stats.fences} "

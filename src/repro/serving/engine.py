@@ -205,6 +205,11 @@ class CascadeServer:
         self._records_submitted = 0
         self._last_swap_at = 0
         self._drift: Optional[Tuple[str, float, float]] = None
+        # record-finalization hooks (the serving front end's completion
+        # attribution): fn(emitted_ids, rejected_ids, plan_version) fires
+        # once per executed stage batch with the indices that left the
+        # pipeline there — emitted at the last stage, rejected anywhere
+        self._finalize_hooks: List = []
 
     # ------------------------------------------------------------ versioning
     @property
@@ -294,7 +299,30 @@ class CascadeServer:
         return sum(len(q) for s in self._states for q in s.queues)
 
     # ------------------------------------------------------------- plumbing
+    def add_finalize_hook(self, fn) -> None:
+        """Register ``fn(emitted_ids, rejected_ids, plan_version)`` to be
+        called whenever records leave the pipeline (emitted from the last
+        stage, or rejected by a proxy gate / predicate at any stage).
+        Every submitted record is reported to the hooks exactly once —
+        the serving front end leans on this for per-request completion
+        latency attribution (DESIGN.md §7)."""
+        self._finalize_hooks.append(fn)
+
+    def _notify_finalized(self, emitted: List[int], rejected: List[int],
+                          version: int) -> None:
+        if not self._finalize_hooks or not (emitted or rejected):
+            return
+        for fn in self._finalize_hooks:
+            fn(emitted, rejected, version)
+
     def submit(self, indices: np.ndarray, rows: np.ndarray):
+        if len(rows) == 0:
+            # short-circuit: the front end's batching loop ticks on every
+            # arrival-poll, so idle ticks would otherwise still walk the
+            # zip-append path and count into ``_records_submitted`` (whose
+            # delta since the last swap feeds the ``_may_trigger``
+            # cooldown arithmetic) — an empty submission must be a no-op
+            return
         cur = self._states[-1]
         rows = np.asarray(rows, np.float32)
         margins = None
@@ -384,6 +412,7 @@ class CascadeServer:
         mrows = [b[2] for b in batch]
         self.stats.stage_in[si] += len(batch)
         n_enter = len(batch)
+        rejected_ids: List[int] = []
         if stage.proxy is not None:
             t0 = time.perf_counter()
             col = state.cascade.stage_cols[si] if state.cascade is not None else None
@@ -398,10 +427,12 @@ class CascadeServer:
                 keep = stage.proxy.score(x) >= stage.threshold
             self.stats.stage_proxy_ms[si] += (time.perf_counter() - t0) * 1e3
             self.stats.model_cost_ms += len(x) * stage.proxy.cost
+            rejected_ids.extend(int(i) for i in idxs[~keep])
             idxs, x = idxs[keep], x[keep]
             mrows = [m for m, k in zip(mrows, keep) if k]
         if len(idxs) == 0:
             self._note_stage_outcome(state, si, 0, n_enter)
+            self._notify_finalized([], rejected_ids, state.version)
             return
         pred = state.plan.query.predicates[stage.pred_idx]
         labels = pred.udf(x)
@@ -409,16 +440,20 @@ class CascadeServer:
         self.stats.stage_udf_batches[si] += 1
         passed = pred.evaluate(labels)
         self.stats.stage_kept[si] += int(passed.sum())
+        rejected_ids.extend(int(i) for i in idxs[~passed])
         survivors = [
             (int(i), r, m) for i, r, m, p in zip(idxs, x, mrows, passed) if p
         ]
         self._note_stage_outcome(state, si, len(survivors), n_enter)
+        emitted_ids: List[int] = []
         if si + 1 < len(state.plan.stages):
             state.queues[si + 1].extend(survivors)
         else:
-            self.emitted.extend(i for i, _, _ in survivors)
+            emitted_ids = [i for i, _, _ in survivors]
+            self.emitted.extend(emitted_ids)
             self.emitted_versions.extend([state.version] * len(survivors))
             self.stats.emitted += len(survivors)
+        self._notify_finalized(emitted_ids, rejected_ids, state.version)
 
     def _note_stage_outcome(self, state: _PlanState, si: int, kept: int,
                             seen: int):

@@ -1,0 +1,248 @@
+"""SLO-aware serving front end (DESIGN.md §7): conservation under random
+arrivals/deadlines with a mid-stream plan hot-swap (property-style),
+explicit deadline shedding, degrade-ladder pricing, goodput accounting,
+and the ingestion guards (duplicate indices, zero-row requests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import optimize
+from repro.core.cost import plan_cost
+from repro.data.synthetic import make_dataset, make_query, make_udfs
+from repro.serving.engine import CascadeServer
+from repro.serving.frontend import (
+    ServingFrontEnd,
+    SLOPolicy,
+    degrade_ladder,
+)
+
+
+@pytest.fixture(scope="module")
+def fe_workload():
+    ds = make_dataset(n=8000, correlation=0.85, feature_noise=1.0, seed=11)
+    udfs = make_udfs(ds, hidden=32, depth=1, train_rows=1500, seed=11,
+                     declared_cost_ms=5.0)
+    q = make_query(ds, udfs, columns=[0, 1], target_selectivity=0.5, seed=12)
+    plan = optimize(q, ds.x[:1200], mode="core-a", step=0.05)
+    return ds, plan
+
+
+def _requests(fe, ds, rng, n_req, slo_factor, base=2000):
+    """Enqueue n_req random-size requests with Poisson-ish arrivals;
+    deadline scales with each request's own full-plan cost."""
+    taken = 0
+    req_ms = fe.engine.plan.est_total_cost
+    arrival = 0.0
+    for _ in range(n_req):
+        rows = int(rng.randint(1, 220))
+        idx = np.arange(base + taken, base + taken + rows)
+        taken += rows
+        arrival += float(rng.exponential(req_ms * rows))
+        fe.submit_request(idx, ds.x[idx],
+                          deadline_ms=float(slo_factor * req_ms * rows),
+                          arrival_ms=arrival)
+
+
+# --------------------------------------------------- conservation (property)
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10_000), slo_factor=st.floats(0.4, 4.0),
+       swap=st.booleans())
+def test_frontend_conservation_property(fe_workload, seed, slo_factor, swap):
+    """Acceptance invariant: for ANY arrival pattern, deadline budget,
+    and one mid-stream plan hot-swap, every record ends in exactly one of
+    {emitted, rejected, explicitly shed}; no shed record is ever emitted;
+    the engine pipeline is empty after drain.  Tight slo_factor draws
+    force real shedding, loose ones force full service — both sides of
+    the policy must conserve."""
+    ds, plan = fe_workload
+    rng = np.random.RandomState(seed)
+    engine = CascadeServer(plan, tile=128, use_kernel=False)
+    fe = ServingFrontEnd(engine)
+    _requests(fe, ds, rng, n_req=int(rng.randint(3, 9)),
+              slo_factor=slo_factor)
+    swapped = degrade_ladder(plan)[1] if swap else None
+    steps = 0
+    while fe.step():
+        steps += 1
+        if swapped is not None and steps == 2:
+            # external (e.g. quorum-decided) install, not a ladder move:
+            # in-flight rows finish under the version that scored them
+            engine.install_plan(swapped)
+            fe.on_external_swap()
+            swapped = None
+    fe.drain()
+    ok, why = fe.conserved()
+    assert ok, why
+    assert engine.in_flight() == 0
+    emitted = set(engine.emitted)
+    assert len(emitted) == len(engine.emitted)  # emitted-uniqueness
+    n_total = emitted_total = shed_total = 0
+    for req in fe.requests.values():
+        assert req.done, f"rid {req.rid} never finished"
+        assert req.cursor == req.n
+        assert req.submitted == req.emitted + req.rejected
+        assert not (set(req.shed_ids) & emitted)
+        n_total += req.n
+        emitted_total += req.emitted
+        shed_total += req.shed
+    assert n_total == fe.stats.records_submitted + fe.stats.records_shed
+    assert emitted_total == len(emitted)
+    assert shed_total == fe.stats.records_shed
+
+
+# ----------------------------------------------------------------- shedding
+def test_frontend_sheds_expired_explicitly(fe_workload):
+    """An impossible deadline is shed (reported, never silently dropped)
+    and the request still completes — as an explicit SLO miss."""
+    ds, plan = fe_workload
+    engine = CascadeServer(plan, tile=128, use_kernel=False)
+    fe = ServingFrontEnd(engine)
+    idx = np.arange(2000, 2600)
+    # the backlog request saturates the queue; the victim's deadline is
+    # far below one row's service time so its tail must be shed
+    fe.submit_request(idx, ds.x[idx],
+                      deadline_ms=plan.est_total_cost * len(idx) * 10,
+                      arrival_ms=0.0)
+    vic = np.arange(2600, 2900)
+    rid = fe.submit_request(vic, ds.x[vic], deadline_ms=1e-3,
+                            arrival_ms=0.0)
+    fe.run()
+    ok, why = fe.conserved()
+    assert ok, why
+    victim = fe.requests[rid]
+    assert victim.done and victim.shed > 0
+    assert not victim.met_slo  # shed work is an explicit miss
+    assert fe.stats.requests_shed >= 1
+    assert fe.stats.records_shed == victim.shed
+    assert not (set(victim.shed_ids) & set(engine.emitted))
+
+
+def test_frontend_no_shed_when_disabled(fe_workload):
+    """shed_expired=False (the no-backpressure control) must serve every
+    row even for expired requests — latency collapses, conservation
+    holds, nothing is dropped."""
+    ds, plan = fe_workload
+    engine = CascadeServer(plan, tile=128, use_kernel=False)
+    fe = ServingFrontEnd(engine, policy=SLOPolicy(
+        degrade=False, shed_expired=False))
+    idx = np.arange(2000, 2400)
+    rid = fe.submit_request(idx, ds.x[idx], deadline_ms=1e-3,
+                            arrival_ms=0.0)
+    fe.run()
+    ok, why = fe.conserved()
+    assert ok, why
+    req = fe.requests[rid]
+    assert req.done and req.shed == 0
+    assert req.submitted == req.n
+    assert not req.met_slo
+
+
+# ------------------------------------------------------------ degrade ladder
+def test_degrade_ladder_priced_with_eq31(fe_workload):
+    """Each ladder level drops exactly one more trailing stage and is
+    re-priced through Eq. 3.1 — est_total_cost strictly decreases and
+    matches plan_cost on the surviving prefix."""
+    _ds, plan = fe_workload
+    ladder = degrade_ladder(plan, min_stages=1)
+    assert len(ladder) == len(plan.stages)
+    assert ladder[0] is plan
+    for k, p in enumerate(ladder):
+        assert len(p.stages) == len(plan.stages) - k
+        assert list(p.stages) == list(plan.stages[:len(plan.stages) - k])
+        assert p.meta.get("degrade_level", 0) == k
+        expect = plan_cost(
+            [s.alpha if s.proxy is not None else 1.0 for s in p.stages],
+            [s.est_reduction if s.proxy is not None else 0.0
+             for s in p.stages],
+            [s.est_selectivity for s in p.stages],
+            [s.proxy.cost if s.proxy is not None else 0.0 for s in p.stages],
+            [plan.query.predicates[s.pred_idx].udf.cost for s in p.stages],
+        )
+        assert p.est_total_cost == pytest.approx(expect)
+        if k:
+            assert p.est_total_cost < ladder[k - 1].est_total_cost
+
+
+def test_frontend_degrades_under_pressure_and_restores(fe_workload):
+    """A burst past capacity pushes the ladder down (cheaper plan
+    installed, counted); once the queue drains the ladder restores."""
+    ds, plan = fe_workload
+    engine = CascadeServer(plan, tile=128, use_kernel=False)
+    fe = ServingFrontEnd(engine)
+    req_ms = plan.est_total_cost
+    # burst: 6 back-to-back requests whose combined service exceeds any
+    # single deadline at the full plan
+    for r in range(6):
+        idx = np.arange(2000 + r * 200, 2200 + r * 200)
+        fe.submit_request(idx, ds.x[idx], deadline_ms=2.0 * req_ms * 200,
+                          arrival_ms=r * 1e-3)
+    # a late, generously-deadlined request: pressure is gone by then, so
+    # the ladder must restore (restore is evaluated against PENDING work
+    # — an idle front end stays parked at its last level)
+    late = np.arange(4000, 4100)
+    fe.submit_request(late, ds.x[late], deadline_ms=100.0 * req_ms * 100,
+                      arrival_ms=50.0 * req_ms * 200)
+    fe.run()
+    ok, why = fe.conserved()
+    assert ok, why
+    assert fe.stats.degrades >= 1
+    assert fe.stats.restores >= 1
+    assert fe.stats.final_level == 0  # restored once the burst drained
+    assert engine.stats.plan_swaps >= 2  # down and back up
+
+
+# -------------------------------------------------------- goodput accounting
+def test_frontend_goodput_accounting(fe_workload):
+    """goodput_ratio is requests_met/requests_done and agrees with the
+    per-request met_slo flags; an easy trace meets every deadline."""
+    ds, plan = fe_workload
+    engine = CascadeServer(plan, tile=128, use_kernel=False)
+    fe = ServingFrontEnd(engine)
+    req_ms = plan.est_total_cost
+    for r in range(4):
+        idx = np.arange(2000 + r * 100, 2100 + r * 100)
+        fe.submit_request(idx, ds.x[idx], deadline_ms=50.0 * req_ms * 100,
+                          arrival_ms=r * 5.0 * req_ms * 100)
+    st_ = fe.run()
+    met = sum(1 for q in fe.requests.values() if q.met_slo)
+    assert st_.requests_done == 4
+    assert st_.requests_met_slo == met == 4
+    assert st_.goodput_ratio == 1.0
+    assert st_.goodput_rps == pytest.approx(st_.throughput_rps)
+    assert st_.served_ms > 0
+
+
+# ------------------------------------------------------------------- guards
+def test_frontend_rejects_duplicate_live_index(fe_workload):
+    """Record indices identify rows end-to-end (emitted-uniqueness is a
+    conservation clause), so re-submitting a live index must fail."""
+    ds, plan = fe_workload
+    fe = ServingFrontEnd(CascadeServer(plan, tile=128, use_kernel=False))
+    idx = np.arange(2000, 2050)
+    fe.submit_request(idx, ds.x[idx], deadline_ms=1e6)
+    with pytest.raises(ValueError):
+        fe.submit_request(idx[:10], ds.x[idx[:10]], deadline_ms=1e6)
+
+
+def test_frontend_zero_row_request_completes(fe_workload):
+    """A zero-row request must complete immediately (not deadlock the
+    admit queue) and trivially meet its SLO."""
+    ds, plan = fe_workload
+    fe = ServingFrontEnd(CascadeServer(plan, tile=128, use_kernel=False))
+    rid = fe.submit_request(np.arange(0), ds.x[:0], deadline_ms=10.0)
+    fe.run()
+    req = fe.requests[rid]
+    assert req.done and req.met_slo
+    ok, why = fe.conserved()
+    assert ok, why
+
+
+def test_frontend_empty_submit_does_not_inflate_counters(fe_workload):
+    """Engine-level zero-row short-circuit: an idle tick's empty submit
+    must not bump _records_submitted (which would skew the adaptive
+    policy's cooldown bookkeeping)."""
+    ds, plan = fe_workload
+    engine = CascadeServer(plan, tile=128, use_kernel=False)
+    before = engine._records_submitted
+    engine.submit(np.arange(0), ds.x[:0])
+    assert engine._records_submitted == before

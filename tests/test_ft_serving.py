@@ -350,6 +350,47 @@ def test_standby_takeover_resyncs_after_lost_commit_broadcast(mixed_plan):
     assert hosts[0].epoch == 1  # the installed host is untouched
 
 
+def test_snapshot_deltas_rearm_open_barrier(mixed_plan):
+    """A replacement standby registered AFTER a takeover starts blind —
+    snapshot_deltas() re-emits the live coordinator state (votes, open
+    prepare barrier, partial acks) so a replayed standby mirrors it
+    exactly and a SECOND failover can resolve the same barrier."""
+    coord = QuorumSwapCoordinator(
+        mixed_plan, 3, reopt_fn=lambda p, m, mode: mixed_plan)
+    coord.offer_vote(_vote(0))
+    coord.offer_vote(_vote(1))
+    coord.propose()
+    coord.offer_ack(SwapAck(host=0, epoch=1, ok=True))
+    sb = _standby(mixed_plan)
+    for delta in coord.snapshot_deltas():
+        sb.apply(delta)
+    assert sb.voted == {0, 1}
+    assert sb.pending == (1, coord.pending.artifact)
+    assert sb.acks == {0}
+    assert sb.epoch == 0 and sb.last_artifact is None
+
+
+def test_snapshot_deltas_rearm_committed_state(mixed_plan):
+    """After a committed epoch with a fenced host, the snapshot replays
+    the commit (with artifact, for future re-syncs) and the fence."""
+    coord = QuorumSwapCoordinator(
+        mixed_plan, 3, reopt_fn=lambda p, m, mode: mixed_plan)
+    coord.mark_fenced(2)
+    coord.offer_vote(_vote(0))
+    coord.offer_vote(_vote(1))
+    coord.propose()
+    coord.offer_ack(SwapAck(host=0, epoch=1, ok=True))
+    commit = coord.offer_ack(SwapAck(host=1, epoch=1, ok=True))
+    assert commit is not None and coord.epoch == 1
+    sb = _standby(mixed_plan)
+    for delta in coord.snapshot_deltas():
+        sb.apply(delta)
+    assert sb.epoch == 1
+    assert sb.last_artifact == coord.last_artifact
+    assert sb.fenced == {2}
+    assert sb.pending is None
+
+
 # ------------------------------------------------ end-to-end failover
 def test_failover_completes_swap_mid_epoch(workload):
     """Acceptance: the primary dies after the barrier closed but before
@@ -404,6 +445,28 @@ def test_failover_mid_commit_broadcast(workload):
     assert stats.resyncs == 3  # everyone but the already-installed host
     assert stats.swaps_committed >= 1
     assert {h.epoch for h in srv.hosts} == {stats.final_epoch}
+    _assert_conserved(srv, stats)
+
+
+def test_failover_rearmed_standby_survives_second_kill(workload):
+    """Acceptance (re-arm): after the first takeover the promoted
+    coordinator registers a FRESH standby and replays its live state via
+    snapshot_deltas(), so killing the SECOND primary must also resolve
+    cleanly — two failovers, two re-arms, fleet still converged and
+    conserved.  Without re-arm the second kill would strand the fleet
+    with no coordinator at all."""
+    srv = ShardedCascadeServer(_plan(workload), 4, tile=256,
+                               policy=_policy(), seed=3,
+                               kill_coordinator_at=(2000, "commit"))
+    for h in srv.hosts:
+        h.track_versions = True
+    stats = srv.run_streams([s.x for s in _streams(workload)], chunk=400)
+    assert stats.failovers == 2
+    assert stats.standby_rearms == 2
+    assert stats.failover_resolution in ("completed", "aborted", "resync")
+    assert stats.swaps_committed >= 1
+    assert {h.epoch for h in srv.hosts} == {stats.final_epoch}
+    assert stats.final_epoch >= 1
     _assert_conserved(srv, stats)
 
 

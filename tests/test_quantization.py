@@ -433,6 +433,54 @@ def test_autotune_cache_hits_and_disk_persistence(tmp_path, monkeypatch):
     autotune.clear_autotune_cache()
 
 
+def test_autotune_disk_cache_concurrent_writer_merges(tmp_path, monkeypatch):
+    """K subprocess hosts share one CORE_AUTOTUNE_CACHE file.  A host
+    that loaded the (empty) table BEFORE a peer's save lands must not
+    clobber the peer's entries when it saves its own sweep: merge-on-save
+    re-reads the file immediately before the atomic replace, so both
+    shapes survive."""
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv("CORE_AUTOTUNE_CACHE", str(path))
+    # peer host sweeps shape B and publishes it
+    autotune.clear_autotune_cache()
+    cfg_b = autotune.choose_block_m(64, 384, 8, "float32", n_rows_hint=256,
+                                    backend="test")
+    assert len(autotune._read_disk_table(str(path))) == 1
+    # our host: fresh memory, but it "loaded" the disk table before the
+    # peer's save landed (the concurrent interleave) — its save must
+    # still keep the peer's shape-B entry alongside our shape-A sweep
+    autotune.clear_autotune_cache()
+    autotune._DISK_LOADED = True
+    cfg_a = autotune.choose_block_m(64, 256, 4, "int8", n_rows_hint=512,
+                                    backend="test")
+    assert cfg_a.source == "sweep"
+    merged = autotune._read_disk_table(str(path))
+    assert len(merged) == 2
+    blocks = {(k[1], k[3]): v.block_m for k, v in merged.items()}
+    assert blocks[(384, "float32")] == cfg_b.block_m
+    assert blocks[(256, "int8")] == cfg_a.block_m
+    # no temp-file litter from the atomic publish
+    assert [p.name for p in tmp_path.iterdir()] == ["autotune.json"]
+    autotune.clear_autotune_cache()
+
+
+def test_autotune_disk_cache_tolerates_corrupt_file(tmp_path, monkeypatch):
+    """A torn or unrelated file behind CORE_AUTOTUNE_CACHE must warn and
+    fall back to a fresh sweep (never silently poison configs), and the
+    next save replaces it with a valid table."""
+    path = tmp_path / "autotune.json"
+    path.write_text('{"torn prefix: [1, 2')
+    monkeypatch.setenv("CORE_AUTOTUNE_CACHE", str(path))
+    autotune.clear_autotune_cache()
+    with pytest.warns(RuntimeWarning, match="corrupt or partial"):
+        cfg = autotune.choose_block_m(64, 256, 4, "int8", n_rows_hint=512,
+                                      backend="test")
+    assert cfg.source == "sweep"
+    table = autotune._read_disk_table(str(path))  # healed: parses again
+    assert len(table) == 1 and next(iter(table.values())).block_m == cfg.block_m
+    autotune.clear_autotune_cache()
+
+
 def test_scorer_uses_autotuned_block(workload, mixed_plan):
     """CascadeScorer with a row hint adopts the tuner's block; without
     one it keeps the static heuristic's pick."""
