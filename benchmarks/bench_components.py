@@ -168,6 +168,7 @@ def write_bench_json(throughput: dict, adaptive: dict | None = None,
                      fault_tolerance: dict | None = None,
                      quant: dict | None = None,
                      frontend: dict | None = None,
+                     plan_cache: dict | None = None,
                      path: Path = BENCH_JSON) -> None:
     payload = {
         "bench": "components",
@@ -186,6 +187,8 @@ def write_bench_json(throughput: dict, adaptive: dict | None = None,
         payload["quantized_cascade"] = quant
     if frontend is not None:
         payload["serving_frontend"] = frontend
+    if plan_cache is not None:
+        payload["plan_cache"] = plan_cache
     path.write_text(json.dumps(payload, indent=2) + "\n")
 
 

@@ -1,0 +1,133 @@
+"""Cross-query plan cache benchmark (DESIGN.md §8): warm-start vs cold
+optimization, exact-repeat replay, and the dissimilarity fallback.
+
+Four gated claims (``check_regression.py``):
+
+  * ``plan_cache_warm_nodes`` < ``cold_nodes`` — warm-starting a SIMILAR
+    query (same predicates, mildly shifted audited statistics) from a
+    cached donor must visit strictly fewer branch-and-bound nodes than
+    the cold search it replaces;
+  * ``plan_cache_same_cost`` — the warm-started plan lands on the same
+    Eq. 3.1 cost as the cold plan (within 5% — eps-approx classifier
+    reuse may retrain a stage, shifting thresholds a hair);
+  * ``plan_cache_hit_build_ratio`` <= 0.2 — an exact repeat is a cache
+    HIT that replays the COREWIRE artifact: no sampling, no proxy
+    training, no search.  The ratio is hit build wall-clock over cold
+    build wall-clock (cold trains proxies, so the gap is structural, not
+    a timer race);
+  * ``plan_cache_dissimilar_cold`` + ``plan_cache_roundtrip_stable`` —
+    a dissimilar query (different accuracy target, inverted
+    selectivities) falls back to a cold optimization whose output meets
+    the query's accuracy target exactly as an uncached run would, and
+    the cache container round-trips byte-stably (save -> load -> save
+    identical), which is what lets a coordinator ship it to a fleet.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import PlanCache, execute_plan, optimize, plan_accuracy
+from repro.data.synthetic import make_dataset, make_query, make_udfs
+
+
+def bench_plan_cache(*, seed: int = 21) -> dict:
+    ds = make_dataset(n=6000, correlation=0.9, feature_noise=1.0, seed=seed)
+    udfs = make_udfs(ds, hidden=24, depth=1, train_rows=1200, seed=seed,
+                     declared_cost_ms=10.0)
+    q = make_query(ds, udfs, columns=[0, 1, 2], seed=seed + 1)
+    x = ds.x[:1200]
+
+    cache = PlanCache()
+    # ---- cold: first sight of the query, full build + search ----
+    cold_plan, cold = cache.warm_optimize(q, x, step=0.05, seed=0)
+    assert cold["path"] == "cold", cold["path"]
+    cold_nodes = cold["trace"]["nodes_visited"]
+
+    # ---- exact repeat: HIT replays the wire artifact ----
+    hit_plan, hit = cache.warm_optimize(q, x, step=0.05, seed=0)
+    assert hit["path"] == "hit", hit["path"]
+    hit_ratio = hit["build_ms"] / max(cold["build_ms"], 1e-9)
+    same_order_hit = list(hit_plan.order) == list(cold_plan.order)
+
+    # ---- persistence BEFORE the drifted write-back refreshes stats ----
+    blob = cache.to_bytes()
+    roundtrip_stable = PlanCache.from_bytes(blob).to_bytes() == blob
+
+    # ---- similar query: same predicates, mildly shifted audited stats
+    # (what an engine's reservoir would report after gentle drift) ----
+    sels = {0: 0.45, 1: 0.5, 2: 0.55}
+    warm_plan, warm = cache.warm_optimize(q, x, step=0.05, seed=0,
+                                          selectivities=sels)
+    assert warm["path"] == "warm", warm["path"]
+    warm_nodes = warm["trace"]["nodes_visited"]
+    cost_rel_delta = abs(warm_plan.est_total_cost - cold_plan.est_total_cost) \
+        / cold_plan.est_total_cost
+    same_cost = cost_rel_delta <= 0.05
+
+    # ---- dissimilar query: tighter target + inverted selectivities ----
+    q_far = make_query(ds, udfs, columns=[0, 1, 2], accuracy_target=0.95,
+                      seed=seed + 1)
+    far_sels = {0: 0.05, 1: 0.95, 2: 0.05}
+    far_plan, far = cache.warm_optimize(q_far, x, step=0.05, seed=0,
+                                        selectivities=far_sels)
+    dissimilar_cold = far["path"] == "cold"
+    # no accuracy regression vs an uncached optimization of the same query
+    x_eval = ds.x[1200:4200]
+    orig = execute_plan(_full_plan(q_far), x_eval)
+    acc_cached = plan_accuracy(execute_plan(far_plan, x_eval), orig)
+    ref_plan = optimize(q_far, x, step=0.05, seed=0)
+    acc_uncached = plan_accuracy(execute_plan(ref_plan, x_eval), orig)
+
+    return {
+        "cold_nodes": int(cold_nodes),
+        "warm_nodes": int(warm_nodes),
+        "cold_build_ms": float(cold["build_ms"]),
+        "hit_build_ms": float(hit["build_ms"]),
+        "warm_build_ms": float(warm["build_ms"]),
+        "hit_build_ratio": float(hit_ratio),
+        "hit_same_order": bool(same_order_hit),
+        "warm_cost_rel_delta": float(cost_rel_delta),
+        "same_cost": bool(same_cost),
+        "warm_distance": float(warm["distance"]),
+        "dissimilar_cold": bool(dissimilar_cold),
+        "dissimilar_accuracy_cached": float(acc_cached),
+        "dissimilar_accuracy_uncached": float(acc_uncached),
+        "accuracy_target": float(q_far.accuracy_target),
+        "roundtrip_stable": bool(roundtrip_stable),
+        "entries": len(cache),
+        "stats": cache.stats.as_dict(),
+    }
+
+
+def _full_plan(q):
+    """The unproxied original plan (every UDF, input order) — the oracle
+    plan_accuracy measures A against."""
+    from repro.core.baselines import orig_plan
+
+    return orig_plan(q)
+
+
+def run(quick: bool = True):
+    from benchmarks.common import csv_row
+
+    out = bench_plan_cache()
+    csv_row(
+        "plan_cache_warm_start", float(out["warm_nodes"]),
+        (
+            f"cold_nodes={out['cold_nodes']};"
+            f"hit_ratio={out['hit_build_ratio']:.3f};"
+            f"cost_delta={out['warm_cost_rel_delta']:.4f};"
+            f"dissim_cold={int(out['dissimilar_cold'])};"
+            f"roundtrip={int(out['roundtrip_stable'])}"
+        ),
+    )
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    import sys
+    from pathlib import Path
+
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    print(json.dumps(run(quick="--quick" in sys.argv[1:]), indent=2))

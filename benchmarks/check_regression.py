@@ -1,16 +1,19 @@
 """CI regression gate for the fused proxy-scoring hot path, the adaptive
 serving loop, K=4 sharded serving, the fault-tolerance scenarios, the
-quantized packed cascade, and the SLO-aware serving front end.
+quantized packed cascade, the SLO-aware serving front end, and the
+cross-query plan cache.
 
 Runs the components benchmark's proxy-throughput measurement, the
 drifting-stream adaptive-serving benchmark, the K=4 quorum-swap fleet
 benchmark, the three fault-tolerance scenarios (coordinator failover
 mid-epoch, straggler fencing, pooled-kappa² escalation), the
 quantized-cascade benchmark (int8 bytes-moved speedup, decision-flip
-parity, autotune sweep), and the serving-front-end goodput benchmark
+parity, autotune sweep), the serving-front-end goodput benchmark
 (SLO goodput under overload with backpressure on vs the no-backpressure
-collapse control, plus conservation through a K=4 quorum swap),
-writes ``BENCH_components.json`` at the repo
+collapse control, plus conservation through a K=4 quorum swap), and the
+plan-cache benchmark (warm-start node reduction at equal Eq. 3.1 cost,
+exact-repeat replay ratio, dissimilarity fallback, byte-stable
+persistence), writes ``BENCH_components.json`` at the repo
 root plus the autotune sweep table under ``results/autotune_sweep.json``
 (the nightly CI artifact), prints a unified **before/after delta table**
 for every gated metric (baseline recorded value vs this run, floor,
@@ -57,6 +60,7 @@ from benchmarks.bench_components import (  # noqa: E402
     bench_proxy_throughput,
     write_bench_json,
 )
+from benchmarks.bench_plan_cache import bench_plan_cache  # noqa: E402
 from benchmarks.bench_quant import SWEEP_JSON, bench_quant  # noqa: E402
 from benchmarks.bench_serving_frontend import (  # noqa: E402
     bench_frontend_goodput,
@@ -159,10 +163,14 @@ def main(argv=None) -> int:
     # shortens the trace, both lengths sit well inside the gates
     fe = bench_frontend_goodput(n_req=32 if quick else 48)
     fes = bench_frontend_sharded()
+    # fixed workload + seeds: node counts and costs deterministic per
+    # environment, only the hit-ratio column is wall-clock
+    pc = bench_plan_cache()
     write_bench_json(throughput, adaptive, mlp, sharded, fault_tolerance=ft,
                      quant={k: v for k, v in quant.items()
                             if k != "sweep_rows"},
-                     frontend={**fe, "sharded": fes})
+                     frontend={**fe, "sharded": fes},
+                     plan_cache=pc)
     print(f"wrote {BENCH_JSON}")
     SWEEP_JSON.parent.mkdir(parents=True, exist_ok=True)
     SWEEP_JSON.write_text(json.dumps(
@@ -191,6 +199,7 @@ def main(argv=None) -> int:
     min_goodput = float(os.environ.get(
         "REGRESSION_MIN_GOODPUT_RATIO", base["min_goodput_ratio"]))
     max_goodput_nobp = float(base["max_goodput_ratio_nobp"])
+    max_hit_ratio = float(base["max_plan_cache_hit_ratio"])
 
     worst_consensus = max(sharded["consensus_ms_per_swap"] or [0.0])
     fo, strag, pooled = (ft["failover"], ft["straggler"], ft["pooled_kappa"])
@@ -311,6 +320,28 @@ def main(argv=None) -> int:
              record_key="recorded_frontend_sharded_swaps"),
         Gate("frontend_sharded_conserved", float(fes["conserved"]), 1.0,
              1.0, fmt="{:.0f}"),
+        # ----- cross-query plan cache (see bench_plan_cache.py) -----
+        Gate("plan_cache_warm_nodes", float(pc["warm_nodes"]),
+             float(pc["cold_nodes"] - 1),
+             base.get("recorded_plan_cache_warm_nodes"),
+             higher_is_better=False, fmt="{:.0f}",
+             record_key="recorded_plan_cache_warm_nodes"),
+        Gate("plan_cache_cold_nodes", float(pc["cold_nodes"]), None,
+             base.get("recorded_plan_cache_cold_nodes"), fmt="{:.0f}",
+             record_key="recorded_plan_cache_cold_nodes"),
+        Gate("plan_cache_same_cost", float(pc["same_cost"]), 1.0, 1.0,
+             fmt="{:.0f}"),
+        Gate("plan_cache_hit_build_ratio", pc["hit_build_ratio"],
+             max_hit_ratio, base.get("recorded_plan_cache_hit_ratio"),
+             higher_is_better=False, fmt="{:.4f}",
+             record_key="recorded_plan_cache_hit_ratio"),
+        Gate("plan_cache_dissimilar_cold",
+             float(pc["dissimilar_cold"]
+                   and pc["dissimilar_accuracy_cached"]
+                   >= pc["dissimilar_accuracy_uncached"] - 1e-9),
+             1.0, 1.0, fmt="{:.0f}"),
+        Gate("plan_cache_roundtrip_stable", float(pc["roundtrip_stable"]),
+             1.0, 1.0, fmt="{:.0f}"),
     ]
 
     _print_delta_table(gates)
@@ -351,7 +382,10 @@ def main(argv=None) -> int:
         f"autotune {quant['autotune_wins']}/{quant['autotune_shapes']} "
         f"shapes; frontend goodput {fe['goodput_ratio']:.3f} "
         f"(nobp {fe['goodput_ratio_nobp']:.3f}), sharded swaps "
-        f"{fes['swaps_committed']} conserved={fes['conserved']}"
+        f"{fes['swaps_committed']} conserved={fes['conserved']}; "
+        f"plan cache warm {pc['warm_nodes']}/{pc['cold_nodes']} nodes, "
+        f"hit ratio {pc['hit_build_ratio']:.4f}, "
+        f"roundtrip={int(pc['roundtrip_stable'])}"
     )
     return 0
 

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Tiered CI lanes: tier-1 tests + regression gates (fused proxy scoring,
 # adaptive serving, K=4 sharded serving, fault-tolerance scenarios,
-# quantized cascade, SLO-aware serving front end with goodput gating).
+# quantized cascade, SLO-aware serving front end with goodput gating,
+# cross-query plan cache with similarity warm-start).
 #
 #   scripts/ci.sh                          default: tier1 + bench (full)
 #   scripts/ci.sh --lane fast              iteration lane (no @slow/@flaky)

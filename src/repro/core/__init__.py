@@ -4,6 +4,7 @@ from repro.core.builder import ProxyBuilder
 from repro.core.accuracy import accuracy_allocation, alpha_frontier
 from repro.core.bnb import BranchAndBound
 from repro.core.optimizer import optimize, reoptimize
+from repro.core.plan_cache import PlanCache, QueryFingerprint, WarmStart, fingerprint_query
 from repro.core.baselines import ns_plan, orig_plan, pp_plan
 from repro.core.executor import ExecResult, execute_plan, plan_accuracy
 from repro.core.correlation import correlation_score, query_correlation

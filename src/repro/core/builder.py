@@ -188,6 +188,25 @@ class ProxyBuilder:
         return proxy, rows
 
     # ----------------------------------------------------------- adaptivity
+    def export_classifiers(
+        self,
+    ) -> Dict[Tuple[int, FrozenSet[int], str], Tuple[ProxyModel, float]]:
+        """Snapshot of the trained-classifier cache for a cross-query
+        transplant (the plan cache's warm start).  Keys are query-shape-
+        relative (pred index within the query, prefix set, family), so a
+        same-shaped future query can adopt them; the Eq.-4.7 eps-approx
+        test re-validates every entry against the new query's labels
+        before it is ever reused."""
+        return dict(self._proxies)
+
+    def adopt_classifiers(
+        self,
+        proxies: Dict[Tuple[int, FrozenSet[int], str], Tuple[ProxyModel, float]],
+    ) -> None:
+        """Transplant a donor builder's classifier cache (same mechanism
+        ``rebase`` uses across samples, opened up across queries)."""
+        self._proxies.update(proxies)
+
     def rebase(
         self,
         x_new: np.ndarray,

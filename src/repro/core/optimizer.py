@@ -60,6 +60,7 @@ def optimize(
     builder: Optional[ProxyBuilder] = None,
     keep_state: bool = False,
     quant_dtype: Optional[str] = None,
+    warm_start=None,
 ) -> PhysicalPlan:
     """``keep_state=True`` attaches the live builder (and B&B tree for
     mode="core") to ``plan.meta`` so a later ``reoptimize`` can warm-start
@@ -67,12 +68,22 @@ def optimize(
 
     ``quant_dtype`` ("int8" | "fp8") stamps ``plan.meta["quant_dtype"]``:
     every scorer compiled for the plan (executor, serving install, wire
-    artifact) then packs its cascade weights at that storage dtype."""
+    artifact) then packs its cascade weights at that storage dtype.
+
+    ``warm_start`` is a cross-query donor state from the plan cache
+    (``plan_cache.WarmStart``: classifiers / s_stars / orders): the
+    builder adopts the donor's trained-classifier cache (re-validated by
+    the Eq.-4.7 eps test before any reuse), and mode="core" seeds the
+    branch-and-bound tree with the donor's stale L-node measurements and
+    surviving candidate set, then ``resume``s instead of cold-running."""
     t_start = time.perf_counter()
     A = query.accuracy_target
     builder = builder or ProxyBuilder(query, x_sample, kind=kind, eps=eps, seed=seed)
+    if warm_start is not None and getattr(warm_start, "classifiers", None):
+        builder.adopt_classifiers(warm_start.classifiers)
     trace: Optional[SearchTrace] = None
     bb: Optional[BranchAndBound] = None
+    warmed = False
     if mode == "core-a":
         alloc = accuracy_allocation(builder, tuple(range(query.n)), A, step=step,
                                     framework=framework)
@@ -86,7 +97,13 @@ def optimize(
     elif mode == "core":
         bb = BranchAndBound(builder, A, step=step, fine_grained=fine_grained,
                             framework=framework)
-        alloc, trace = bb.run()
+        if warm_start is not None and getattr(warm_start, "s_stars", None):
+            bb.seed_from(warm_start.s_stars,
+                         orders=getattr(warm_start, "orders", None))
+            alloc, trace = bb.resume()
+            warmed = True
+        else:
+            alloc, trace = bb.run()
     else:
         raise ValueError(f"unknown mode {mode!r}")
     meta = {
@@ -95,6 +112,8 @@ def optimize(
         "wall_ms": (time.perf_counter() - t_start) * 1e3,
         "plan_version": 0,
     }
+    if warmed:
+        meta["warm_start"] = True
     if quant_dtype is not None and quant_dtype != "float32":
         from repro.core.proxy_family import QUANT_DTYPES
 

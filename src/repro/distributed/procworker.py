@@ -136,11 +136,13 @@ def _serve_loop(stdin, stdout) -> None:
                 q = make_query(ds, udfs, **spec["query"])
                 plan, _scorer = deserialize_scorer(
                     dec_bytes(req["artifact"]), q)
+                slo = req.get("slo_ms")
                 host = ShardHost(
                     int(req["host_id"]), plan, tile=int(req["tile"]),
                     policy=AdaptivePolicy(**req["policy"]),
                     seed=int(req["seed"]),
-                    use_kernel=bool(req["use_kernel"]))
+                    use_kernel=bool(req["use_kernel"]),
+                    slo_ms=None if slo is None else float(slo))
             elif cmd == "submit":
                 host.submit_chunk(dec_array(req["indices"]),
                                   dec_array(req["rows"]))
@@ -177,6 +179,10 @@ def _serve_loop(stdin, stdout) -> None:
                 out["in_flight"] = int(host.engine.in_flight())
                 out["submit_version"] = [
                     [int(i), int(v)] for i, v in host.submit_version.items()]
+                if host.frontend is not None:
+                    # goodput accounting lives in this subprocess; the
+                    # parent's fleet aggregation needs the scalars
+                    out["frontend_stats"] = asdict(host.frontend.stats)
             elif cmd == "stop":
                 out.update(ok=True, epoch=host.epoch if host else 0,
                            submitted=host.submitted if host else 0)
@@ -233,6 +239,7 @@ class ProcessHost:
 
     def __init__(self, host_id: int, *, spec: dict, artifact: bytes,
                  tile: int, policy, seed: int, use_kernel: bool = True,
+                 slo_ms: Optional[float] = None,
                  init_timeout_s: float = 600.0):
         import repro
 
@@ -252,12 +259,17 @@ class ProcessHost:
         self.submitted = 0
         self.resyncs = 0
         self.submit_version: Dict[int, int] = {}
+        # mirror of the worker-side request front end: None until a drain
+        # reply carries frontend stats across the pipe (slo_ms set)
+        self.frontend = None
         self._track = False
         self._req_id = 0
         self._rpc({"cmd": "init", "host_id": host_id, "spec": spec,
                    "artifact": enc_bytes(artifact), "tile": tile,
                    "policy": asdict(policy), "seed": seed,
-                   "use_kernel": use_kernel}, timeout=init_timeout_s)
+                   "use_kernel": use_kernel,
+                   "slo_ms": None if slo_ms is None else float(slo_ms)},
+                  timeout=init_timeout_s)
 
     def _rpc(self, req: dict, timeout: Optional[float] = None) -> dict:
         from repro.distributed.serving import HostTimeout
@@ -348,6 +360,13 @@ class ProcessHost:
         view._in_flight = int(rep["in_flight"])
         self.submit_version = {int(i): int(v)
                                for i, v in rep["submit_version"]}
+        if rep.get("frontend_stats") is not None:
+            from types import SimpleNamespace
+
+            from repro.serving.frontend import FrontEndStats
+
+            self.frontend = SimpleNamespace(
+                stats=FrontEndStats(**rep["frontend_stats"]))
         return view.stats
 
     def stop(self) -> None:

@@ -86,6 +86,7 @@ class ShardedServeStats:
     fences: int = 0  # hosts fenced out of a barrier (stragglers)
     resyncs: int = 0  # COREWIRE catch-up installs on rejoin
     pooled_swaps: int = 0  # swaps initiated by pooled kappa² evidence
+    plan_cache_writebacks: int = 0  # committed plans recorded cross-query
     # ----- request front end (slo_ms set): per-host FrontEndStats -----
     frontend_stats: List = field(default_factory=list)
 
@@ -454,13 +455,10 @@ class ShardedCascadeServer:
                  ack_deadline_s: float = 30.0,
                  heartbeat_rounds: float = 1.5,
                  worker_spec: Optional[dict] = None,
-                 slo_ms: Optional[float] = None):
+                 slo_ms: Optional[float] = None,
+                 plan_cache=None):
         if transport not in ("inline", "thread", "process"):
             raise ValueError(f"unknown transport {transport!r}")
-        if slo_ms is not None and transport == "process":
-            raise ValueError(
-                "slo_ms needs the request front end on the host engine; "
-                "the process worker protocol does not carry it yet")
         if straggler_policy not in ("fence", "nack"):
             raise ValueError(f"unknown straggler policy {straggler_policy!r}")
         # one kill point, or a sequence of them: each consumed in order,
@@ -483,6 +481,11 @@ class ShardedCascadeServer:
         self.n_hosts = int(n_hosts)
         self.policy = policy or AdaptivePolicy()
         self.plan0 = plan
+        # cross-query plan cache (core.plan_cache.PlanCache): the
+        # coordinator records the initial plan and every quorum-COMMITTED
+        # re-optimization — aborted prepares never pollute the cache
+        self.plan_cache = plan_cache
+        self._last_reopt_plan: Optional[PhysicalPlan] = None
         self.query = plan.query
         self.max_tile = max_tile
         self.ack_deadline_s = float(ack_deadline_s)
@@ -528,7 +531,8 @@ class ShardedCascadeServer:
             self.hosts = [
                 ProcessHost(k, spec=worker_spec, artifact=artifact,
                             tile=tile, policy=self.policy,
-                            seed=seed + 1000 * k, use_kernel=use_kernel)
+                            seed=seed + 1000 * k, use_kernel=use_kernel,
+                            slo_ms=slo_ms)
                 for k in range(self.n_hosts)
             ]
         else:
@@ -546,13 +550,24 @@ class ShardedCascadeServer:
             per_host=[h.engine.stats for h in self.hosts],
             submitted_per_host=[0] * self.n_hosts,
         )
+        self._record_to_cache(plan)
 
     # ------------------------------------------------------ re-optimization
     def _reopt(self, plan: PhysicalPlan, merged, mode: str) -> PhysicalPlan:
         from repro.core.optimizer import reoptimize
 
-        return reoptimize(plan, merged.x, known_sigma=merged.known_sigma,
-                          mode=mode, step=self.policy.step)
+        new_plan = reoptimize(plan, merged.x, known_sigma=merged.known_sigma,
+                              mode=mode, step=self.policy.step)
+        # stashed, not recorded: the cache write-back waits for the quorum
+        # barrier to COMMIT this plan fleet-wide (_finish_swap)
+        self._last_reopt_plan = new_plan
+        return new_plan
+
+    def _record_to_cache(self, plan: Optional[PhysicalPlan]) -> None:
+        if self.plan_cache is None or plan is None:
+            return
+        if self.plan_cache.record_plan(plan, step=self.policy.step) is not None:
+            self.stats.plan_cache_writebacks += 1
 
     # ------------------------------------------------------- replication
     def _replicate(self, delta: StateDelta) -> None:
@@ -748,6 +763,8 @@ class ShardedCascadeServer:
         coord.swap_log[-1].lag_records = (
             sum(h.submitted for h in self.hosts) - submitted_at_quorum)
         self.stats.swaps_committed += 1
+        self._record_to_cache(self._last_reopt_plan)
+        self._last_reopt_plan = None
         if initiated_by == "pooled:kappa2":
             self.stats.pooled_swaps += 1
         self._heal_straggler(missing)

@@ -38,13 +38,52 @@ import numpy as np
 
 # Nominal single-core accelerator envelope (TPUv4-ish).  Only RATIOS of
 # modeled times ever gate anything, so the absolute calibration is free
-# to be nominal; the byte counts feeding them are exact.
+# to be nominal; the byte counts feeding them are exact.  A backend can
+# override these with MEASURED constants via ``calibrate_backend`` /
+# ``set_backend_constants`` — the default path (no registration) uses
+# these module constants unchanged.
 HBM_BYTES_PER_S = 1.2e12
 PEAK_FLOPS = 7.0e13
 LAUNCH_OVERHEAD_S = 5.0e-6
 GRID_STEP_OVERHEAD_S = 1.5e-6
 VMEM_BLOCK_BUDGET = 8 << 20  # same budget the old static heuristic used
 WEIGHT_RESIDENT_BYTES = 4 << 20  # weights this small stay pinned in VMEM
+
+
+class BackendConstants(NamedTuple):
+    """Roofline envelope for one backend.  ``source`` records where the
+    numbers came from: "default" (the baked nominal constants) or
+    "measured" (``calibrate_backend`` fitted them from wall-clock)."""
+
+    hbm_bytes_per_s: float = HBM_BYTES_PER_S
+    peak_flops: float = PEAK_FLOPS
+    launch_overhead_s: float = LAUNCH_OVERHEAD_S
+    grid_step_overhead_s: float = GRID_STEP_OVERHEAD_S
+    source: str = "default"
+
+
+_DEFAULT_CONSTANTS = BackendConstants()
+_BACKEND_CONSTANTS: dict = {}  # backend name -> BackendConstants
+
+
+def backend_constants(backend: Optional[str] = None) -> BackendConstants:
+    """Constants for ``backend`` — the calibrated set if one was
+    registered, the nominal defaults otherwise (so the default path is
+    numerically identical to the pre-calibration tuner)."""
+    return _BACKEND_CONSTANTS.get(str(backend), _DEFAULT_CONSTANTS)
+
+
+def set_backend_constants(backend: str, constants: BackendConstants) -> None:
+    """Register measured constants for ``backend`` and invalidate every
+    cached sweep winner keyed to it — a winner picked under the nominal
+    envelope may not survive the measured one."""
+    _BACKEND_CONSTANTS[str(backend)] = constants
+    for key in [k for k in _CACHE if k[4] == str(backend)]:
+        del _CACHE[key]
+
+
+def reset_backend_constants() -> None:
+    _BACKEND_CONSTANTS.clear()
 
 
 def _ceil128(n: int) -> int:
@@ -112,8 +151,15 @@ def padded_rows(n_rows: int, block_m: int, max_tile: int) -> int:
 
 def cell_model(n_features: int, hp: int, n_proxies: int, dtype: str,
                block_m: int, n_rows: int, *,
-               max_tile: int = 8192) -> CellModel:
-    """Roofline-score one sweep cell for a chunk of ``n_rows`` records."""
+               max_tile: int = 8192,
+               backend: Optional[str] = None) -> CellModel:
+    """Roofline-score one sweep cell for a chunk of ``n_rows`` records.
+
+    ``backend`` selects the bandwidth/flops/overhead envelope: a backend
+    with registered measured constants (``calibrate_backend``) is scored
+    under those; anything else — including the default ``None`` — uses
+    the nominal module constants, bit-identically to before."""
+    bc = backend_constants(backend)
     hpp = _ceil128(hp)
     pp = _ceil128(n_proxies)
     npad = padded_rows(n_rows, block_m, max_tile)
@@ -124,12 +170,12 @@ def cell_model(n_features: int, hp: int, n_proxies: int, dtype: str,
     out_bytes = npad * pp * (1 + 4)  # keep mask + compacted survivor ids
     bytes_moved = x_bytes + out_bytes + wbytes * refetch
     flops = 2 * npad * (n_features * hpp + hpp * pp)
-    t_mem = bytes_moved / HBM_BYTES_PER_S
-    t_flop = flops / PEAK_FLOPS
-    t = LAUNCH_OVERHEAD_S + nb * GRID_STEP_OVERHEAD_S + max(t_mem, t_flop)
+    t_mem = bytes_moved / bc.hbm_bytes_per_s
+    t_flop = flops / bc.peak_flops
+    t = bc.launch_overhead_s + nb * bc.grid_step_overhead_s + max(t_mem, t_flop)
     # useful bytes: the unpadded rows' traffic + one copy of the weights
     useful = n_rows * (n_features * 4 + pp * 5) + wbytes
-    mbu = useful / (t * HBM_BYTES_PER_S)
+    mbu = useful / (t * bc.hbm_bytes_per_s)
     per_row = 4 * (n_features + hpp) + 9 * pp
     feasible = per_row * block_m <= VMEM_BLOCK_BUDGET
     return CellModel(block_m=int(block_m), dtype=dtype, n_rows=int(n_rows),
@@ -216,6 +262,10 @@ def _load_disk_cache() -> None:
     if not path:
         return
     for key, cfg in _read_disk_table(path).items():
+        # disk entries were swept under the nominal envelope; a backend
+        # running calibrated constants must re-sweep, not inherit them
+        if backend_constants(key[4]).source != "default":
+            continue
         _CACHE.setdefault(key, cfg)
 
 
@@ -236,7 +286,11 @@ def _save_disk_cache() -> None:
     if not path:
         return
     merged = _read_disk_table(path)
-    merged.update(_CACHE)
+    # never publish winners swept under MEASURED constants: they price
+    # this machine's silicon, and the shared table is read by peers whose
+    # calibration (or lack of one) differs
+    merged.update({k: v for k, v in _CACHE.items()
+                   if backend_constants(k[4]).source == "default"})
     table = {
         json.dumps(list(k)): {
             "block_m": v.block_m, "dtype": v.dtype,
@@ -286,7 +340,7 @@ def choose_block_m(n_features: int, hp: int, n_proxies: int,
     _STATS["sweeps"] += 1
     static_bm = static_heuristic_block_m(n_features, hp, n_proxies, max_tile)
     cells = [cell_model(n_features, hp, n_proxies, dtype, bm, hint_b,
-                        max_tile=max_tile)
+                        max_tile=max_tile, backend=backend)
              for bm in _candidates(max_tile)]
     feasible = [c for c in cells if c.feasible]
     if not feasible:
@@ -299,7 +353,11 @@ def choose_block_m(n_features: int, hp: int, n_proxies: int,
                       bytes_moved=best.bytes_moved, mbu=best.mbu,
                       static_block_m=static_bm, source="sweep")
     _CACHE[key] = cfg
-    _save_disk_cache()
+    # calibrated winners are this process's measurement — persisting them
+    # would poison peers running under the nominal (or their own
+    # measured) envelope, since the disk key does not carry constants
+    if backend_constants(backend).source == "default":
+        _save_disk_cache()
     return cfg
 
 
@@ -336,6 +394,70 @@ def sweep_table(shapes, dtypes=("float32", "int8"), *,
                     "source": cfg.source,
                 })
     return rows
+
+
+def calibrate_backend(scorer, *, backend: Optional[str] = None,
+                      rows: Tuple[int, int] = (256, 8192),
+                      repeats: int = 3,
+                      register: bool = True) -> BackendConstants:
+    """Fit the roofline constants for THIS backend from measured
+    wall-clock instead of the baked TPU-ish defaults.
+
+    Two ``measure_cell`` points bracket the chunk-size axis: the byte
+    delta between them over the time delta is the achieved streaming
+    bandwidth (the fixed launch/overhead terms cancel in the
+    difference), the small-point residual after memory time prices the
+    launch overhead, and peak FLOPs scale with the fitted bandwidth
+    ratio (the model only ever compares cells on one backend, so the
+    compute roof needs the right ORDER, not the right absolute).  Every
+    fitted constant is clamped positive; a degenerate measurement (zero
+    or negative deltas — e.g. interpret mode noise) falls back to the
+    nominal default for that constant rather than registering garbage.
+
+    ``register=True`` installs the result via ``set_backend_constants``
+    so subsequent ``choose_block_m`` sweeps for this backend score under
+    the measured envelope.  Runs that never call this keep the default
+    constants and pick byte-identical blocks to the pre-calibration
+    tuner."""
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    f = int(scorer.n_features)
+    hp = int(scorer.w1.shape[1])
+    p = int(scorer.n_proxies)
+    dtype = str(scorer.dtype)
+    bm = int(scorer.block_m)
+    mt = int(scorer.max_tile)
+    r_small, r_large = int(min(rows)), int(max(rows))
+    t_small = measure_cell(scorer, r_small, repeats=repeats)
+    t_large = measure_cell(scorer, r_large, repeats=repeats)
+    cm_small = cell_model(f, hp, p, dtype, bm, r_small, max_tile=mt)
+    cm_large = cell_model(f, hp, p, dtype, bm, r_large, max_tile=mt)
+    d_bytes = cm_large.bytes_moved - cm_small.bytes_moved
+    d_t = t_large - t_small
+    if d_bytes > 0 and d_t > 1e-9:
+        bw = float(d_bytes) / float(d_t)
+    else:
+        bw = _DEFAULT_CONSTANTS.hbm_bytes_per_s
+    # the compute roof scales with the memory roof: only the RATIO of
+    # the two roofs (the knee position) affects any ranking on a single
+    # backend, and preserving the default ratio keeps it where exact
+    # byte/flop counts put it
+    peak = _DEFAULT_CONSTANTS.peak_flops * (
+        bw / _DEFAULT_CONSTANTS.hbm_bytes_per_s)
+    launch = t_small - cm_small.bytes_moved / bw \
+        - cm_small.nb * _DEFAULT_CONSTANTS.grid_step_overhead_s
+    if launch <= 0:
+        launch = _DEFAULT_CONSTANTS.launch_overhead_s
+    bc = BackendConstants(
+        hbm_bytes_per_s=bw, peak_flops=peak,
+        launch_overhead_s=float(launch),
+        grid_step_overhead_s=_DEFAULT_CONSTANTS.grid_step_overhead_s,
+        source="measured")
+    if register:
+        set_backend_constants(str(backend), bc)
+    return bc
 
 
 def measure_cell(scorer, n_rows: int, *, repeats: int = 3) -> float:

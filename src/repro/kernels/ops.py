@@ -407,6 +407,12 @@ WIRE_VERSION = 1
 WIRE_MINOR_FRAME = 1
 FRAME_RESYNC = "resync"  # payload: a v1 scorer artifact for a fenced host
 FRAME_DELTA = "delta"  # payload: JSON-encoded consensus StateDelta
+# payload: a v1/v1.2 scorer artifact; meta: the plan-cache stats sidecar
+# (fingerprint digest + stat vector, B&B candidate orders and L-node
+# measurements, hit counters) — one frame per persisted cache entry, so
+# the cross-query plan cache (core/plan_cache.py) survives restarts and
+# ships coordinator->fleet over the same wire family as everything else
+FRAME_PLANCACHE = "plancache"
 # v1.2: minor 2 is a QUANTIZED scorer artifact — the packed tensors travel
 # as int8 (or fp8-simulated) codes, and the scorer header gains "dtype"
 # plus a per-stage "out_scale" array ref.  fp32 artifacts keep minor 0

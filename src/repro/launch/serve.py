@@ -86,6 +86,13 @@ def main():
     ap.add_argument("--no-backpressure", action="store_true",
                     help="disable degrade + shedding on the front end "
                          "(watch the latency collapse under overload)")
+    ap.add_argument("--plan-cache", default=None, metavar="PATH",
+                    help="cross-query plan cache file (DESIGN.md §8): "
+                         "warm-start this query's optimization from the "
+                         "most similar cached plan (exact repeats replay "
+                         "with no proxy training at all), and persist "
+                         "every plan this run commits — including drift "
+                         "re-optimizations — back to PATH for the next run")
     args = ap.parse_args()
 
     ds = make_dataset(n=args.n, correlation=args.correlation, seed=args.seed)
@@ -96,6 +103,15 @@ def main():
                    seed=args.seed + 1)
     print("query:", " AND ".join(q.names()), f"A={args.accuracy}")
     k = max(1000, int(0.05 * args.n))
+    cache = None
+    if args.plan_cache and args.mode in ("core", "core-a", "core-h"):
+        import os
+
+        from repro.core import PlanCache
+
+        cache = (PlanCache.load(args.plan_cache)
+                 if os.path.exists(args.plan_cache) else PlanCache())
+        print(f"plan cache: {args.plan_cache} ({len(cache)} entries)")
     if args.mode == "orig":
         plan = orig_plan(q)
     elif args.mode == "ns":
@@ -105,10 +121,21 @@ def main():
     else:
         # K > 1 implies the adaptive loop: the coordinator's quorum
         # re-optimizations need the builder/B&B state to warm-start
-        plan = optimize(q, ds.x[:k], mode=args.mode, kind=args.proxy_kind,
-                        keep_state=args.adaptive or args.hosts > 1,
-                        quant_dtype=(None if args.quant_dtype == "fp32"
-                                     else args.quant_dtype))
+        keep = args.adaptive or args.hosts > 1
+        qd = None if args.quant_dtype == "fp32" else args.quant_dtype
+        if cache is not None:
+            # adaptive/sharded serving needs a live builder/B&B on the
+            # plan, which an exact-hit wire replay cannot carry — those
+            # callers take the warm path instead of the HIT fast path
+            plan, info = cache.warm_optimize(
+                q, ds.x[:k], mode=args.mode, kind=args.proxy_kind,
+                keep_state=keep, quant_dtype=qd, accept_hit=not keep)
+            print(f"plan cache: {info['path'].upper()} "
+                  f"(distance {info['distance']:.4f}, "
+                  f"build {info['build_ms']:.0f} ms)")
+        else:
+            plan = optimize(q, ds.x[:k], mode=args.mode, kind=args.proxy_kind,
+                            keep_state=keep, quant_dtype=qd)
     print(plan.describe())
     if plan.meta.get("quant_dtype"):
         print(f"packed cascade weights: {plan.meta['quant_dtype']}")
@@ -117,11 +144,13 @@ def main():
               " ".join(s.proxy.family for s in plan.stages if s.proxy is not None))
 
     if args.hosts > 1:
-        _serve_sharded(args, ds, q, plan)
+        _serve_sharded(args, ds, q, plan, cache)
+        _save_cache(cache, args)
         return
 
     if args.slo_ms is not None:
-        _serve_frontend(args, ds, plan, k)
+        _serve_frontend(args, ds, plan, k, cache)
+        _save_cache(cache, args)
         return
 
     if args.drift:
@@ -136,7 +165,8 @@ def main():
     else:
         x_serve = ds.x[k:]
     server = CascadeServer(plan, tile=args.tile, use_kernel=True,
-                           adaptive=args.adaptive, seed=args.seed)
+                           adaptive=args.adaptive, seed=args.seed,
+                           plan_cache=cache)
     stats = server.run_stream(x_serve)
     orig_res = execute_plan(orig_plan(q), x_serve)
     # accuracy of what was actually SERVED (mid-stream swaps included),
@@ -160,9 +190,22 @@ def main():
     print(f"cost model: {stats.model_cost_ms / len(x_serve):.3f} ms/rec "
           f"(ORIG {orig_res.cost_per_record(len(x_serve)):.3f}); "
           f"served accuracy {served_acc:.3f}")
+    _save_cache(cache, args)
 
 
-def _serve_frontend(args, ds, plan, k):
+def _save_cache(cache, args):
+    """Persist the plan cache (COREPLNC container) with this run's
+    write-backs so the next ``--plan-cache`` run warm-starts from them."""
+    if cache is None:
+        return
+    cache.save(args.plan_cache)
+    st = cache.stats
+    print(f"plan cache saved: {len(cache)} entries -> {args.plan_cache} "
+          f"({st.hits_exact} exact / {st.hits_warm} warm hits, "
+          f"{st.writes} writes)")
+
+
+def _serve_frontend(args, ds, plan, k, cache=None):
     """Single-host serving through the SLO-aware request front end: the
     held-out stream arrives as Poisson requests with per-request
     deadlines; goodput is reported next to raw throughput (DESIGN.md
@@ -186,7 +229,7 @@ def _serve_frontend(args, ds, plan, k):
     arrivals = np.cumsum(rng.exponential(1e3 / rate, n_req))
     bp = not args.no_backpressure
     server = CascadeServer(plan, tile=args.tile, use_kernel=True,
-                           seed=args.seed)
+                           seed=args.seed, plan_cache=cache)
     fe = ServingFrontEnd(server, policy=SLOPolicy(degrade=bp,
                                                   shed_expired=bp))
     for r in range(n_req):
@@ -212,7 +255,7 @@ def _serve_frontend(args, ds, plan, k):
           f"rejected; conservation {'OK' if ok else 'VIOLATED: ' + msg}")
 
 
-def _serve_sharded(args, ds, q, plan):
+def _serve_sharded(args, ds, q, plan, cache=None):
     """K-host sharded serving with quorum-voted swaps (DESIGN.md §6)."""
     import numpy as np
 
@@ -270,7 +313,8 @@ def _serve_sharded(args, ds, q, plan):
                                kill_coordinator_at=kill_at,
                                straggler_host=args.straggler_host,
                                worker_spec=worker_spec,
-                               slo_ms=args.slo_ms)
+                               slo_ms=args.slo_ms,
+                               plan_cache=cache)
     stats = srv.run_streams(xs)
     x_all = np.concatenate(xs)
     orig_res = execute_plan(orig_plan(q), x_all)

@@ -73,6 +73,7 @@ class ServeStats:
     audit_records: int = 0
     audit_cost_ms: float = 0.0  # cost-model charge for audit UDF runs
     scorer_cache_hits: int = 0
+    plan_cache_writebacks: int = 0  # committed plans recorded cross-query
     drift_events: List[DriftEvent] = field(default_factory=list)
 
     @property
@@ -168,13 +169,19 @@ class CascadeServer:
     def __init__(self, plan: PhysicalPlan, *, tile: int = 1024,
                  use_kernel: bool = True, fused: bool = True,
                  adaptive: bool = False,
-                 policy: Optional[AdaptivePolicy] = None, seed: int = 0):
+                 policy: Optional[AdaptivePolicy] = None, seed: int = 0,
+                 plan_cache=None):
         self.query = plan.query
         self.tile = tile
         self.use_kernel = use_kernel
         self.fused = fused
         self.adaptive = adaptive
         self.policy = policy or AdaptivePolicy()
+        # cross-query plan cache (core.plan_cache.PlanCache): every plan
+        # this server commits — the initial install and each drift
+        # re-optimization — is written back so a similar future query can
+        # warm-start its optimization (DESIGN.md §8)
+        self.plan_cache = plan_cache
         n = len(plan.stages)
         self.emitted: List[int] = []
         # plan version each emission was scored AND served under (parallel
@@ -194,6 +201,7 @@ class CascadeServer:
             self._scorer = proxy_score_batch
         self._states: List[_PlanState] = []
         self._install(plan)
+        self._record_to_cache(plan)
         # adaptive machinery
         self._rng = np.random.RandomState(seed)
         self._audit_sampler = ImportanceAuditSampler(
@@ -254,6 +262,17 @@ class CascadeServer:
             for i in range(self.query.n) for j in range(i + 1, self.query.n)
         }
         self._kappa_snapshot: Optional[Dict[Tuple[int, int], float]] = None
+
+    def _record_to_cache(self, plan: PhysicalPlan) -> None:
+        """Write a committed plan back to the cross-query plan cache.
+        Fingerprinted with this server's re-optimization step so the
+        initial plan and every drift re-plan of the same query land on
+        one entry, each write refreshing it with reservoir-fresh
+        selectivities."""
+        if self.plan_cache is None:
+            return
+        if self.plan_cache.record_plan(plan, step=self.policy.step) is not None:
+            self.stats.plan_cache_writebacks += 1
 
     # --------------------------------------- external coordination (sharded)
     def install_plan(self, plan: PhysicalPlan, *, scorer=None,
@@ -562,6 +581,7 @@ class CascadeServer:
             self.stats.model_cost_ms += charge
         self._install(new_plan)
         self.stats.plan_swaps += 1
+        self._record_to_cache(new_plan)
         trace = new_plan.meta.get("trace") or {}
         self.stats.drift_events.append(DriftEvent(
             at_record=self._records_submitted, signal=signal,

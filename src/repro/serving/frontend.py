@@ -27,8 +27,11 @@ Time base: everything is the engine's deterministic cost-model clock
 host time and never enters any decision or reported metric here, so runs
 are bit-reproducible and gateable (DESIGN.md §2).
 
-Conservation contract (property-tested): every submitted record is
+Conservation contract (property-tested): every admitted record is
 exactly one of {emitted, rejected-by-the-cascade, explicitly shed};
+admission-rejected requests (deadline provably unmeetable at the
+cheapest degrade rung — refused up front, distinct from shed) never
+contribute records to any of the three;
 ``engine.in_flight() == 0`` after ``drain()``; shed records never appear
 in ``engine.emitted``.  This holds across deadline expiry, degrade
 installs, and external (quorum) plan hot-swaps.
@@ -106,6 +109,9 @@ class Request:
     rejected: int = 0
     shed_ids: List[int] = field(default_factory=list)
     done_ms: Optional[float] = None
+    # refused at admission: no row was ever submitted or shed — the
+    # deadline was provably unmeetable even at the cheapest degrade rung
+    admission_rejected: bool = False
 
     @property
     def n(self) -> int:
@@ -135,8 +141,10 @@ class Request:
     def met_slo(self) -> bool:
         """A request meets its SLO iff it finished within the deadline
         AND nothing was shed — shed work is an explicit SLO miss, never a
-        silent success."""
+        silent success.  An admission-rejected request finishes instantly
+        but served zero records: never an SLO success."""
         return (self.done_ms is not None and self.shed == 0
+                and not self.admission_rejected
                 and self.latency_ms <= self.deadline_ms + 1e-9)
 
 
@@ -156,6 +164,10 @@ class SLOPolicy:
     the epoch ordering; see DESIGN.md §7)."""
 
     shed_expired: bool = True
+    # refuse (at admission) requests whose deadline cannot be met even at
+    # the cheapest degrade rung with ZERO queueing — rejecting up front
+    # costs nothing; shedding later costs the capacity already spent
+    admission_control: bool = True
     degrade: bool = True
     min_stages: int = 1
     degrade_headroom: float = 0.85
@@ -173,6 +185,10 @@ class FrontEndStats:
     requests_done: int = 0
     requests_met_slo: int = 0
     requests_shed: int = 0        # requests with >= 1 shed record
+    # admission-time refusals: distinct from shed — a rejected request
+    # never occupied queue capacity or engine work at all
+    requests_rejected_admission: int = 0
+    records_rejected_admission: int = 0
     records_submitted: int = 0
     records_emitted: int = 0
     records_rejected: int = 0
@@ -335,6 +351,17 @@ class ServingFrontEnd:
         cost-model cost (observed at the CURRENT degrade level)."""
         return self._queued_rows() * self._row_ms
 
+    def _cheapest_row_ms(self) -> float:
+        """Per-row cost-model estimate at the degrade ladder's CHEAPEST
+        rung: the observed EWMA (tracking the current level) rescaled by
+        the Eq. 3.1 price ratio — the best-case service rate any amount
+        of degrading could reach."""
+        cur_est = (self._ladder[self.level][0].est_total_cost
+                   if self._ladder else self._base_cost) or self._base_cost
+        cheap_est = (self._ladder[-1][0].est_total_cost
+                     if self._ladder else cur_est) or cur_est
+        return self._row_ms * cheap_est / max(cur_est, 1e-12)
+
     def _admit(self) -> int:
         n = 0
         while self._arrivals and self._arrivals[0].arrival_ms <= self.now_ms + 1e-9:
@@ -342,6 +369,17 @@ class ServingFrontEnd:
             if self._t0_ms is None:
                 self._t0_ms = req.arrival_ms
             if req.n == 0:  # degenerate empty request: done on arrival
+                self._finish(req)
+                continue
+            if self.policy.admission_control \
+                    and req.n * self._cheapest_row_ms() > req.deadline_ms + 1e-9:
+                # provably unmeetable: even with an empty queue at the
+                # cheapest rung, pure service time exceeds the deadline.
+                # Refuse now — the client learns immediately, and no
+                # queue slot or engine work is wasted on a lost cause
+                req.admission_rejected = True
+                self.stats.requests_rejected_admission += 1
+                self.stats.records_rejected_admission += req.n
                 self._finish(req)
                 continue
             self._pending.append(req)
@@ -561,6 +599,14 @@ class ServingFrontEnd:
         if len(emitted) != len(self.engine.emitted):
             return False, "duplicate emissions"
         for req in self.requests.values():
+            if req.admission_rejected:
+                # never entered the pipeline: nothing submitted, shed,
+                # emitted, or in flight may be attributed to it
+                if (req.cursor, req.outstanding, req.emitted,
+                        req.rejected, req.shed) != (0, 0, 0, 0, 0):
+                    return False, (f"rid {req.rid}: admission-rejected "
+                                   f"request has pipeline activity")
+                continue
             if req.cursor != req.n:
                 return False, f"rid {req.rid}: {req.n - req.cursor} rows unaccounted"
             if req.submitted != req.emitted + req.rejected:

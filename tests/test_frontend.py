@@ -76,9 +76,16 @@ def test_frontend_conservation_property(fe_workload, seed, slo_factor, swap):
     assert engine.in_flight() == 0
     emitted = set(engine.emitted)
     assert len(emitted) == len(engine.emitted)  # emitted-uniqueness
-    n_total = emitted_total = shed_total = 0
+    n_total = emitted_total = shed_total = rejected_total = 0
     for req in fe.requests.values():
         assert req.done, f"rid {req.rid} never finished"
+        if req.admission_rejected:
+            # a refused request never touched the queue or the engine
+            assert (req.cursor, req.submitted, req.emitted, req.shed) \
+                == (0, 0, 0, 0)
+            assert not req.met_slo
+            rejected_total += req.n
+            continue
         assert req.cursor == req.n
         assert req.submitted == req.emitted + req.rejected
         assert not (set(req.shed_ids) & emitted)
@@ -88,6 +95,7 @@ def test_frontend_conservation_property(fe_workload, seed, slo_factor, swap):
     assert n_total == fe.stats.records_submitted + fe.stats.records_shed
     assert emitted_total == len(emitted)
     assert shed_total == fe.stats.records_shed
+    assert rejected_total == fe.stats.records_rejected_admission
 
 
 # ----------------------------------------------------------------- shedding
@@ -96,7 +104,9 @@ def test_frontend_sheds_expired_explicitly(fe_workload):
     and the request still completes — as an explicit SLO miss."""
     ds, plan = fe_workload
     engine = CascadeServer(plan, tile=128, use_kernel=False)
-    fe = ServingFrontEnd(engine)
+    # admission control off: this test exercises the mid-queue shed path,
+    # which admission-time rejection would otherwise preempt
+    fe = ServingFrontEnd(engine, policy=SLOPolicy(admission_control=False))
     idx = np.arange(2000, 2600)
     # the backlog request saturates the queue; the victim's deadline is
     # far below one row's service time so its tail must be shed
@@ -124,7 +134,7 @@ def test_frontend_no_shed_when_disabled(fe_workload):
     ds, plan = fe_workload
     engine = CascadeServer(plan, tile=128, use_kernel=False)
     fe = ServingFrontEnd(engine, policy=SLOPolicy(
-        degrade=False, shed_expired=False))
+        degrade=False, shed_expired=False, admission_control=False))
     idx = np.arange(2000, 2400)
     rid = fe.submit_request(idx, ds.x[idx], deadline_ms=1e-3,
                             arrival_ms=0.0)
@@ -135,6 +145,75 @@ def test_frontend_no_shed_when_disabled(fe_workload):
     assert req.done and req.shed == 0
     assert req.submitted == req.n
     assert not req.met_slo
+
+
+# -------------------------------------------------------- admission control
+def test_admission_rejects_unmeetable_deadline(fe_workload):
+    """A request that cannot meet its deadline even at the CHEAPEST
+    degrade rung is refused at admission: no queue slot, no engine work,
+    counted as rejected — NOT as shed."""
+    ds, plan = fe_workload
+    engine = CascadeServer(plan, tile=128, use_kernel=False)
+    fe = ServingFrontEnd(engine)
+    idx = np.arange(2000, 2300)
+    rid = fe.submit_request(idx, ds.x[idx], deadline_ms=1e-3,
+                            arrival_ms=0.0)
+    fe.run()
+    ok, why = fe.conserved()
+    assert ok, why
+    req = fe.requests[rid]
+    assert req.done and req.admission_rejected
+    assert not req.met_slo
+    # zero pipeline activity — rejection is cheaper than shedding
+    assert (req.cursor, req.submitted, req.emitted, req.shed) == (0, 0, 0, 0)
+    assert fe.stats.requests_rejected_admission == 1
+    assert fe.stats.records_rejected_admission == len(idx)
+    assert fe.stats.requests_shed == 0 and fe.stats.records_shed == 0
+    assert engine.in_flight() == 0 and len(engine.emitted) == 0
+
+
+def test_admission_admits_deadline_feasible_at_cheapest_rung(fe_workload):
+    """A deadline infeasible at the full plan but feasible at the
+    cheapest ladder rung must be ADMITTED — the degrade ladder is the
+    mechanism that can still serve it."""
+    ds, plan = fe_workload
+    engine = CascadeServer(plan, tile=128, use_kernel=False)
+    fe = ServingFrontEnd(engine)
+    cheapest = fe._cheapest_row_ms()
+    full = fe._row_ms
+    assert cheapest < full  # the ladder actually prices levels apart
+    idx = np.arange(2000, 2100)
+    # between the cheapest rung and the full plan: admissible, will
+    # likely require degrading, but never rejected
+    deadline = 0.5 * (cheapest + full) * len(idx)
+    rid = fe.submit_request(idx, ds.x[idx], deadline_ms=deadline,
+                            arrival_ms=0.0)
+    fe.run()
+    ok, why = fe.conserved()
+    assert ok, why
+    req = fe.requests[rid]
+    assert not req.admission_rejected
+    assert req.done and req.cursor == req.n  # actually entered the queue
+    assert fe.stats.requests_rejected_admission == 0
+
+
+def test_admission_control_off_falls_back_to_shed(fe_workload):
+    """With admission_control=False the same unmeetable request takes
+    the legacy path: admitted, then shed by the deadline checker."""
+    ds, plan = fe_workload
+    engine = CascadeServer(plan, tile=128, use_kernel=False)
+    fe = ServingFrontEnd(engine, policy=SLOPolicy(admission_control=False))
+    idx = np.arange(2000, 2300)
+    rid = fe.submit_request(idx, ds.x[idx], deadline_ms=1e-3,
+                            arrival_ms=0.0)
+    fe.run()
+    ok, why = fe.conserved()
+    assert ok, why
+    req = fe.requests[rid]
+    assert not req.admission_rejected
+    assert req.shed > 0
+    assert fe.stats.requests_rejected_admission == 0
+    assert fe.stats.requests_shed == 1
 
 
 # ------------------------------------------------------------ degrade ladder

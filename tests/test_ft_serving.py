@@ -594,3 +594,43 @@ def test_process_transport_fleet(workload):
     assert stats.swaps_committed >= 1
     assert {h.epoch for h in srv.hosts} == {stats.final_epoch}
     _assert_conserved(srv, stats)
+
+
+@pytest.mark.slow
+@pytest.mark.flaky
+def test_process_transport_slo_frontend(workload):
+    """slo_ms crosses the process boundary: each subprocess host runs an
+    SLO front end worker-side, its FrontEndStats ride the drain reply
+    back over the pipe, and fleet_goodput_ratio aggregates them — the
+    thread transport's goodput contract, minus the shared memory."""
+    spec = {
+        "dataset": dict(n=7000, n_features=64, n_columns=3, correlation=0.9,
+                        feature_noise=0.9, label_noise=0.2, seed=41),
+        "udfs": dict(hidden=16, depth=1, train_rows=1000, seed=41,
+                     declared_cost_ms=10.0),
+        "query": dict(columns=[0, 1, 2], target_selectivity=0.5,
+                      accuracy_target=0.9, seed=42),
+    }
+    ds2 = make_dataset(**spec["dataset"])
+    udfs2 = make_udfs(ds2, **spec["udfs"])
+    q2 = make_query(ds2, udfs2, **spec["query"])
+    plan = optimize(q2, ds2.x[:1200], mode="core", step=0.05, keep_state=True)
+    streams = make_sharded_drifting_streams(
+        ds2, 2, 700, 2000, shift_targets={0: 2.8, 1: -2.6, 2: 2.8},
+        corr_gain=2.5, drift_skew=0.3, seed=41)
+    # generous per-chunk deadline: every request should meet its SLO
+    slo = 200.0 * plan.est_total_cost * 400
+    srv = ShardedCascadeServer(plan, 2, tile=256,
+                               policy=_policy(threshold=200.0), seed=3,
+                               transport="process", worker_spec=spec,
+                               slo_ms=slo)
+    stats = srv.run_streams([s.x for s in streams], chunk=400)
+    assert len(stats.frontend_stats) == 2
+    assert all(f.requests_done > 0 for f in stats.frontend_stats)
+    assert all(f.requests_rejected_admission == 0
+               for f in stats.frontend_stats)
+    assert stats.fleet_goodput_ratio > 0.0
+    # frontend-aware conservation at fleet level (the engines live in
+    # the subprocesses; their row-level invariants are checked worker-side)
+    shed = sum(f.records_shed for f in stats.frontend_stats)
+    assert stats.submitted == stats.emitted + stats.rejected + shed

