@@ -21,6 +21,7 @@ import numpy as np
 from benchmarks.common import build_queries, build_workload, csv_row, evaluate_all
 from repro.core import BranchAndBound, ProxyBuilder, execute_plan, optimize
 from repro.data.synthetic import make_dataset, make_query, make_udfs
+from repro.util import atomic_write_text
 
 BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_components.json"
 
@@ -169,6 +170,7 @@ def write_bench_json(throughput: dict, adaptive: dict | None = None,
                      quant: dict | None = None,
                      frontend: dict | None = None,
                      plan_cache: dict | None = None,
+                     static_analysis: dict | None = None,
                      path: Path = BENCH_JSON) -> None:
     payload = {
         "bench": "components",
@@ -189,7 +191,9 @@ def write_bench_json(throughput: dict, adaptive: dict | None = None,
         payload["serving_frontend"] = frontend
     if plan_cache is not None:
         payload["plan_cache"] = plan_cache
-    path.write_text(json.dumps(payload, indent=2) + "\n")
+    if static_analysis is not None:
+        payload["static_analysis"] = static_analysis
+    atomic_write_text(path, json.dumps(payload, indent=2) + "\n")
 
 
 def run(quick: bool = True):

@@ -70,6 +70,39 @@ from benchmarks.bench_sharded import (  # noqa: E402
     bench_fault_tolerance,
     bench_sharded_throughput,
 )
+from repro.analysis.corelint import load_baseline, run_corelint  # noqa: E402
+from repro.analysis.protocol_check import CheckConfig, check  # noqa: E402
+from repro.util import atomic_write_text  # noqa: E402
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+CORELINT_BASELINE = REPO_ROOT / "corelint_baseline.json"
+
+
+def run_static_analysis() -> dict:
+    """The lint-lane checks, as gated metrics: corelint must be clean
+    (zero non-baselined findings over src/ + benchmarks/) and the strict
+    swap-protocol model check must hold over a state space at least as
+    large as the recorded one — a shrinking space means the enumeration
+    silently lost reach, which would let a protocol regression hide."""
+    lint = run_corelint([REPO_ROOT / "src", REPO_ROOT / "benchmarks"],
+                        root=REPO_ROOT,
+                        baseline=load_baseline(CORELINT_BASELINE))
+    strict = check(CheckConfig(n_hosts=3))
+    legacy = check(CheckConfig(n_hosts=3, legacy_acks=True))
+    return {
+        "lint_violations": len(lint.violations),
+        "lint_suppressed": lint.suppressed,
+        "lint_baselined": lint.baselined,
+        "lint_files_scanned": lint.files_scanned,
+        "protocol_safe": bool(strict.violation is None
+                              and all(strict.witnesses.values())),
+        "protocol_states_explored": strict.states_explored,
+        "protocol_transitions": strict.transitions,
+        "protocol_witnesses": strict.witnesses,
+        # the checker must still FIND the pre-attempt-nonce bug, or it
+        # has lost its teeth
+        "protocol_teeth": bool(legacy.violation is not None),
+    }
 
 BASELINE = Path(__file__).resolve().parent / "baseline_components.json"
 
@@ -136,7 +169,7 @@ def _update_baseline(base: dict, gates: List[Gate]) -> None:
             base[g.record_key] = (int(round(g.current))
                                   if g.fmt == "{:.0f}"
                                   else round(g.current, 4))
-    BASELINE.write_text(json.dumps(base, indent=2) + "\n")
+    atomic_write_text(BASELINE, json.dumps(base, indent=2) + "\n")
     print(f"baseline updated: {BASELINE} "
           f"({sum(1 for g in gates if g.record_key)} recorded values)")
 
@@ -166,14 +199,15 @@ def main(argv=None) -> int:
     # fixed workload + seeds: node counts and costs deterministic per
     # environment, only the hit-ratio column is wall-clock
     pc = bench_plan_cache()
+    sa = run_static_analysis()
     write_bench_json(throughput, adaptive, mlp, sharded, fault_tolerance=ft,
                      quant={k: v for k, v in quant.items()
                             if k != "sweep_rows"},
                      frontend={**fe, "sharded": fes},
-                     plan_cache=pc)
+                     plan_cache=pc, static_analysis=sa)
     print(f"wrote {BENCH_JSON}")
     SWEEP_JSON.parent.mkdir(parents=True, exist_ok=True)
-    SWEEP_JSON.write_text(json.dumps(
+    atomic_write_text(SWEEP_JSON, json.dumps(
         {"rows": quant["sweep_rows"],
          "wins": quant["autotune_wins"],
          "shapes": quant["autotune_shapes"]}, indent=1) + "\n")
@@ -200,6 +234,7 @@ def main(argv=None) -> int:
         "REGRESSION_MIN_GOODPUT_RATIO", base["min_goodput_ratio"]))
     max_goodput_nobp = float(base["max_goodput_ratio_nobp"])
     max_hit_ratio = float(base["max_plan_cache_hit_ratio"])
+    min_protocol_states = float(base["recorded_protocol_states"])
 
     worst_consensus = max(sharded["consensus_ms_per_swap"] or [0.0])
     fo, strag, pooled = (ft["failover"], ft["straggler"], ft["pooled_kappa"])
@@ -341,6 +376,17 @@ def main(argv=None) -> int:
                    >= pc["dissimilar_accuracy_uncached"] - 1e-9),
              1.0, 1.0, fmt="{:.0f}"),
         Gate("plan_cache_roundtrip_stable", float(pc["roundtrip_stable"]),
+             1.0, 1.0, fmt="{:.0f}"),
+        # ----- static analysis & protocol checking (lint lane, gated) -----
+        Gate("lint_violations", float(sa["lint_violations"]), 0.0, 0.0,
+             higher_is_better=False, fmt="{:.0f}"),
+        Gate("protocol_safe", float(sa["protocol_safe"]), 1.0, 1.0,
+             fmt="{:.0f}"),
+        Gate("protocol_states_explored",
+             float(sa["protocol_states_explored"]), min_protocol_states,
+             base.get("recorded_protocol_states"), fmt="{:.0f}",
+             record_key="recorded_protocol_states"),
+        Gate("protocol_checker_has_teeth", float(sa["protocol_teeth"]),
              1.0, 1.0, fmt="{:.0f}"),
     ]
 

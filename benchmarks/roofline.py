@@ -20,6 +20,7 @@ from __future__ import annotations
 import argparse
 import json
 from pathlib import Path
+from repro.util import atomic_write_text
 
 RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
 
@@ -143,7 +144,7 @@ def main():
     if args.json:
         out = Path(args.json)
         out.parent.mkdir(parents=True, exist_ok=True)
-        out.write_text(json.dumps(
+        atomic_write_text(out, json.dumps(
             {"rows": rows, "wins_by_shape": wins}, indent=1))
         print(f"# wrote {out}")
 

@@ -4,12 +4,13 @@
 # quantized cascade, SLO-aware serving front end with goodput gating,
 # cross-query plan cache with similarity warm-start).
 #
-#   scripts/ci.sh                          default: tier1 + bench (full)
+#   scripts/ci.sh                          default: lint + tier1 + bench
 #   scripts/ci.sh --lane fast              iteration lane (no @slow/@flaky)
 #   scripts/ci.sh --lane tier1,fast        comma-separated / repeated lanes
 #   scripts/ci.sh --lane bench --quick     quick benchmark workload
 #   scripts/ci.sh --lane slow              only @slow/@flaky tests
-#   scripts/ci.sh --lane all               tier1 + bench + slow
+#   scripts/ci.sh --lane lint              corelint + protocol model checker
+#   scripts/ci.sh --lane all               lint + tier1 + bench + slow
 #   scripts/ci.sh --fast                   back-compat: fast + quick bench
 #
 # Lanes:
@@ -17,6 +18,9 @@
 #   fast   pytest -m "not slow and not flaky"
 #   bench  benchmarks/check_regression.py  (prints the gate delta table)
 #   slow   pytest -m "slow or flaky"       (subprocess fleets, wall-clock)
+#   lint   scripts/corelint.py (invariant lint, zero non-baselined
+#          findings) + repro.analysis.protocol_check (exhaustive bounded
+#          swap/failover/fence model check) + pyflakes when available
 #
 # Every requested lane runs even if an earlier one failed; the lane
 # report at the end lists per-lane wall time and status, and the script
@@ -45,12 +49,12 @@ while [ $# -gt 0 ]; do
   esac
   shift
 done
-[ ${#LANES[@]} -eq 0 ] && LANES=(tier1 bench)
+[ ${#LANES[@]} -eq 0 ] && LANES=(lint tier1 bench)
 
 EXPANDED=()
 for lane in "${LANES[@]}"; do
   if [ "$lane" = "all" ]; then
-    EXPANDED+=(tier1 bench slow)
+    EXPANDED+=(lint tier1 bench slow)
   else
     EXPANDED+=("$lane")
   fi
@@ -59,6 +63,21 @@ done
 NAMES=()
 RCS=()
 SECS=()
+
+lint_lane() {
+  python scripts/corelint.py || return 1
+  python -m repro.analysis.protocol_check || return 1
+  if python -c "import pyflakes" >/dev/null 2>&1; then
+    # advisory: bare pyflakes has no suppression syntax, so intentional
+    # side-effect imports (ml_dtypes dtype registration) would hard-fail;
+    # corelint and the protocol checker are the gating checks.
+    python -m pyflakes src || echo "pyflakes findings above are advisory"
+  else
+    # pyflakes is optional (not baked into every image); corelint and the
+    # protocol checker still gate.
+    echo "pyflakes unavailable; skipped"
+  fi
+}
 
 run_lane() {
   local name="$1"
@@ -80,8 +99,9 @@ for lane in "${EXPANDED[@]}"; do
     slow) run_lane slow python -m pytest -q -m "slow or flaky" ;;
     bench) run_lane bench python benchmarks/check_regression.py \
       ${BENCH_ARGS[@]+"${BENCH_ARGS[@]}"} ;;
+    lint) run_lane lint lint_lane ;;
     *)
-      echo "unknown lane: $lane (tier1|fast|bench|slow|all)" >&2
+      echo "unknown lane: $lane (lint|tier1|fast|bench|slow|all)" >&2
       NAMES+=("$lane"); RCS+=(2); SECS+=(0)
       ;;
   esac

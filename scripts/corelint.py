@@ -1,0 +1,99 @@
+#!/usr/bin/env python
+"""corelint CLI — invariant lint over the repo (DESIGN.md §9).
+
+Usage (from the repo root)::
+
+    PYTHONPATH=src python scripts/corelint.py                # lint src/ + benchmarks/
+    PYTHONPATH=src python scripts/corelint.py src/repro/core # lint a subtree
+    PYTHONPATH=src python scripts/corelint.py --json         # machine-readable
+    PYTHONPATH=src python scripts/corelint.py --write-baseline  # accept current findings
+
+Exit status is 1 iff any non-baselined violation remains, so CI can gate
+on it directly.  The checked-in baseline (``corelint_baseline.json``) is
+intentionally empty — keep it that way by fixing or explicitly
+suppressing new findings, not by re-baselining.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.analysis.corelint import (  # noqa: E402
+    RULES,
+    load_baseline,
+    run_corelint,
+    write_baseline,
+)
+
+DEFAULT_PATHS = ["src", "benchmarks"]
+DEFAULT_BASELINE = REPO_ROOT / "corelint_baseline.json"
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("paths", nargs="*", help=f"files/dirs to lint (default: {DEFAULT_PATHS})")
+    parser.add_argument("--baseline", default=str(DEFAULT_BASELINE), help="baseline JSON path")
+    parser.add_argument("--no-baseline", action="store_true", help="report all findings unmasked")
+    parser.add_argument(
+        "--write-baseline", action="store_true", help="record current findings as the baseline"
+    )
+    parser.add_argument("--json", action="store_true", help="emit a JSON report to stdout")
+    parser.add_argument(
+        "--list-rules",
+        "--explain",
+        action="store_true",
+        dest="list_rules",
+        help="print the rule catalog (each rule's origin bug) and exit",
+    )
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule in RULES:
+            print(f"{rule.id}: {rule.summary}")
+            print(f"    origin: {rule.origin}")
+        return 0
+
+    paths = [REPO_ROOT / p for p in (args.paths or DEFAULT_PATHS)]
+    baseline = {} if args.no_baseline or args.write_baseline else load_baseline(args.baseline)
+    report = run_corelint(paths, root=REPO_ROOT, baseline=baseline)
+
+    if args.write_baseline:
+        counts = write_baseline(args.baseline, report.violations)
+        n = sum(c for rules in counts.values() for c in rules.values())
+        print(f"corelint: wrote baseline with {n} finding(s) to {args.baseline}")
+        return 0
+
+    if args.json:
+        print(
+            json.dumps(
+                {
+                    "violations": [v.__dict__ for v in report.violations],
+                    "suppressed": report.suppressed,
+                    "baselined": report.baselined,
+                    "files_scanned": report.files_scanned,
+                    "parse_errors": report.parse_errors,
+                },
+                indent=2,
+            )
+        )
+    else:
+        for v in report.violations:
+            print(v.format())
+        for err in report.parse_errors:
+            print(f"corelint: parse error: {err}", file=sys.stderr)
+        print(
+            f"corelint: {len(report.violations)} violation(s) "
+            f"({report.suppressed} suppressed, {report.baselined} baselined) "
+            f"across {report.files_scanned} file(s)",
+            file=sys.stderr,
+        )
+    return 1 if report.violations or report.parse_errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

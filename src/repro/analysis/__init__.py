@@ -1,0 +1,34 @@
+"""Static analysis & protocol checking (DESIGN.md §9).
+
+Two tools live here, both wired into the tier-1 CI lint lane
+(``scripts/ci.sh --lane lint``):
+
+* ``corelint`` — an AST-based invariant lint suite whose rules are
+  distilled from bugs this repo actually shipped and fixed (the
+  ``id()``-keyed scorer cache, wall-clock nearly feeding scheduling,
+  torn autotune disk writes, dropped IPW weights, ...).  See
+  ``corelint.RULES`` for the catalog, each entry carrying the historical
+  bug it descends from.
+* ``protocol_check`` — an explicit-state model checker that exhaustively
+  enumerates small-fleet interleavings of the two-phase swap /
+  standby-failover / straggler-fence protocol in
+  ``distributed/consensus.py``, asserting the invariants the PR 4/5/7
+  tests only sample.
+"""
+from repro.analysis.corelint import (
+    RULES,
+    LintReport,
+    Violation,
+    load_baseline,
+    run_corelint,
+    write_baseline,
+)
+
+__all__ = [
+    "RULES",
+    "LintReport",
+    "Violation",
+    "load_baseline",
+    "run_corelint",
+    "write_baseline",
+]

@@ -1,0 +1,595 @@
+"""Explicit-state model checker for the two-phase swap protocol.
+
+``distributed/consensus.py`` + ``distributed/serving.py`` implement a
+two-phase quorum plan swap (DriftVote quorum -> SwapPrepare/SwapAck
+barrier -> SwapCommit) with straggler fencing (serve-behind + re-sync),
+NACK/deadline aborts that re-arm voting, and a standby coordinator that
+resolves in-flight swaps on primary death.  The PR 4/5/7 tests SAMPLE
+interleavings of that machine; this module enumerates ALL of them within
+small bounds and asserts the invariants on every reachable state.
+
+The model
+---------
+States are immutable tuples (hosts, coordinator, in-flight messages,
+committed-epoch log, budgets); transitions mirror the real code paths
+one message delivery / protocol event at a time:
+
+* ``vote``/``propose`` — quorum voting and proposal (artifact ids are
+  fresh integers, so two rounds of the SAME epoch number are
+  distinguishable — exactly what ``SwapPrepare.attempt`` encodes).
+* ``deliver_prepare``/``deliver_ack``/``deliver_commit`` — asynchronous
+  message delivery, blocked while a host's link is down.
+* ``deadline`` — the transport ack deadline fires for a silent host,
+  resolved with either straggler policy (``fence`` or ``nack``).
+* ``crash`` — primary dies; the standby's ``take_over`` resolution runs
+  against the probed fleet (complete if any host installed or every
+  active host acked, abort otherwise).
+* ``heal``/``rejoin`` — the straggler's link recovers; the driver's
+  rejoin path re-admits it (direct when its epoch is current, via
+  COREWIRE re-sync when behind).
+
+Bounds (defaults): K ≤ 3 hosts, ≤ 2 proposals (two in-flight epochs),
+1 crash, 1 fence/deadline event.  ~10^4-10^5 states, sub-second BFS.
+
+Invariants (checked on EVERY reachable state/transition):
+
+* **I1 serve-only-acked** — a host only ever installs an (epoch,
+  artifact) it staged+acked itself, or received via re-sync of a
+  committed artifact; and that pair was committed by a coordinator.
+* **I2 monotonic-epochs** — a host's committed epoch never decreases.
+* **I3 abort-re-arms** — witness: a re-proposal is reachable after an
+  abort (voting was re-armed, the fleet is not wedged).
+* **I4 fence-survives-abort** — the fence set is preserved across
+  aborts (checked in the abort transition + reachability witness).
+* **I5 one-artifact-per-epoch** — at most one artifact is ever
+  committed for a given epoch (collapses "at most one primary per
+  epoch": two live coordinators would commit divergent artifacts).
+
+``legacy_acks=True`` re-enables the pre-fix ``offer_ack`` semantics
+(epoch-only matching: no fenced-host check, no attempt nonce).  The
+checker then finds, in a few thousand states, the stale-ack trace this
+PR fixed: fence a staged host, abort, let it rejoin at the same epoch
+number still holding its round-1 staged artifact, and its round-1 ack —
+still in flight — closes the round-2 barrier, committing artifact A to
+the fleet while the rejoined host installs artifact B.  The CLI runs
+both modes and fails if the strict model violates anything OR the
+legacy model fails to reproduce the bug (the checker must keep teeth).
+"""
+from __future__ import annotations
+
+import json
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, List, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# State representation (all immutable / hashable)
+# ---------------------------------------------------------------------------
+
+# Host: (epoch, artifact, staged, voted, silent, acked, resynced)
+#   staged:   None | (epoch, artifact, attempt)
+#   acked:    frozenset[(epoch, artifact)] — pairs this host staged+acked
+#   resynced: frozenset[(epoch, artifact)] — pairs installed via re-sync
+Host = Tuple[int, int, Optional[Tuple[int, int, int]], bool, bool,
+             FrozenSet[Tuple[int, int]], FrozenSet[Tuple[int, int]]]
+
+# Coordinator: (alive, epoch, artifact, attempt, pending, acks, votes,
+#               fenced, proposals)
+#   pending: None | (epoch, artifact, attempt)
+Coord = Tuple[bool, int, int, int, Optional[Tuple[int, int, int]],
+              FrozenSet[int], FrozenSet[int], FrozenSet[int], int]
+
+# Messages in flight:
+#   prepares: frozenset[(host, epoch, artifact, attempt)]
+#   acks:     frozenset[(host, epoch, attempt, ok)]
+#   commits:  frozenset[(host, epoch, attempt)]
+Msgs = Tuple[FrozenSet[tuple], FrozenSet[tuple], FrozenSet[tuple]]
+
+# flags: (aborted_once, fence_survived_abort, promoted)
+State = Tuple[Tuple[Host, ...], Coord, Msgs,
+              FrozenSet[Tuple[int, int]],  # committed (epoch, artifact)
+              Tuple[int, int],             # budgets (fences, crashes)
+              int,                         # next artifact id
+              Tuple[bool, bool, bool]]
+
+
+@dataclass
+class CheckConfig:
+    n_hosts: int = 3
+    max_proposals: int = 2  # ≤2 in-flight epochs
+    max_fences: int = 1
+    max_crashes: int = 1
+    legacy_acks: bool = False  # pre-fix offer_ack (epoch-only matching)
+
+
+class InvariantViolation(Exception):
+    def __init__(self, invariant: str, detail: str, trace: List[str]):
+        self.invariant = invariant
+        self.detail = detail
+        self.trace = trace
+        super().__init__(f"{invariant}: {detail}")
+
+
+@dataclass
+class CheckResult:
+    states_explored: int
+    transitions: int
+    violation: Optional[InvariantViolation]
+    witnesses: Dict[str, bool] = field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return self.violation is None and all(self.witnesses.values())
+
+
+def _initial_state(cfg: CheckConfig) -> State:
+    host: Host = (0, 0, None, False, False, frozenset(), frozenset())
+    coord: Coord = (True, 0, 0, 0, None, frozenset(), frozenset(),
+                    frozenset(), 0)
+    msgs: Msgs = (frozenset(), frozenset(), frozenset())
+    return ((host,) * cfg.n_hosts, coord, msgs, frozenset(),
+            (cfg.max_fences, cfg.max_crashes), 1, (False, False, False))
+
+
+def _quorum(active: int) -> int:
+    return active // 2 + 1
+
+
+# ---------------------------------------------------------------------------
+# Transition helpers (pure: State -> State)
+# ---------------------------------------------------------------------------
+
+
+def _set_host(hosts: Tuple[Host, ...], i: int, h: Host) -> Tuple[Host, ...]:
+    return hosts[:i] + (h,) + hosts[i + 1:]
+
+
+def _coord_abort(state: State, cfg: CheckConfig) -> State:
+    """NACK / deadline-nack / takeover abort: drop staged + re-arm voting
+    on every reachable host, clear the round.  Fences SURVIVE (I4)."""
+    hosts, coord, msgs, committed, budgets, nart, flags = state
+    alive, cepoch, cart, catt, pending, acks, votes, fenced, props = coord
+    new_hosts = []
+    for h in hosts:
+        epoch, art, staged, voted, silent, ackset, rsset = h
+        if silent:  # unreachable: the abort never arrives — staged survives
+            new_hosts.append(h)
+        else:
+            new_hosts.append((epoch, art, None, False, silent, ackset, rsset))
+    new_coord: Coord = (alive, cepoch, cart, catt, None, frozenset(),
+                        frozenset(), fenced, props)
+    if fenced != coord[7]:  # pragma: no cover - structural I4 guard
+        raise AssertionError("abort must not clear fences")
+    new_flags = (True, flags[1] or bool(fenced), flags[2])
+    return (tuple(new_hosts), new_coord, msgs, committed, budgets, nart,
+            new_flags)
+
+
+def _coord_maybe_commit(state: State, cfg: CheckConfig,
+                        trace: List[str]) -> State:
+    """All active hosts acked -> commit: log the (epoch, artifact), send
+    commit messages to the barrier, clear the round."""
+    hosts, coord, msgs, committed, budgets, nart, flags = state
+    alive, cepoch, cart, catt, pending, acks, votes, fenced, props = coord
+    active = frozenset(range(cfg.n_hosts)) - fenced
+    if pending is None or not active or not active <= acks:
+        return state
+    pepoch, part, patt = pending
+    # the real broadcast loop skips fenced + unreachable hosts (they
+    # catch up via re-sync); it is synchronous — _successors gates the
+    # next round on the in-flight commit set draining, and only a crash
+    # can interrupt it (dropping the undelivered commits)
+    reachable = {i for i in active if not hosts[i][4]}
+    committed = committed | {(pepoch, part)}
+    # I5: at most one artifact may ever be committed for an epoch
+    by_epoch: Dict[int, set] = {}
+    for e, a in committed:
+        by_epoch.setdefault(e, set()).add(a)
+    for e, arts in by_epoch.items():
+        if len(arts) > 1:
+            raise InvariantViolation(
+                "I5-one-artifact-per-epoch",
+                f"epoch {e} committed with artifacts {sorted(arts)}", trace)
+    prepares, ackmsgs, commits = msgs
+    commits = commits | {(i, pepoch, patt) for i in reachable}
+    new_coord: Coord = (alive, pepoch, part, catt, None, frozenset(),
+                        frozenset(), fenced, props)
+    return (hosts, new_coord, (prepares, ackmsgs, commits), committed,
+            budgets, nart, flags)
+
+
+def _install(state: State, i: int, epoch: int, art: int, via: str,
+             trace: List[str]) -> State:
+    """Install a committed plan on host ``i``, checking I1 + I2."""
+    hosts, coord, msgs, committed, budgets, nart, flags = state
+    hepoch, hart, staged, voted, silent, ackset, rsset = hosts[i]
+    if epoch <= hepoch:
+        raise InvariantViolation(
+            "I2-monotonic-epochs",
+            f"host {i} at epoch {hepoch} told to install epoch {epoch}",
+            trace)
+    if (epoch, art) not in committed:
+        raise InvariantViolation(
+            "I1-serve-only-acked",
+            f"host {i} installs ({epoch}, a{art}) which no coordinator "
+            "committed", trace)
+    if via == "resync":
+        rsset = rsset | {(epoch, art)}
+    elif (epoch, art) not in ackset:
+        raise InvariantViolation(
+            "I1-serve-only-acked",
+            f"host {i} installs ({epoch}, a{art}) it never acked "
+            f"(acked={sorted(ackset)})", trace)
+    new_host: Host = (epoch, art, None, False, silent, ackset, rsset)
+    return (_set_host(hosts, i, new_host), coord, msgs, committed, budgets,
+            nart, flags)
+
+
+# ---------------------------------------------------------------------------
+# Successor enumeration
+# ---------------------------------------------------------------------------
+
+
+def _successors(state: State, cfg: CheckConfig,
+                trace: List[str]):
+    hosts, coord, msgs, committed, budgets, nart, flags = state
+    alive, cepoch, cart, catt, pending, acks, votes, fenced, props = coord
+    prepares, ackmsgs, commits = msgs
+    fence_budget, crash_budget = budgets
+    active = frozenset(range(cfg.n_hosts)) - fenced
+
+    # round_open: the synchronous commit broadcast of the previous round
+    # has drained (or was cut short by a crash) — only then does the
+    # driver loop reach the vote / rejoin / propose paths again
+    round_open = pending is None and not commits
+
+    # -- vote: host offers a drift vote for the coordinator's epoch
+    if alive and round_open:
+        for i, h in enumerate(hosts):
+            hepoch, hart, staged, voted, silent, ackset, rsset = h
+            if (not voted and not silent and i not in fenced
+                    and hepoch == cepoch):
+                nh = (hepoch, hart, staged, True, silent, ackset, rsset)
+                nc: Coord = (alive, cepoch, cart, catt, pending, acks,
+                             votes | {i}, fenced, props)
+                yield (f"vote(h{i})",
+                       (_set_host(hosts, i, nh), nc, msgs, committed,
+                        budgets, nart, flags))
+
+    # -- propose: quorum reached, broadcast prepares for a fresh artifact
+    if (alive and round_open and props < cfg.max_proposals
+            and active and len(votes & active) >= _quorum(len(active))):
+        art = nart
+        att = catt + 1
+        newp = (cepoch + 1, art, att)
+        nc = (alive, cepoch, cart, att, newp, frozenset(), frozenset(),
+              fenced, props + 1)
+        nprep = prepares | {(i, cepoch + 1, art, att) for i in active}
+        yield (f"propose(e{cepoch + 1},a{art})",
+               (hosts, nc, (nprep, ackmsgs, commits), committed, budgets,
+                nart + 1, flags))
+
+    # -- deliver_prepare: host stages (ok) or NACKs (epoch mismatch)
+    for m in prepares:
+        i, pepoch, part, patt = m
+        hepoch, hart, staged, voted, silent, ackset, rsset = hosts[i]
+        if silent:
+            continue
+        ok = pepoch == hepoch + 1
+        if ok:
+            nh = (hepoch, hart, (pepoch, part, patt), voted, silent,
+                  ackset | {(pepoch, part)}, rsset)
+        else:
+            nh = (hepoch, hart, None, voted, silent, ackset, rsset)
+        nmsgs = (prepares - {m}, ackmsgs | {(i, pepoch, patt, ok)}, commits)
+        yield (f"deliver_prepare(h{i},e{pepoch},a{part})",
+               (_set_host(hosts, i, nh), coord, nmsgs, committed, budgets,
+                nart, flags))
+
+    # -- deliver_ack: the coordinator's offer_ack
+    for m in ackmsgs:
+        i, aepoch, aatt, ok = m
+        hepoch, hart, staged, voted, silent, ackset, rsset = hosts[i]
+        if silent or not alive:
+            continue
+        nmsgs = (prepares, ackmsgs - {m}, commits)
+        ns: State = (hosts, coord, nmsgs, committed, budgets, nart, flags)
+        label = f"deliver_ack(h{i},e{aepoch},t{aatt},{'ok' if ok else 'nack'})"
+        if pending is None or aepoch != pending[0]:
+            yield (label, ns)  # inert: not the pending epoch
+            continue
+        if not cfg.legacy_acks:
+            if i in fenced or aatt != pending[2]:
+                yield (label, ns)  # inert: fenced host / stale attempt
+                continue
+        if not ok:
+            yield (label, _coord_abort(ns, cfg))
+            continue
+        nc = (alive, cepoch, cart, catt, pending, acks | {i}, votes, fenced,
+              props)
+        ns = (hosts, nc, nmsgs, committed, budgets, nart, flags)
+        yield (label, _coord_maybe_commit(ns, cfg, trace + [label]))
+
+    # -- deadline: a host the barrier is still waiting on went silent
+    if alive and pending is not None and fence_budget > 0:
+        for i, h in enumerate(hosts):
+            if i in fenced or i in acks:
+                continue
+            hepoch, hart, staged, voted, silent, ackset, rsset = h
+            # straggler policy "fence": exclude it, commit without it
+            nh = (hepoch, hart, staged, voted, True, ackset, rsset)
+            nfenced = fenced | {i}
+            nacks = acks if cfg.legacy_acks else acks - {i}
+            nc = (alive, cepoch, cart, catt, pending, nacks,
+                  votes - {i}, nfenced, props)
+            ns = (_set_host(hosts, i, nh), nc, msgs, committed,
+                  (fence_budget - 1, crash_budget), nart, flags)
+            label = f"deadline_fence(h{i})"
+            if len(frozenset(range(cfg.n_hosts)) - nfenced) == 0:
+                yield (label, _coord_abort(ns, cfg))
+            else:
+                yield (label, _coord_maybe_commit(ns, cfg, trace + [label]))
+            # straggler policy "nack": the first straggler aborts the epoch
+            nh2 = (hepoch, hart, staged, voted, True, ackset, rsset)
+            ns2 = (_set_host(hosts, i, nh2), coord, msgs, committed,
+                   (fence_budget - 1, crash_budget), nart, flags)
+            yield (f"deadline_nack(h{i})", _coord_abort(ns2, cfg))
+
+    # -- deliver_commit: install the staged plan (ShardHost.commit checks
+    # BOTH the epoch and the attempt nonce of the staged copy; a
+    # mismatch raises, which the drivers resolve by fencing for re-sync)
+    for m in commits:
+        i, mepoch, matt = m
+        hepoch, hart, staged, voted, silent, ackset, rsset = hosts[i]
+        if silent:
+            continue
+        nmsgs = (prepares, ackmsgs, commits - {m})
+        ns = (hosts, coord, nmsgs, committed, budgets, nart, flags)
+        label = f"deliver_commit(h{i},e{mepoch},t{matt})"
+        if hepoch >= mepoch:
+            yield (label, ns)  # duplicate/stale: idempotent
+        elif (staged is not None and staged[0] == mepoch
+                and (cfg.legacy_acks or staged[2] == matt)):
+            yield (label, _install(ns, i, mepoch, staged[1], "commit",
+                                   trace + [label]))
+        else:
+            # the host REFUSES the commit (ShardHost.commit raises when
+            # its staged copy is missing or from a different epoch /
+            # attempt — e.g. clobbered by a reordered stale prepare);
+            # the drivers resolve a refused commit by fencing the host
+            # for re-sync.  Refusal is an availability event, not silent
+            # divergence — the serve-side invariants live in _install.
+            nc = (coord[0], coord[1], coord[2], coord[3], coord[4],
+                  coord[5], coord[6], coord[7] | {i}, coord[8])
+            yield (label + "+refused",
+                   (hosts, nc, nmsgs, committed, budgets, nart, flags))
+
+    # -- crash: primary dies; the standby's take_over resolves the round.
+    # Acks/commits are synchronous RPCs bound to the dead primary (its
+    # unsent commits vanish; replies addressed to it are never read by
+    # the standby) — only prepares survive in flight, because a host can
+    # still process a request from its pipe after the sender died.
+    if alive and crash_budget > 0:
+        label = "crash+takeover"
+        ns = (hosts, coord, (prepares, frozenset(), frozenset()), committed,
+              (fence_budget, crash_budget - 1), nart,
+              (flags[0], flags[1], True))
+        yield (label, _take_over(ns, cfg, trace + [label]))
+
+    # -- heal: a silent host's link recovers (after barrier resolution)
+    if pending is None and not commits:
+        for i, h in enumerate(hosts):
+            hepoch, hart, staged, voted, silent, ackset, rsset = h
+            if silent:
+                nh = (hepoch, hart, staged, voted, False, ackset, rsset)
+                yield (f"heal(h{i})",
+                       (_set_host(hosts, i, nh), coord, msgs, committed,
+                        budgets, nart, flags))
+
+    # -- rejoin: driver re-admits a healed fenced host between rounds
+    if alive and round_open:
+        for i in fenced:
+            hepoch, hart, staged, voted, silent, ackset, rsset = hosts[i]
+            if silent:
+                continue
+            nc = (alive, cepoch, cart, catt, pending, acks, votes,
+                  fenced - {i}, props)
+            label = f"rejoin(h{i})"
+            if hepoch >= cepoch:
+                # current-epoch straggler: re-admitted directly — note it
+                # may still hold a stale staged artifact (the abort never
+                # reached it); only the ack checks keep that inert
+                yield (label,
+                       (hosts, nc, msgs, committed, budgets, nart, flags))
+            else:
+                # behind: COREWIRE re-sync installs the committed artifact
+                ns = (hosts, nc, msgs, committed, budgets, nart, flags)
+                yield (label + "+resync",
+                       _install(ns, i, cepoch, cart, "resync",
+                                trace + [label]))
+
+
+def _take_over(state: State, cfg: CheckConfig, trace: List[str]) -> State:
+    """Standby promotion (consensus.StandbyCoordinator.take_over): the
+    mirror equals the primary's protocol state (deltas are piggybacked on
+    the same transport); silent hosts are unreachable probes."""
+    hosts, coord, msgs, committed, budgets, nart, flags = state
+    alive, cepoch, cart, catt, pending, acks, votes, fenced, props = coord
+    unreachable = {i for i, h in enumerate(hosts) if h[4]}
+    nfenced = fenced | unreachable
+    # the promoted coordinator resumes ABOVE every attempt the dead
+    # primary issued (mirrored via the prepare deltas)
+    ncoord: Coord = (True, cepoch, cart, catt, pending, acks, frozenset(),
+                     nfenced, props)
+    ns: State = (hosts, ncoord, msgs, committed, budgets, nart, flags)
+    if pending is not None:
+        pepoch, part, patt = pending
+        reach_active = [i for i in range(cfg.n_hosts)
+                        if i not in unreachable and i not in fenced]
+        installed = any(hosts[i][0] >= pepoch for i in reach_active)
+        all_acked = set(reach_active) <= set(acks)
+        if installed or all_acked:
+            # complete: re-broadcast the commit; a reachable active host
+            # that never staged is fenced for re-sync
+            committed = committed | {(pepoch, part)}
+            ns = (hosts, ncoord, msgs, committed, budgets, nart, flags)
+            for i in reach_active:
+                hepoch, hart, staged, voted, silent, ackset, rsset = \
+                    ns[0][i]
+                if hepoch >= pepoch:
+                    continue
+                if (staged is not None and staged[0] == pepoch
+                        and (cfg.legacy_acks or staged[2] == patt)):
+                    ns = _install(ns, i, pepoch, staged[1], "commit", trace)
+                else:
+                    h2, c2, m2, cm2, b2, na2, f2 = ns
+                    c2 = (c2[0], c2[1], c2[2], c2[3], c2[4], c2[5], c2[6],
+                          c2[7] | {i}, c2[8])
+                    ns = (h2, c2, m2, cm2, b2, na2, f2)
+            hosts2, c2, m2, cm2, b2, na2, f2 = ns
+            c2 = (True, pepoch, part, c2[3], None, frozenset(), frozenset(),
+                  c2[7], c2[8])
+            ns = (hosts2, c2, m2, cm2, b2, na2, f2)
+        else:
+            ns = _coord_abort(ns, cfg)
+    else:
+        # idle takeover still re-arms voting on reachable hosts (the dead
+        # primary's collected votes died with it)
+        ns = _coord_abort(ns, cfg)
+        h2, c2, m2, cm2, b2, na2, (_a, _f, _p) = ns
+        ns = (h2, c2, m2, cm2, b2, na2, (flags[0], flags[1], True))
+    # fence reachable hosts still behind the resolved epoch
+    hosts2, c2, m2, cm2, b2, na2, f2 = ns
+    behind = frozenset(
+        i for i in range(cfg.n_hosts)
+        if hosts2[i][0] < c2[1] and i not in c2[7])
+    c2 = (c2[0], c2[1], c2[2], c2[3], c2[4], c2[5], c2[6], c2[7] | behind,
+          c2[8])
+    return (hosts2, c2, m2, cm2, b2, na2, f2)
+
+
+# ---------------------------------------------------------------------------
+# BFS exploration
+# ---------------------------------------------------------------------------
+
+
+def check(cfg: Optional[CheckConfig] = None) -> CheckResult:
+    cfg = cfg or CheckConfig()
+    init = _initial_state(cfg)
+    seen = {init}
+    # parent pointers for minimal counterexample traces
+    parent: Dict[State, Tuple[Optional[State], str]] = {init: (None, "init")}
+    queue = deque([init])
+    transitions = 0
+    witnesses = {
+        "commit-reachable": False,
+        "abort-reachable": False,
+        "I3-repropose-after-abort": False,
+        "I4-fence-survives-abort": False,
+        "failover-reachable": False,
+    }
+
+    def trace_to(s: State) -> List[str]:
+        out: List[str] = []
+        cur: Optional[State] = s
+        while cur is not None:
+            prev, label = parent[cur]
+            out.append(label)
+            cur = prev
+        return list(reversed(out))[1:]  # drop "init"
+
+    violation: Optional[InvariantViolation] = None
+    try:
+        while queue:
+            state = queue.popleft()
+            hosts, coord, msgs, committed, budgets, nart, flags = state
+            if committed:
+                witnesses["commit-reachable"] = True
+            if flags[0]:
+                witnesses["abort-reachable"] = True
+                if coord[4] is not None:
+                    witnesses["I3-repropose-after-abort"] = True
+            if flags[1]:
+                witnesses["I4-fence-survives-abort"] = True
+            if flags[2]:
+                witnesses["failover-reachable"] = True
+            for label, nxt in _successors(state, cfg, trace_to(state)):
+                transitions += 1
+                if nxt not in seen:
+                    seen.add(nxt)
+                    parent[nxt] = (state, label)
+                    queue.append(nxt)
+    except InvariantViolation as e:
+        violation = e
+    return CheckResult(states_explored=len(seen), transitions=transitions,
+                       violation=violation, witnesses=witnesses)
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    parser = argparse.ArgumentParser(
+        description="exhaustively check the swap/failover/fence protocol")
+    parser.add_argument("--hosts", type=int, default=3)
+    parser.add_argument("--proposals", type=int, default=2)
+    parser.add_argument("--json", action="store_true")
+    parser.add_argument(
+        "--skip-legacy", action="store_true",
+        help="skip the legacy-mode run that must reproduce the stale-ack bug")
+    args = parser.parse_args(argv)
+
+    strict = check(CheckConfig(n_hosts=args.hosts,
+                               max_proposals=args.proposals))
+    report = {
+        "states_explored": strict.states_explored,
+        "transitions": strict.transitions,
+        "invariants_ok": strict.violation is None,
+        "witnesses": strict.witnesses,
+    }
+    ok = strict.ok
+    if strict.violation is not None:
+        report["violation"] = {
+            "invariant": strict.violation.invariant,
+            "detail": strict.violation.detail,
+            "trace": strict.violation.trace,
+        }
+    if not args.skip_legacy:
+        legacy = check(CheckConfig(n_hosts=args.hosts,
+                                   max_proposals=args.proposals,
+                                   legacy_acks=True))
+        report["legacy_bug_reproduced"] = legacy.violation is not None
+        if legacy.violation is not None:
+            report["legacy_violation"] = {
+                "invariant": legacy.violation.invariant,
+                "detail": legacy.violation.detail,
+                "trace": legacy.violation.trace,
+            }
+        else:
+            ok = False  # the checker lost its teeth
+    if args.json:
+        print(json.dumps(report, indent=2))
+    else:
+        print(f"protocol_check: {report['states_explored']} states, "
+              f"{report['transitions']} transitions")
+        if strict.violation is not None:
+            print(f"  VIOLATION {strict.violation.invariant}: "
+                  f"{strict.violation.detail}")
+            for step in strict.violation.trace:
+                print(f"    {step}")
+        for name, hit in strict.witnesses.items():
+            print(f"  witness {name}: {'ok' if hit else 'MISSING'}")
+        if "legacy_bug_reproduced" in report:
+            print(f"  legacy stale-ack bug reproduced: "
+                  f"{report['legacy_bug_reproduced']}")
+            if report["legacy_bug_reproduced"]:
+                v = report["legacy_violation"]
+                print(f"    {v['invariant']}: {v['detail']}")
+                for step in v["trace"]:
+                    print(f"      {step}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

@@ -8,3 +8,14 @@ from repro.core.plan_cache import PlanCache, QueryFingerprint, WarmStart, finger
 from repro.core.baselines import ns_plan, orig_plan, pp_plan
 from repro.core.executor import ExecResult, execute_plan, plan_accuracy
 from repro.core.correlation import correlation_score, query_correlation
+
+__all__ = [
+    "MLUDF", "PhysicalPlan", "PlanStage", "Predicate", "Query",
+    "ProxyModel", "RCurve", "build_r_curve", "train_proxy",
+    "ProxyBuilder", "accuracy_allocation", "alpha_frontier",
+    "BranchAndBound", "optimize", "reoptimize",
+    "PlanCache", "QueryFingerprint", "WarmStart", "fingerprint_query",
+    "ns_plan", "orig_plan", "pp_plan",
+    "ExecResult", "execute_plan", "plan_accuracy",
+    "correlation_score", "query_correlation",
+]

@@ -11,7 +11,6 @@ the search driver.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
@@ -19,6 +18,8 @@ import numpy as np
 
 from repro.core.builder import ProxyBuilder
 from repro.core.proxy import ProxyModel
+from repro.util import advisory_wall_ms
+
 
 
 def alpha_frontier(n: int, A: float, step: float = 0.02) -> np.ndarray:
@@ -100,7 +101,7 @@ def accuracy_allocation(
     step: float = 0.02,
     framework: str = "exhaustive",  # | "hill"
 ) -> Allocation:
-    t0 = time.perf_counter()
+    t0 = advisory_wall_ms()
     lt0 = builder.stats.labeling_ms + builder.stats.training_ms
     n = len(order)
     cands = alpha_frontier(n, A, step)
@@ -131,7 +132,7 @@ def accuracy_allocation(
                     improved = True
                     break
     # search time excludes labeling/training accrued inside get_proxy
-    elapsed = (time.perf_counter() - t0) * 1e3
+    elapsed = advisory_wall_ms() - t0
     lt_delta = builder.stats.labeling_ms + builder.stats.training_ms - lt0
     builder.stats.search_ms += max(elapsed - lt_delta, 0.0)
     return best

@@ -11,8 +11,7 @@
 """
 from __future__ import annotations
 
-import time
-from typing import List, Sequence, Tuple
+from typing import List
 
 import numpy as np
 
@@ -21,6 +20,8 @@ from repro.core.builder import ProxyBuilder
 from repro.core.cost import plan_cost
 from repro.core.proxy import ProxyModel, train_proxy
 from repro.core.query import PhysicalPlan, PlanStage, Query, all_orders
+from repro.util import advisory_wall_ms
+
 
 
 def orig_plan(query: Query) -> PhysicalPlan:
@@ -37,19 +38,19 @@ def orig_plan(query: Query) -> PhysicalPlan:
 def ns_plan(query: Query, x_sample: np.ndarray, *, kind: str = "svm",
             seed: int = 0) -> PhysicalPlan:
     """Single conjunction proxy at the front (NoScope-style)."""
-    t0 = time.perf_counter()
+    t0 = advisory_wall_ms()
     builder = ProxyBuilder(query, x_sample, kind=kind, seed=seed)
     rows = np.arange(builder.n)
     conj = np.ones(builder.n, bool)
     for i in range(query.n):
         conj &= builder.sigma_mask(i, rows)
-    t1 = time.perf_counter()
+    t1 = advisory_wall_ms()
     # the single conjunction proxy has no per-predicate family assignment;
     # "mixed" / per-predicate maps degrade to linear (builder.family_for
     # needs a pred index)
     conj_kind = kind if isinstance(kind, str) and kind != "mixed" else "linear"
     proxy = train_proxy(builder.x, conj, pred_idx=-1, d=(), kind=conj_kind, seed=seed)
-    training_ms = (time.perf_counter() - t1) * 1e3
+    training_ms = advisory_wall_ms() - t1
     A = query.accuracy_target
     stages = [
         PlanStage(
@@ -62,7 +63,7 @@ def ns_plan(query: Query, x_sample: np.ndarray, *, kind: str = "svm",
     stats["training_ms"] += training_ms
     return PhysicalPlan(
         query=query, stages=stages, est_total_cost=0.0,
-        meta={"mode": "ns", "stats": stats, "wall_ms": (time.perf_counter() - t0) * 1e3},
+        meta={"mode": "ns", "stats": stats, "wall_ms": advisory_wall_ms() - t0},
     )
 
 
@@ -74,7 +75,7 @@ def pp_plan(query: Query, x_sample: np.ndarray, *, kind: str = "svm",
     own predicate; the optimizer then assembles them assuming independence:
     s_i = unconditional selectivity, r_i = raw R-curve reduction.
     """
-    t0 = time.perf_counter()
+    t0 = advisory_wall_ms()
     builder = ProxyBuilder(query, x_sample, kind=kind, seed=seed)
     rows = np.arange(builder.n)
     proxies: List[ProxyModel] = []
@@ -107,5 +108,5 @@ def pp_plan(query: Query, x_sample: np.ndarray, *, kind: str = "svm",
     return PhysicalPlan(
         query=query, stages=stages, est_total_cost=cost,
         meta={"mode": "pp", "stats": builder.stats.as_dict(),
-              "wall_ms": (time.perf_counter() - t0) * 1e3},
+              "wall_ms": advisory_wall_ms() - t0},
     )

@@ -13,15 +13,15 @@ are pruned.  With ``fine_grained=False`` the L and M phases run together
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import numpy as np
 
 from repro.core.accuracy import Allocation, accuracy_allocation
 from repro.core.builder import ProxyBuilder
 from repro.core.cost import Bounds
+from repro.util import advisory_wall_ms
+
 
 
 @dataclass
@@ -229,7 +229,7 @@ class BranchAndBound:
         return self._search()
 
     def _search(self) -> Tuple[Allocation, SearchTrace]:
-        t0 = time.perf_counter()
+        t0 = advisory_wall_ms()
         lt0 = self.builder.stats.labeling_ms + self.builder.stats.training_ms
         search0 = self.builder.stats.search_ms
         Q = self._Q
@@ -279,7 +279,7 @@ class BranchAndBound:
                 self.builder, best, self.A, step=self.step, framework=self.framework
             )
             info.alloc, info.state, info.epoch = alloc, "built", self.epoch
-        elapsed = (time.perf_counter() - t0) * 1e3
+        elapsed = advisory_wall_ms() - t0
         lt_delta = self.builder.stats.labeling_ms + self.builder.stats.training_ms - lt0
         # add only the B&B loop overhead not already accounted by Algorithm 1
         alloc_search_delta = self.builder.stats.search_ms - search0

@@ -16,9 +16,8 @@ Table-4/5 benchmarks can decompose optimization cost.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
-from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+from typing import Dict, FrozenSet, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -26,6 +25,8 @@ from repro.core.proxy import ProxyModel, train_proxy
 from repro.core.proxy_family import get_family
 from repro.core.query import Query
 from repro.training.proxy_models import f1_score
+from repro.util import advisory_wall_ms
+
 
 
 @dataclass
@@ -108,17 +109,17 @@ class ProxyBuilder:
         if not self.reuse_samples:
             # ablation: no materialization — every request re-runs the UDF
             pred = self.query.predicates[pred_idx]
-            t0 = time.perf_counter()
+            t0 = advisory_wall_ms()
             labels = pred.udf(self.x[rows])
-            self.stats.labeling_ms += (time.perf_counter() - t0) * 1e3
+            self.stats.labeling_ms += advisory_wall_ms() - t0
             self.stats.udf_calls[pred_idx] = self.stats.udf_calls.get(pred_idx, 0) + len(rows)
             return pred.evaluate(labels)
         need = rows[~self._labeled[pred_idx][rows]]
         if len(need):
             pred = self.query.predicates[pred_idx]
-            t0 = time.perf_counter()
+            t0 = advisory_wall_ms()
             labels = pred.udf(self.x[need])
-            self.stats.labeling_ms += (time.perf_counter() - t0) * 1e3
+            self.stats.labeling_ms += advisory_wall_ms() - t0
             self.stats.udf_calls[pred_idx] = self.stats.udf_calls.get(pred_idx, 0) + len(need)
             self._labels[pred_idx][need] = pred.evaluate(labels)
             self._labeled[pred_idx][need] = True
@@ -175,12 +176,12 @@ class ProxyBuilder:
             if abs(phi_new - phi_star) <= self.eps * max(phi_star, 1e-9):
                 self.stats.n_reused += 1
                 return cached, rows
-        t0 = time.perf_counter()
+        t0 = advisory_wall_ms()
         proxy = train_proxy(
             self.x[rows], labels, pred_idx, tuple(prefix), kind=family,
             seed=self.seed + pred_idx,
         )
-        self.stats.training_ms += (time.perf_counter() - t0) * 1e3
+        self.stats.training_ms += advisory_wall_ms() - t0
         self.stats.n_trained += 1
         y_here = np.where(labels, 1.0, -1.0)
         phi_star = f1_score(proxy.score(self.x[rows]), y_here) if len(rows) else 0.0

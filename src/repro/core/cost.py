@@ -8,7 +8,7 @@ per-record cost into raw-input units).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence
+from typing import Sequence
 
 
 def stage_cost(prefix_frac: float, proxy_cost: float, udf_cost: float,

@@ -24,13 +24,14 @@ benchmarks cannot silently compare reference runs against kernel runs.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import List
 
 import numpy as np
 
-from repro.core.query import PhysicalPlan, Query
+from repro.core.query import PhysicalPlan
+from repro.util import advisory_wall_ms
+
 
 
 @dataclass
@@ -82,7 +83,7 @@ def execute_plan(
     """
     n = x.shape[0]
     stages = [StageStats(pred_idx=s.pred_idx) for s in plan.stages]
-    t_start = time.perf_counter()
+    t_start = advisory_wall_ms()
     model_cost = 0.0
     fused_ms = 0.0
     passed: List[np.ndarray] = []
@@ -111,10 +112,10 @@ def execute_plan(
         idx = np.arange(start, min(start + batch_size, n))
         masks = packed = None
         if cascade is not None:
-            t0 = time.perf_counter()
+            t0 = advisory_wall_ms()
             _, masks, packed, _counts = cascade.score_compact(
                 x[idx], compact_cols=compact_cols)
-            fused_ms += (time.perf_counter() - t0) * 1e3
+            fused_ms += advisory_wall_ms() - t0
         loc = np.arange(len(idx))  # tile-local survivor positions
         for si, stage in enumerate(plan.stages):
             st = stages[si]
@@ -123,7 +124,7 @@ def execute_plan(
                 continue
             if stage.proxy is not None:
                 n_enter = len(loc)
-                t0 = time.perf_counter()
+                t0 = advisory_wall_ms()
                 col = cascade.stage_cols[si] if cascade is not None else None
                 if masks is not None and col is not None:
                     if len(loc) == len(idx) and packed[col] is not None:
@@ -140,16 +141,16 @@ def execute_plan(
                 else:
                     keep = stage.proxy.score(x[idx[loc]]) >= stage.threshold
                     loc = loc[keep]
-                st.proxy_ms += (time.perf_counter() - t0) * 1e3
+                st.proxy_ms += advisory_wall_ms() - t0
                 model_cost += n_enter * stage.proxy.cost
             st.n_proxy_kept += len(loc)
             if len(loc) == 0:
                 continue
             pred = plan.query.predicates[stage.pred_idx]
             alive = idx[loc]
-            t0 = time.perf_counter()
+            t0 = advisory_wall_ms()
             labels = pred.udf(x[alive])
-            st.udf_ms += (time.perf_counter() - t0) * 1e3
+            st.udf_ms += advisory_wall_ms() - t0
             model_cost += len(alive) * pred.udf.cost
             st.n_udf += len(alive)
             loc = loc[pred.evaluate(labels)]
@@ -159,7 +160,7 @@ def execute_plan(
     return ExecResult(
         passed=np.concatenate(passed) if passed else np.empty(0, np.int64),
         stages=stages,
-        wall_ms=(time.perf_counter() - t_start) * 1e3,
+        wall_ms=advisory_wall_ms() - t_start,
         model_cost_ms=model_cost,
         fused_score_ms=fused_ms,
     )

@@ -17,7 +17,6 @@ retrained.
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -26,6 +25,8 @@ from repro.core.accuracy import Allocation, accuracy_allocation
 from repro.core.bnb import BranchAndBound, SearchTrace
 from repro.core.builder import ProxyBuilder
 from repro.core.query import PhysicalPlan, PlanStage, Query, all_orders
+from repro.util import advisory_wall_ms
+
 
 
 def _plan_from_allocation(query: Query, alloc: Allocation, meta: dict) -> PhysicalPlan:
@@ -76,7 +77,7 @@ def optimize(
     the Eq.-4.7 eps test before any reuse), and mode="core" seeds the
     branch-and-bound tree with the donor's stale L-node measurements and
     surviving candidate set, then ``resume``s instead of cold-running."""
-    t_start = time.perf_counter()
+    t_start = advisory_wall_ms()
     A = query.accuracy_target
     builder = builder or ProxyBuilder(query, x_sample, kind=kind, eps=eps, seed=seed)
     if warm_start is not None and getattr(warm_start, "classifiers", None):
@@ -109,7 +110,7 @@ def optimize(
     meta = {
         "mode": mode,
         "stats": builder.stats.as_dict(),
-        "wall_ms": (time.perf_counter() - t_start) * 1e3,
+        "wall_ms": advisory_wall_ms() - t_start,
         "plan_version": 0,
     }
     if warmed:
@@ -161,7 +162,7 @@ def reoptimize(
     starting from the previous search tree when ``plan.meta["bnb"]`` is
     present (``optimize(keep_state=True)`` or a previous reoptimize).
     """
-    t_start = time.perf_counter()
+    t_start = advisory_wall_ms()
     query = plan.query
     A = query.accuracy_target
     prev_builder: Optional[ProxyBuilder] = plan.meta.get("builder")
@@ -200,7 +201,7 @@ def reoptimize(
     meta = {
         "mode": f"reopt-{mode}",
         "stats": builder.stats.as_dict(),
-        "wall_ms": (time.perf_counter() - t_start) * 1e3,
+        "wall_ms": advisory_wall_ms() - t_start,
         "plan_version": int(plan.meta.get("plan_version", 0)) + 1,
         "warm_start": warm,
     }

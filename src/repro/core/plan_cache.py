@@ -44,17 +44,18 @@ from __future__ import annotations
 
 import hashlib
 import json
-import time
 import warnings
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from types import SimpleNamespace
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.proxy_family import get_family
 from repro.core.query import PhysicalPlan, Query
+from repro.util import advisory_wall_ms
+
 
 PLANCACHE_MAGIC = b"COREPLNC"
 PLANCACHE_VERSION = 1
@@ -386,7 +387,7 @@ class PlanCache:
         info = {"path": "cold", "digest": fp.digest,
                 "distance": dist, "regret": None}
         if match == "exact" and accept_hit:
-            t0 = time.perf_counter()
+            t0 = advisory_wall_ms()
             try:
                 plan, scorer = deserialize_scorer(entry.artifact, query)
             except WireFormatError as e:
@@ -401,7 +402,7 @@ class PlanCache:
                 plan.meta["plan_cache"] = {
                     "path": "hit", "digest": fp.digest, "distance": dist}
                 info.update(path="hit", scorer=scorer,
-                            build_ms=(time.perf_counter() - t0) * 1e3)
+                            build_ms=advisory_wall_ms() - t0)
                 return plan, info
         warm: Optional[WarmStart] = None
         if match in ("exact", "warm") and entry is not None:
@@ -432,13 +433,13 @@ class PlanCache:
                                  orders=orders or None)
         elif match is None and dist <= 1.0:
             self.stats.fallbacks_similarity += 1
-        t0 = time.perf_counter()
+        t0 = advisory_wall_ms()
         plan = optimize(
             query, x_sample, mode=mode, kind=kind, step=step, eps=eps,
             framework=framework, fine_grained=fine_grained, seed=seed,
             builder=None, keep_state=True, quant_dtype=quant_dtype,
             warm_start=warm)
-        build_ms = (time.perf_counter() - t0) * 1e3
+        build_ms = advisory_wall_ms() - t0
         if warm is not None:
             self.stats.hits_warm += 1
             info["path"] = "warm"
@@ -489,17 +490,17 @@ class PlanCache:
         Deterministic for a given cache state (canonical-JSON sidecars,
         artifact bytes verbatim), so save -> load -> save is byte-stable.
         """
-        from repro.kernels.ops import FRAME_PLANCACHE, serialize_frame
+        from repro.kernels.ops import FRAME_PLANCACHE, pack_le, serialize_frame
 
         out = bytearray()
         out += PLANCACHE_MAGIC
-        out += int(PLANCACHE_VERSION).to_bytes(2, "little")
-        out += (0).to_bytes(2, "little")
-        out += len(self._entries).to_bytes(4, "little")
+        out += pack_le(PLANCACHE_VERSION, 2)
+        out += pack_le(0, 2)
+        out += pack_le(len(self._entries), 4)
         for i, entry in enumerate(self._entries.values()):
             frame = serialize_frame(FRAME_PLANCACHE, i, entry.artifact,
                                     meta=entry.sidecar)
-            out += len(frame).to_bytes(8, "little")
+            out += pack_le(len(frame), 8)
             out += frame
         return bytes(out)
 
@@ -513,15 +514,16 @@ class PlanCache:
             FRAME_PLANCACHE,
             WireFormatError,
             deserialize_frame,
+            unpack_le,
         )
 
         cache = cls(**kwargs)
         if blob[:len(PLANCACHE_MAGIC)] != PLANCACHE_MAGIC:
             raise ValueError("bad magic: not a plan-cache container")
-        ver = int.from_bytes(blob[8:10], "little")
+        ver = unpack_le(blob, 8, 2)
         if ver != PLANCACHE_VERSION:
             raise ValueError(f"unknown plan-cache container version {ver}")
-        count = int.from_bytes(blob[12:16], "little")
+        count = unpack_le(blob, 12, 4)
         off = 16
         for _ in range(count):
             if off + 8 > len(blob):
@@ -529,7 +531,7 @@ class PlanCache:
                     "plan-cache container truncated: missing entries "
                     "skipped", RuntimeWarning, stacklevel=2)
                 break
-            flen = int.from_bytes(blob[off:off + 8], "little")
+            flen = unpack_le(blob, off, 8)
             off += 8
             frame = blob[off:off + flen]
             off += flen
@@ -558,12 +560,9 @@ class PlanCache:
         return cache
 
     def save(self, path) -> None:
-        from pathlib import Path
+        from repro.util import atomic_write_bytes
 
-        p = Path(path)
-        tmp = p.with_suffix(p.suffix + f".tmp.{id(self) & 0xffff}")
-        tmp.write_bytes(self.to_bytes())
-        tmp.replace(p)
+        atomic_write_bytes(path, self.to_bytes())
 
     @classmethod
     def load(cls, path, **kwargs) -> "PlanCache":

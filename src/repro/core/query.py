@@ -11,7 +11,7 @@ wraps an expensive model; each ``Predicate`` tests the UDF's output column.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, FrozenSet, List, Optional, Sequence, Tuple
+from typing import Callable, FrozenSet, List, Optional, Tuple
 
 import numpy as np
 

@@ -57,11 +57,11 @@ Fault tolerance (DESIGN.md §6, failure model):
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from repro.core.correlation import StreamingKappa2
+from repro.util import advisory_wall_ms
 from repro.serving.stats import (
     DriftEvent,
     ReservoirSample,
@@ -124,6 +124,15 @@ class SwapPrepare:
 
     epoch: int  # the NEW epoch being proposed
     artifact: bytes  # kernels.ops.serialize_scorer wire blob
+    # Per-coordinator proposal nonce.  An abort keeps the epoch NUMBER
+    # (the re-proposal targets the same epoch with a fresh artifact), so
+    # (host, epoch) alone cannot distinguish an ack for round 1 from an
+    # ack for round 2 — a stale round-1 ack still in flight after a
+    # fence + abort + rejoin would count toward round 2's barrier and
+    # let the rejoined host install the round-1 artifact the rest of the
+    # fleet never committed (found by analysis/protocol_check.py).
+    # Default 0 keeps the pre-nonce wire shape decodable.
+    attempt: int = 0
 
 
 @dataclass
@@ -132,6 +141,7 @@ class SwapAck:
     epoch: int
     ok: bool
     error: str = ""
+    attempt: int = 0  # echo of SwapPrepare.attempt (see there)
 
 
 @dataclass
@@ -139,6 +149,12 @@ class SwapCommit:
     """Phase 2 broadcast: every host acked — install atomically."""
 
     epoch: int
+    # echo of the winning SwapPrepare.attempt: a host must only install
+    # a staged plan from the SAME proposal round — under message
+    # reordering its staged copy can be a stale same-epoch artifact (a
+    # late round-1 prepare overwrote round 2's), and an epoch-only match
+    # would install a plan the fleet never committed
+    attempt: int = 0
 
 
 @dataclass
@@ -155,6 +171,7 @@ class StateDelta:
     epoch: int
     host: Optional[int] = None
     artifact: Optional[bytes] = None
+    attempt: int = 0  # prepare deltas carry the proposal nonce
 
 
 @dataclass
@@ -232,6 +249,9 @@ class QuorumSwapCoordinator:
         self._pending_record: Optional[SwapRecord] = None
         self._new_plan = None
         self._acks: Dict[int, SwapAck] = {}
+        # monotonic proposal nonce (see SwapPrepare.attempt); a promoted
+        # standby seeds it from the mirrored prepare deltas
+        self.attempt = 0
         # straggler fencing: hosts excluded from barriers + quorum math
         self.fenced: Set[int] = set()
         # committed artifact of the current epoch (re-sync source)
@@ -353,6 +373,11 @@ class QuorumSwapCoordinator:
             self.fenced.add(host)
             self._votes.pop(host, None)
             self._kappa_by_host.pop(host, None)
+            # an already-collected ack from this host no longer speaks
+            # for it: the fence removed it from the barrier, and keeping
+            # the ack would let it satisfy a FUTURE _maybe_commit if the
+            # host is unfenced without re-preparing
+            self._acks.pop(host, None)
             self._emit(StateDelta(kind="fence", epoch=self.epoch, host=host))
 
     def mark_rejoined(self, host: int) -> None:
@@ -401,14 +426,16 @@ class QuorumSwapCoordinator:
 
         if self.pending is not None:
             raise RuntimeError("a swap is already in flight")
-        t0 = time.perf_counter()
+        t0 = advisory_wall_ms()
         new_plan = self.reopt_fn(self.plan, merged, mode)
-        reopt_ms = (time.perf_counter() - t0) * 1e3
-        t0 = time.perf_counter()
+        reopt_ms = advisory_wall_ms() - t0
+        t0 = advisory_wall_ms()
         artifact = serialize_scorer(new_plan, max_tile=self.max_tile)
-        ser_ms = (time.perf_counter() - t0) * 1e3
+        ser_ms = advisory_wall_ms() - t0
         new_epoch = self.epoch + 1
-        self.pending = SwapPrepare(epoch=new_epoch, artifact=artifact)
+        self.attempt += 1
+        self.pending = SwapPrepare(epoch=new_epoch, artifact=artifact,
+                                   attempt=self.attempt)
         self._pending_record = SwapRecord(
             epoch=new_epoch, voters=voters, signals=signals,
             mode=mode, committed=False, merged_rows=merged.n_rows,
@@ -418,7 +445,8 @@ class QuorumSwapCoordinator:
         self._new_plan = new_plan
         self._acks = {}
         self._emit(StateDelta(kind="prepare", epoch=new_epoch,
-                              artifact=self.pending.artifact))
+                              artifact=self.pending.artifact,
+                              attempt=self.attempt))
         return self.pending
 
     def _decide_mode(self, merged: ReservoirSample) -> str:
@@ -451,8 +479,21 @@ class QuorumSwapCoordinator:
         """Phase-1 responses.  Returns the ``SwapCommit`` once every
         ACTIVE (non-fenced) host has acked; a NACK aborts the epoch
         immediately (returns None and clears the in-flight state —
-        callers observe via ``pending``)."""
+        callers observe via ``pending``).
+
+        Three classes of ack are inert (dropped without touching the
+        barrier): acks for a non-pending epoch, acks from a FENCED host
+        (it was excluded from the barrier when its deadline expired — a
+        late ack must not re-enter quorum arithmetic, and its NACK must
+        not abort an epoch it is no longer part of), and acks whose
+        ``attempt`` nonce does not match the pending prepare (a stale
+        response to an earlier aborted round of the same epoch number —
+        see SwapPrepare.attempt)."""
         if self.pending is None or ack.epoch != self.pending.epoch:
+            return None
+        if ack.host in self.fenced:
+            return None
+        if ack.attempt != self.pending.attempt:
             return None
         if not ack.ok:
             self._abort(aborted_by=ack.host)
@@ -493,7 +534,8 @@ class QuorumSwapCoordinator:
         active = set(range(self.n_hosts)) - self.fenced
         if not active or not active.issubset(self._acks):
             return None
-        commit = SwapCommit(epoch=self.pending.epoch)
+        commit = SwapCommit(epoch=self.pending.epoch,
+                            attempt=self.pending.attempt)
         self.epoch = self.pending.epoch
         self.plan = self._new_plan
         self.last_artifact = self.pending.artifact
@@ -569,7 +611,8 @@ class QuorumSwapCoordinator:
                                      host=host))
         if self.pending is not None:
             deltas.append(StateDelta(kind="prepare", epoch=self.pending.epoch,
-                                     artifact=self.pending.artifact))
+                                     artifact=self.pending.artifact,
+                                     attempt=self.pending.attempt))
             for host in sorted(self._acks):
                 deltas.append(StateDelta(kind="ack",
                                          epoch=self.pending.epoch, host=host))
@@ -621,9 +664,14 @@ class StandbyCoordinator:
         self.voted: Set[int] = set()
         self.fenced: Set[int] = set()
         self.pending: Optional[Tuple[int, bytes]] = None  # (epoch, artifact)
+        self.pending_attempt = 0  # SwapPrepare.attempt of the mirrored prepare
         self.acks: Set[int] = set()
         self.last_artifact: Optional[bytes] = None
         self.deltas_applied = 0
+        # highest proposal nonce seen in prepare deltas: the promoted
+        # coordinator resumes ABOVE it so stale acks for the dead
+        # primary's rounds can never match a post-failover prepare
+        self.attempts_seen = 0
 
     def apply(self, delta: StateDelta) -> None:
         self.deltas_applied += 1
@@ -631,7 +679,9 @@ class StandbyCoordinator:
             self.voted.add(delta.host)
         elif delta.kind == "prepare":
             self.pending = (delta.epoch, delta.artifact)
+            self.pending_attempt = delta.attempt
             self.acks = set()
+            self.attempts_seen = max(self.attempts_seen, delta.attempt)
         elif delta.kind == "ack":
             self.acks.add(delta.host)
         elif delta.kind == "commit":
@@ -663,6 +713,7 @@ class StandbyCoordinator:
         coord = QuorumSwapCoordinator(
             self.base_plan, self.n_hosts, replicate=None, **self._kw)
         coord.epoch = self.epoch
+        coord.attempt = self.attempts_seen
         coord.last_artifact = self.last_artifact
         coord.fenced = set(self.fenced) | (unreachable & set(
             h.host_id for h in hosts))
@@ -678,7 +729,8 @@ class StandbyCoordinator:
                     if h.epoch >= epoch:
                         continue
                     try:
-                        h.commit(SwapCommit(epoch=epoch))
+                        h.commit(SwapCommit(epoch=epoch,
+                                            attempt=self.pending_attempt))
                     except Exception:
                         # never staged (prepare was lost with the primary):
                         # fence for re-sync instead of blocking takeover

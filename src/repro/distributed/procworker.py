@@ -153,13 +153,17 @@ def _serve_loop(stdin, stdout) -> None:
             elif cmd == "kappa_export":
                 out["kappa"] = kappa_export_to_json(host.kappa_export())
             elif cmd == "prepare":
+                # attempt defaults to 0 for requests from older drivers
                 ack = host.prepare(SwapPrepare(
                     epoch=int(req["epoch"]),
-                    artifact=dec_bytes(req["artifact"])))
+                    artifact=dec_bytes(req["artifact"]),
+                    attempt=int(req.get("attempt", 0))))
                 out["ack"] = {"host": ack.host, "epoch": ack.epoch,
-                              "ok": ack.ok, "error": ack.error}
+                              "ok": ack.ok, "error": ack.error,
+                              "attempt": ack.attempt}
             elif cmd == "commit":
-                host.commit(SwapCommit(epoch=int(req["epoch"])))
+                host.commit(SwapCommit(epoch=int(req["epoch"]),
+                                       attempt=int(req.get("attempt", 0))))
             elif cmd == "abort":
                 host.abort()
             elif cmd == "resync":
@@ -334,12 +338,14 @@ class ProcessHost:
         from repro.distributed.consensus import SwapAck
 
         rep = self._rpc({"cmd": "prepare", "epoch": msg.epoch,
-                         "artifact": enc_bytes(msg.artifact)},
+                         "artifact": enc_bytes(msg.artifact),
+                         "attempt": msg.attempt},
                         timeout=timeout)
         return SwapAck(**rep["ack"])
 
     def commit(self, msg) -> None:
-        self._rpc({"cmd": "commit", "epoch": msg.epoch})
+        self._rpc({"cmd": "commit", "epoch": msg.epoch,
+                   "attempt": msg.attempt})
 
     def abort(self) -> None:
         self._rpc({"cmd": "abort"})

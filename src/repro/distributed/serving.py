@@ -43,7 +43,6 @@ from __future__ import annotations
 
 import queue
 import threading
-import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
@@ -64,6 +63,7 @@ from repro.distributed.consensus import (
 from repro.distributed.fault_tolerance import HeartbeatMonitor
 from repro.serving.engine import CascadeServer, ServeStats
 from repro.serving.stats import AdaptivePolicy, DriftEvent
+from repro.util import advisory_wall_ms
 
 
 @dataclass
@@ -144,7 +144,8 @@ class ShardHost:
         self.query = plan.query
         self.epoch = 0
         self._voted_epoch = -1
-        self._staged: Optional[Tuple[int, PhysicalPlan, object]] = None
+        # (epoch, plan, scorer, attempt) staged by phase 1, or None
+        self._staged: Optional[Tuple[int, PhysicalPlan, object, int]] = None
         self.submitted = 0
         self.resyncs = 0
         # idx -> engine plan version current when the record was submitted
@@ -253,21 +254,27 @@ class ShardHost:
                     f"host {self.host_id} at epoch {self.epoch} cannot "
                     f"stage epoch {msg.epoch}")
             plan, scorer = deserialize_scorer(msg.artifact, self.query)
-            self._staged = (msg.epoch, plan, scorer)
-            return SwapAck(host=self.host_id, epoch=msg.epoch, ok=True)
+            self._staged = (msg.epoch, plan, scorer, msg.attempt)
+            return SwapAck(host=self.host_id, epoch=msg.epoch, ok=True,
+                           attempt=msg.attempt)
         except Exception as e:  # NACK aborts the epoch coordinator-side
             self._staged = None
             return SwapAck(host=self.host_id, epoch=msg.epoch, ok=False,
-                           error=str(e))
+                           error=str(e), attempt=msg.attempt)
 
     def commit(self, msg: SwapCommit) -> None:
         """Phase 2: every peer acked — install the staged plan.  In-flight
         queue entries finish under their scoring version."""
-        if self._staged is None or self._staged[0] != msg.epoch:
+        if self._staged is None or self._staged[0] != msg.epoch \
+                or self._staged[3] != msg.attempt:
+            # the attempt check matters under message reordering: the
+            # staged copy may be a STALE same-epoch artifact (a late
+            # prepare from an aborted round overwrote the current one) —
+            # installing it would diverge from what the fleet acked
             raise RuntimeError(
                 f"host {self.host_id}: commit for epoch {msg.epoch} "
-                f"without a matching staged plan")
-        _, plan, scorer = self._staged
+                f"(attempt {msg.attempt}) without a matching staged plan")
+        _, plan, scorer, _ = self._staged
         self.engine.install_plan(plan, scorer=scorer, version=msg.epoch)
         self.epoch = msg.epoch
         self._staged = None
@@ -708,7 +715,7 @@ class ShardedCascadeServer:
         initiated_by = coord._pending_record.initiated_by
         submitted_at_quorum = sum(h.submitted for h in self.hosts)
         barrier = [h for h in self.hosts if h.host_id not in coord.fenced]
-        t0 = time.perf_counter()
+        t0 = advisory_wall_ms()
         commit = None
         missing: List[int] = []
         delivered = 0
@@ -737,7 +744,7 @@ class ShardedCascadeServer:
                                                     self.straggler_policy)
             self.stats.fences += sum(1 for hid in missing
                                      if hid in coord.fenced)
-        coord.note_prepare_ms((time.perf_counter() - t0) * 1e3)
+        coord.note_prepare_ms(advisory_wall_ms() - t0)
         if commit is None:
             # aborted (NACK / nack-policy straggler): drop staged copies
             for h in barrier:
@@ -748,7 +755,7 @@ class ShardedCascadeServer:
             return
         if self._consume_kill("commit"):
             return  # barrier closed, commit broadcast lost with the primary
-        t0 = time.perf_counter()
+        t0 = advisory_wall_ms()
         installed = 0
         for h in barrier:
             if h.host_id in coord.fenced or not self._reachable(h):
@@ -757,7 +764,7 @@ class ShardedCascadeServer:
             installed += 1
             if installed == 1 and self._consume_kill("mid-commit"):
                 return  # one host installed; the rest must catch up via standby
-        coord.note_commit_ms((time.perf_counter() - t0) * 1e3)
+        coord.note_commit_ms(advisory_wall_ms() - t0)
         # the barrier is synchronous in every transport: any submissions
         # while it was open would show up here
         coord.swap_log[-1].lag_records = (
@@ -775,7 +782,7 @@ class ShardedCascadeServer:
         """Round-robin the hosts one chunk at a time, handling votes,
         stats pooling, straggler rejoins (and any resulting swap) at
         every chunk boundary; heartbeat loss promotes the standby."""
-        t_start = time.perf_counter()
+        t_start = advisory_wall_ms()
         pos = [0] * self.n_hosts
         while any(pos[k] < len(streams[k]) for k in range(self.n_hosts)):
             self._round += 1
@@ -822,7 +829,7 @@ class ShardedCascadeServer:
             1 for r in self.stats.swap_log if r.committed)
         self.stats.swaps_aborted = sum(
             1 for r in self.stats.swap_log if not r.committed)
-        self.stats.wall_ms = (time.perf_counter() - t_start) * 1e3
+        self.stats.wall_ms = advisory_wall_ms() - t_start
         if self.transport in ("thread", "process"):
             for h in self.hosts:
                 h.stop()

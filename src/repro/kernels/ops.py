@@ -47,7 +47,9 @@ def pack_proxy_cached(params):
     proxy (every microbatch of every stage) packs once."""
     from repro.core.proxy_family import family_of
 
-    key = id(params)
+    # id() is safe HERE only because the entry holds a strong ref to params
+    # and the hit path re-checks `hit[0] is params` before trusting the key.
+    key = id(params)  # corelint: disable=identity-cache-key
     hit = _PACK_CACHE.get(key)
     if hit is not None and hit[0] is params:
         return hit[1]
@@ -67,7 +69,8 @@ def _kernel_operands_cached(params):
     microbatch."""
     from repro.core.proxy_family import cascade_kernel_operands, pack_cascade
 
-    key = id(params)
+    # same id()-plus-strong-ref-plus-`is`-recheck pattern as pack_proxy_cached
+    key = id(params)  # corelint: disable=identity-cache-key
     hit = _OPERAND_CACHE.get(key)
     if hit is not None and hit[0] is params:
         return hit[1]
@@ -424,6 +427,22 @@ WIRE_MINOR_QUANT = 2
 
 class WireFormatError(ValueError):
     """Malformed / incompatible scorer artifact."""
+
+
+def pack_le(value: int, width: int) -> bytes:
+    """Canonical little-endian unsigned field for COREWIRE containers.
+
+    Every integer field in the wire family (scorer artifacts, control
+    frames, the plan-cache file) is encoded through this pair so the
+    byte-level layout discipline lives in one module
+    (corelint: wire-pack-outside-ops).
+    """
+    return int(value).to_bytes(width, "little")
+
+
+def unpack_le(buf, start: int, width: int) -> int:
+    """Inverse of :func:`pack_le`: read ``width`` bytes at ``start``."""
+    return int.from_bytes(bytes(buf[start:start + width]), "little")
 
 
 class _ArrayPool:

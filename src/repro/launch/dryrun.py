@@ -18,6 +18,7 @@ import argparse
 import json
 import time
 import traceback
+from repro.util import atomic_write_text
 from pathlib import Path
 
 import jax
@@ -35,7 +36,6 @@ from repro.distributed.sharding import (
 from repro.launch.hlo_analysis import analyze
 from repro.launch.mesh import make_production_mesh
 from repro.models.registry import get_family, input_specs
-from repro.training import optim
 from repro.training.train_loop import make_train_step
 
 # TPU v5e hardware constants (per chip), per the assignment
@@ -151,7 +151,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, force: bool = False
     }
     if not supports_shape(cfg, shape):
         rec["reason"] = "long_500k requires sub-quadratic attention (see DESIGN.md)"
-        out_file.write_text(json.dumps(rec, indent=1))
+        atomic_write_text(out_file, json.dumps(rec, indent=1))
         return rec
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = int(np.prod(list(mesh.shape.values())))
@@ -231,7 +231,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, force: bool = False
     except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
         rec.update(status="error", error=f"{type(e).__name__}: {e}",
                    trace=traceback.format_exc()[-2000:])
-    out_file.write_text(json.dumps(rec, indent=1))
+    atomic_write_text(out_file, json.dumps(rec, indent=1))
     return rec
 
 

@@ -12,7 +12,6 @@ optional per-layer remat.
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

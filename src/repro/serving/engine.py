@@ -35,7 +35,6 @@ static AND the drift-swapping paths.
 """
 from __future__ import annotations
 
-import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -45,6 +44,7 @@ import numpy as np
 from repro.core.correlation import StreamingKappa2
 from repro.core.query import PhysicalPlan
 from repro.serving.stats import (
+
     AdaptivePolicy,
     CusumDetector,
     DriftEvent,
@@ -52,6 +52,7 @@ from repro.serving.stats import (
     Reservoir,
     StreamingRate,
 )
+from repro.util import advisory_wall_ms
 
 
 @dataclass
@@ -346,7 +347,7 @@ class CascadeServer:
         rows = np.asarray(rows, np.float32)
         margins = None
         if cur.cascade is not None and len(rows):
-            t0 = time.perf_counter()
+            t0 = advisory_wall_ms()
             if self.adaptive and self.policy.audit_importance:
                 # the importance-audit weights need score-to-threshold
                 # distances; the margin reduction runs on device in the
@@ -354,7 +355,7 @@ class CascadeServer:
                 masks, margins = cur.cascade.score_margins(rows)
             else:
                 masks = cur.cascade.score_masks(rows)
-            self.stats.fused_score_ms += (time.perf_counter() - t0) * 1e3
+            self.stats.fused_score_ms += advisory_wall_ms() - t0
             for i, r, m in zip(indices, rows, masks):
                 cur.queues[0].append((int(i), r, m))
         else:
@@ -433,7 +434,7 @@ class CascadeServer:
         n_enter = len(batch)
         rejected_ids: List[int] = []
         if stage.proxy is not None:
-            t0 = time.perf_counter()
+            t0 = advisory_wall_ms()
             col = state.cascade.stage_cols[si] if state.cascade is not None else None
             if col is not None and mrows[0] is not None:
                 # fused path: the gate was computed once at submit time
@@ -444,7 +445,7 @@ class CascadeServer:
                 self.stats.stage_used_kernel[si] = True
             else:
                 keep = stage.proxy.score(x) >= stage.threshold
-            self.stats.stage_proxy_ms[si] += (time.perf_counter() - t0) * 1e3
+            self.stats.stage_proxy_ms[si] += advisory_wall_ms() - t0
             self.stats.model_cost_ms += len(x) * stage.proxy.cost
             rejected_ids.extend(int(i) for i in idxs[~keep])
             idxs, x = idxs[keep], x[keep]
@@ -568,11 +569,11 @@ class CascadeServer:
         # escalation decision itself reads fresh statistics, not magnitude
         mode, escalated = self._escalate()
         old = self._states[-1]
-        t0 = time.perf_counter()
+        t0 = advisory_wall_ms()
         x_s, known_sigma = self._reservoir.sample()
         new_plan = reoptimize(old.plan, x_s, known_sigma=known_sigma,
                               mode=mode, step=self.policy.step)
-        reopt_ms = (time.perf_counter() - t0) * 1e3
+        reopt_ms = advisory_wall_ms() - t0
         self.stats.reopt_ms += reopt_ms
         # the builder's UDF labeling on reservoir rows is real model work
         for p, cnt in new_plan.meta["stats"]["udf_calls"].items():
@@ -597,7 +598,7 @@ class CascadeServer:
 
     # -------------------------------------------------------------- driver
     def run_stream(self, x: np.ndarray, *, chunk: int = 4096) -> ServeStats:
-        t0 = time.perf_counter()
+        t0 = advisory_wall_ms()
         n = x.shape[0]
         for s in range(0, n, chunk):
             idx = np.arange(s, min(s + chunk, n))
@@ -606,6 +607,6 @@ class CascadeServer:
             if self.adaptive:
                 self.maybe_reoptimize()
         self.pump(drain=True)
-        self.stats.wall_ms = (time.perf_counter() - t0) * 1e3
+        self.stats.wall_ms = advisory_wall_ms() - t0
         self.stats.rejected = n - self.stats.emitted
         return self.stats

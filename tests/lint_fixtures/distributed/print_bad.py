@@ -1,0 +1,5 @@
+"""Fixture: stdout print inside a distributed protocol module."""
+
+
+def announce(epoch):
+    print("installed epoch", epoch)

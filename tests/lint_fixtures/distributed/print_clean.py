@@ -1,0 +1,6 @@
+"""Fixture: clean twin — diagnostics go to stderr."""
+import sys
+
+
+def announce(epoch):
+    print("installed epoch", epoch, file=sys.stderr)

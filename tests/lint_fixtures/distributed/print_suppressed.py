@@ -1,0 +1,5 @@
+"""Fixture: stdout print, suppressed."""
+
+
+def announce(epoch):
+    print("installed epoch", epoch)  # corelint: disable=print-in-protocol

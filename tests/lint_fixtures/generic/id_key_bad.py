@@ -1,0 +1,7 @@
+"""Fixture: id() keys a cache."""
+
+_CACHE = {}
+
+
+def lookup(params):
+    return _CACHE.get(id(params))

@@ -1,0 +1,7 @@
+"""Fixture: clean twin — a content fingerprint keys the cache."""
+
+_CACHE = {}
+
+
+def lookup(fingerprint):
+    return _CACHE.get(fingerprint)

@@ -1,0 +1,7 @@
+"""Fixture: id() cache key, suppressed (strong-ref + `is`-recheck)."""
+
+_CACHE = {}
+
+
+def lookup(params):
+    return _CACHE.get(id(params))  # corelint: disable=identity-cache-key

@@ -1,0 +1,7 @@
+"""Fixture: in-place write of a shared path."""
+import json
+
+
+def publish(path, payload):
+    with open(path, "w") as fh:
+        json.dump(payload, fh)

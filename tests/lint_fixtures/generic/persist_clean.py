@@ -1,0 +1,10 @@
+"""Fixture: clean twin — same-dir temp file + os.replace publish."""
+import json
+import os
+
+
+def publish(path, payload):
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as fh:
+        json.dump(payload, fh)
+    os.replace(tmp, path)

@@ -1,0 +1,7 @@
+"""Fixture: in-place write, suppressed."""
+import json
+
+
+def publish(path, payload):
+    with open(path, "w") as fh:  # corelint: disable=atomic-persistence
+        json.dump(payload, fh)

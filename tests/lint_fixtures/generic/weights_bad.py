@@ -1,0 +1,6 @@
+"""Fixture: reservoir snapshot built without its IPW weights."""
+from repro.serving.stats import ReservoirSample
+
+
+def snapshot(indices, x, known_sigma):
+    return ReservoirSample(indices, x, known_sigma)

@@ -1,0 +1,6 @@
+"""Fixture: clean twin — the weights travel with the sample."""
+from repro.serving.stats import ReservoirSample
+
+
+def snapshot(indices, x, known_sigma, weights):
+    return ReservoirSample(indices, x, known_sigma, weights=weights)

@@ -1,0 +1,6 @@
+"""Fixture: weight-less snapshot, suppressed."""
+from repro.serving.stats import ReservoirSample
+
+
+def snapshot(indices, x, known_sigma):
+    return ReservoirSample(indices, x, known_sigma)  # corelint: disable=weights-travel

@@ -1,0 +1,9 @@
+"""Fixture: minor dispatch that silently ignores unknown minors."""
+
+WIRE_MINOR_FRAME = 1
+
+
+def parse(minor, blob):
+    if minor == WIRE_MINOR_FRAME:
+        return blob
+    return None

@@ -1,0 +1,13 @@
+"""Fixture: clean twin — unknown minors fail loudly."""
+
+WIRE_MINOR_FRAME = 1
+
+
+class WireFormatError(ValueError):
+    pass
+
+
+def parse(minor, blob):
+    if minor == WIRE_MINOR_FRAME:
+        return blob
+    raise WireFormatError(f"unknown wire minor {minor}")

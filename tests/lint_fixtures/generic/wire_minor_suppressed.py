@@ -1,0 +1,9 @@
+"""Fixture: non-exhaustive minor dispatch, suppressed."""
+
+WIRE_MINOR_FRAME = 1
+
+
+def parse(minor, blob):
+    if minor == WIRE_MINOR_FRAME:  # corelint: disable=wire-minor-exhaustive
+        return blob
+    return None

@@ -1,0 +1,5 @@
+"""Fixture: raw integer wire packing outside kernels/ops.py."""
+
+
+def header(version):
+    return version.to_bytes(2, "little")

@@ -1,0 +1,6 @@
+"""Fixture: clean twin — the canonical helper from kernels/ops.py."""
+from repro.kernels.ops import pack_le
+
+
+def header(version):
+    return pack_le(version, 2)

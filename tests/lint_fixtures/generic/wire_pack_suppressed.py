@@ -1,0 +1,5 @@
+"""Fixture: raw packing, suppressed."""
+
+
+def header(version):
+    return version.to_bytes(2, "little")  # corelint: disable=wire-pack-outside-ops

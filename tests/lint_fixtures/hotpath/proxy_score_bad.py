@@ -1,0 +1,5 @@
+"""Fixture: device->host sync inside the scoring hot path."""
+
+
+def score_tile(scores):
+    return scores.item()

@@ -1,0 +1,5 @@
+"""Fixture: clean twin — values stay on device."""
+
+
+def score_tile(scores, mask):
+    return scores, mask

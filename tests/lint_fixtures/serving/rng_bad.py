@@ -1,0 +1,6 @@
+"""Fixture: unseeded generator construction in a gated path."""
+import numpy as np
+
+
+def make_rng():
+    return np.random.default_rng()

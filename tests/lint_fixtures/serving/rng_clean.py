@@ -1,0 +1,6 @@
+"""Fixture: clean twin — explicit seed threads through."""
+import numpy as np
+
+
+def make_rng(seed):
+    return np.random.default_rng(seed)

@@ -1,0 +1,6 @@
+"""Fixture: unseeded generator, suppressed."""
+import numpy as np
+
+
+def make_rng():
+    return np.random.default_rng()  # corelint: disable=unseeded-randomness

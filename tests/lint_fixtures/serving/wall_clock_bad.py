@@ -1,0 +1,7 @@
+"""Fixture: raw wall-clock read in a decision-path module (serving/)."""
+import time
+
+
+def decide_deadline(budget_ms):
+    start = time.perf_counter()
+    return start + budget_ms

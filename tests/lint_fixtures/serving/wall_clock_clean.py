@@ -1,0 +1,7 @@
+"""Fixture: clean twin — the advisory helper instead of a raw clock."""
+from repro.util import advisory_wall_ms
+
+
+def decide_deadline(budget_ms):
+    start = advisory_wall_ms()
+    return start + budget_ms

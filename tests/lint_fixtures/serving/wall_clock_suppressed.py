@@ -1,0 +1,8 @@
+"""Fixture: same read, explicitly suppressed with a justification."""
+import time
+
+
+def decide_deadline(budget_ms):
+    # injectable-clock fixture twin; suppression must silence the finding
+    start = time.perf_counter()  # corelint: disable=wall-clock-decision
+    return start + budget_ms

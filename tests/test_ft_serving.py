@@ -212,12 +212,16 @@ def test_prepare_ack_after_abort_is_inert(mixed_plan):
     for h in range(2):
         coord.offer_vote(_vote(h))
     coord.propose()
-    assert coord.offer_ack(SwapAck(host=0, epoch=1, ok=True)) is None
+    att1 = coord.pending.attempt
+    assert coord.offer_ack(SwapAck(host=0, epoch=1, ok=True,
+                                   attempt=att1)) is None
     assert coord.offer_ack(
-        SwapAck(host=1, epoch=1, ok=False, error="boom")) is None  # abort
+        SwapAck(host=1, epoch=1, ok=False, error="boom",
+                attempt=att1)) is None  # abort
     assert coord.pending is None
     # the straggling host 2 answers AFTER the abort: inert
-    assert coord.offer_ack(SwapAck(host=2, epoch=1, ok=True)) is None
+    assert coord.offer_ack(SwapAck(host=2, epoch=1, ok=True,
+                                   attempt=att1)) is None
     assert coord.pending is None and coord.epoch == 0
     assert [r.committed for r in coord.swap_log] == [False]
     # a NEW round must need a fresh full barrier (the late ack from the
@@ -227,9 +231,75 @@ def test_prepare_ack_after_abort_is_inert(mixed_plan):
         coord.offer_vote(_vote(h))
     prep2 = coord.propose()
     assert prep2.epoch == 1
-    assert coord.offer_ack(SwapAck(host=0, epoch=1, ok=True)) is None
-    assert coord.offer_ack(SwapAck(host=1, epoch=1, ok=True)) is None
-    assert coord.offer_ack(SwapAck(host=2, epoch=1, ok=True)) is not None
+    # same epoch NUMBER, fresh attempt nonce: round-1 acks cannot leak in
+    assert prep2.attempt == att1 + 1
+    a2 = prep2.attempt
+    assert coord.offer_ack(SwapAck(host=0, epoch=1, ok=True,
+                                   attempt=a2)) is None
+    assert coord.offer_ack(SwapAck(host=1, epoch=1, ok=True,
+                                   attempt=a2)) is None
+    assert coord.offer_ack(SwapAck(host=2, epoch=1, ok=True,
+                                   attempt=a2)) is not None
+    assert coord.epoch == 1
+
+
+def test_fenced_host_ack_after_fence_is_inert(mixed_plan):
+    """A straggler is fenced out of the barrier while its prepare-ack is
+    still in flight (protocol_check.py: deadline_fence then deliver_ack).
+    The late ack must be inert: it may not close the shrunken barrier or
+    re-enter the fenced host into barrier accounting — the commit must
+    come from live acks only."""
+    coord = QuorumSwapCoordinator(
+        mixed_plan, 3, reopt_fn=lambda p, m, mode: mixed_plan)
+    for h in range(2):
+        coord.offer_vote(_vote(h))
+    coord.propose()
+    att = coord.pending.attempt
+    assert coord.offer_ack(SwapAck(host=0, epoch=1, ok=True,
+                                   attempt=att)) is None
+    coord.mark_fenced(2)  # deadline resolution: barrier shrinks to {0, 1}
+    # the fenced host's ack lands AFTER its fence: inert
+    assert coord.offer_ack(SwapAck(host=2, epoch=1, ok=True,
+                                   attempt=att)) is None
+    assert coord.pending is not None  # barrier still open
+    commit = coord.offer_ack(SwapAck(host=1, epoch=1, ok=True, attempt=att))
+    assert commit is not None and commit.epoch == 1
+    assert coord.epoch == 1
+
+
+def test_stale_attempt_ack_during_retry_round_is_inert(mixed_plan):
+    """The interleaving protocol_check.py's legacy mode flags: round 1 on
+    epoch 1 aborts, the retry round re-proposes the SAME epoch number,
+    and a round-1 ack then arrives MID-round-2.  The epoch matches, so
+    only the attempt nonce distinguishes the rounds — without it the
+    stale ack closes the barrier and a host installs an artifact no
+    coordinator committed."""
+    coord = QuorumSwapCoordinator(
+        mixed_plan, 3, reopt_fn=lambda p, m, mode: mixed_plan)
+    for h in range(2):
+        coord.offer_vote(_vote(h))
+    coord.propose()
+    att1 = coord.pending.attempt
+    assert coord.offer_ack(SwapAck(host=0, epoch=1, ok=True,
+                                   attempt=att1)) is None
+    assert coord.offer_ack(
+        SwapAck(host=1, epoch=1, ok=False, error="slow",
+                attempt=att1)) is None  # abort round 1
+    for h in range(2):
+        coord.offer_vote(_vote(h))
+    prep2 = coord.propose()
+    att2 = prep2.attempt
+    assert prep2.epoch == 1 and att2 == att1 + 1
+    assert coord.offer_ack(SwapAck(host=0, epoch=1, ok=True,
+                                   attempt=att2)) is None
+    # host 2's ROUND-1 ack finally arrives: same epoch, stale attempt
+    assert coord.offer_ack(SwapAck(host=2, epoch=1, ok=True,
+                                   attempt=att1)) is None
+    assert coord.pending is not None  # must NOT have closed the barrier
+    assert coord.offer_ack(SwapAck(host=1, epoch=1, ok=True,
+                                   attempt=att2)) is None
+    commit = coord.offer_ack(SwapAck(host=2, epoch=1, ok=True, attempt=att2))
+    assert commit is not None and commit.attempt == att2
     assert coord.epoch == 1
 
 
@@ -246,8 +316,10 @@ def test_quorum_k2_is_unanimity(mixed_plan):
         coord.propose()
     assert coord.offer_vote(_vote(1))
     coord.propose()
-    assert coord.offer_ack(SwapAck(host=0, epoch=1, ok=True)) is None
-    commit = coord.offer_ack(SwapAck(host=1, epoch=1, ok=True))
+    a = coord.pending.attempt
+    assert coord.offer_ack(SwapAck(host=0, epoch=1, ok=True,
+                                   attempt=a)) is None
+    commit = coord.offer_ack(SwapAck(host=1, epoch=1, ok=True, attempt=a))
     assert commit is not None and coord.epoch == 1
     # ...and with one host fenced, K=2 degrades to a quorum of one
     coord.mark_fenced(1)
@@ -360,7 +432,8 @@ def test_snapshot_deltas_rearm_open_barrier(mixed_plan):
     coord.offer_vote(_vote(0))
     coord.offer_vote(_vote(1))
     coord.propose()
-    coord.offer_ack(SwapAck(host=0, epoch=1, ok=True))
+    coord.offer_ack(SwapAck(host=0, epoch=1, ok=True,
+                            attempt=coord.pending.attempt))
     sb = _standby(mixed_plan)
     for delta in coord.snapshot_deltas():
         sb.apply(delta)
@@ -379,8 +452,9 @@ def test_snapshot_deltas_rearm_committed_state(mixed_plan):
     coord.offer_vote(_vote(0))
     coord.offer_vote(_vote(1))
     coord.propose()
-    coord.offer_ack(SwapAck(host=0, epoch=1, ok=True))
-    commit = coord.offer_ack(SwapAck(host=1, epoch=1, ok=True))
+    a = coord.pending.attempt
+    coord.offer_ack(SwapAck(host=0, epoch=1, ok=True, attempt=a))
+    commit = coord.offer_ack(SwapAck(host=1, epoch=1, ok=True, attempt=a))
     assert commit is not None and coord.epoch == 1
     sb = _standby(mixed_plan)
     for delta in coord.snapshot_deltas():

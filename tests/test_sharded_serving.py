@@ -288,9 +288,12 @@ def test_coordinator_two_phase_commit_and_abort(mixed_plan):
     assert prep.epoch == 1 and len(reopts) == 1
     assert reopts[0][0] == 12  # 2 votes + 1 extra, 4 rows each, merged
     # acks from 2 of 3 hosts: no commit yet (ALL hosts must ack)
-    assert coord.offer_ack(SwapAck(host=0, epoch=1, ok=True)) is None
-    assert coord.offer_ack(SwapAck(host=1, epoch=1, ok=True)) is None
-    commit = coord.offer_ack(SwapAck(host=2, epoch=1, ok=True))
+    a = coord.pending.attempt
+    assert coord.offer_ack(SwapAck(host=0, epoch=1, ok=True,
+                                   attempt=a)) is None
+    assert coord.offer_ack(SwapAck(host=1, epoch=1, ok=True,
+                                   attempt=a)) is None
+    commit = coord.offer_ack(SwapAck(host=2, epoch=1, ok=True, attempt=a))
     assert commit is not None and commit.epoch == 1
     assert coord.epoch == 1 and coord.swaps_committed == 1
     assert coord.votes_pending == 0  # round cleared
@@ -298,9 +301,12 @@ def test_coordinator_two_phase_commit_and_abort(mixed_plan):
     for h in range(2):
         coord.offer_vote(_vote(h, epoch=1))
     coord.propose()
-    assert coord.offer_ack(SwapAck(host=0, epoch=2, ok=True)) is None
+    a = coord.pending.attempt
+    assert coord.offer_ack(SwapAck(host=0, epoch=2, ok=True,
+                                   attempt=a)) is None
     assert coord.offer_ack(
-        SwapAck(host=1, epoch=2, ok=False, error="boom")) is None
+        SwapAck(host=1, epoch=2, ok=False, error="boom",
+                attempt=a)) is None
     assert coord.pending is None and coord.epoch == 1
     assert [r.committed for r in coord.swap_log] == [True, False]
     assert coord.swap_log[-1].aborted_by == 1
@@ -405,7 +411,8 @@ def test_prepare_nack_aborts_fleetwide(workload):
     srv = ShardedCascadeServer(plan, 4, tile=256, policy=_policy(), seed=3)
     broken = srv.hosts[2]
     broken.prepare = lambda msg: SwapAck(host=2, epoch=msg.epoch, ok=False,
-                                         error="simulated stage failure")
+                                         error="simulated stage failure",
+                                         attempt=msg.attempt)
     stats = srv.run_streams([s.x for s in streams], chunk=400)
     assert stats.swaps_aborted >= 1
     assert stats.swaps_committed == 0
@@ -431,7 +438,8 @@ def test_abort_then_recovery_commits(workload):
         if not fails[0]:
             fails[0] += 1
             return SwapAck(host=2, epoch=msg.epoch, ok=False,
-                           error="transient stage failure")
+                           error="transient stage failure",
+                           attempt=msg.attempt)
         return real_prepare(msg)
 
     flaky.prepare = prepare_once_broken
