@@ -171,6 +171,7 @@ def write_bench_json(throughput: dict, adaptive: dict | None = None,
                      frontend: dict | None = None,
                      plan_cache: dict | None = None,
                      static_analysis: dict | None = None,
+                     multiquery: dict | None = None,
                      path: Path = BENCH_JSON) -> None:
     payload = {
         "bench": "components",
@@ -193,6 +194,8 @@ def write_bench_json(throughput: dict, adaptive: dict | None = None,
         payload["plan_cache"] = plan_cache
     if static_analysis is not None:
         payload["static_analysis"] = static_analysis
+    if multiquery is not None:
+        payload["multiquery"] = multiquery
     atomic_write_text(path, json.dumps(payload, indent=2) + "\n")
 
 

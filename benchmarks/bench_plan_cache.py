@@ -26,25 +26,38 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import PlanCache, execute_plan, optimize, plan_accuracy
+from repro.core import (
+    OptimizeOptions,
+    PlanCache,
+    build_plan,
+    execute_plan,
+    plan_accuracy,
+)
 from repro.data.synthetic import make_dataset, make_query, make_udfs
 
+OPTS = OptimizeOptions(step=0.05, seed=0)
 
-def bench_plan_cache(*, seed: int = 21) -> dict:
+
+def _workload(seed: int):
     ds = make_dataset(n=6000, correlation=0.9, feature_noise=1.0, seed=seed)
     udfs = make_udfs(ds, hidden=24, depth=1, train_rows=1200, seed=seed,
                      declared_cost_ms=10.0)
     q = make_query(ds, udfs, columns=[0, 1, 2], seed=seed + 1)
+    return ds, udfs, q
+
+
+def bench_plan_cache(*, seed: int = 21) -> dict:
+    ds, udfs, q = _workload(seed)
     x = ds.x[:1200]
 
     cache = PlanCache()
     # ---- cold: first sight of the query, full build + search ----
-    cold_plan, cold = cache.warm_optimize(q, x, step=0.05, seed=0)
+    cold_plan, cold = cache.optimize_query(q, x, OPTS)
     assert cold["path"] == "cold", cold["path"]
     cold_nodes = cold["trace"]["nodes_visited"]
 
     # ---- exact repeat: HIT replays the wire artifact ----
-    hit_plan, hit = cache.warm_optimize(q, x, step=0.05, seed=0)
+    hit_plan, hit = cache.optimize_query(q, x, OPTS)
     assert hit["path"] == "hit", hit["path"]
     hit_ratio = hit["build_ms"] / max(cold["build_ms"], 1e-9)
     same_order_hit = list(hit_plan.order) == list(cold_plan.order)
@@ -56,8 +69,7 @@ def bench_plan_cache(*, seed: int = 21) -> dict:
     # ---- similar query: same predicates, mildly shifted audited stats
     # (what an engine's reservoir would report after gentle drift) ----
     sels = {0: 0.45, 1: 0.5, 2: 0.55}
-    warm_plan, warm = cache.warm_optimize(q, x, step=0.05, seed=0,
-                                          selectivities=sels)
+    warm_plan, warm = cache.optimize_query(q, x, OPTS, selectivities=sels)
     assert warm["path"] == "warm", warm["path"]
     warm_nodes = warm["trace"]["nodes_visited"]
     cost_rel_delta = abs(warm_plan.est_total_cost - cold_plan.est_total_cost) \
@@ -68,14 +80,14 @@ def bench_plan_cache(*, seed: int = 21) -> dict:
     q_far = make_query(ds, udfs, columns=[0, 1, 2], accuracy_target=0.95,
                       seed=seed + 1)
     far_sels = {0: 0.05, 1: 0.95, 2: 0.05}
-    far_plan, far = cache.warm_optimize(q_far, x, step=0.05, seed=0,
-                                        selectivities=far_sels)
+    far_plan, far = cache.optimize_query(q_far, x, OPTS,
+                                         selectivities=far_sels)
     dissimilar_cold = far["path"] == "cold"
     # no accuracy regression vs an uncached optimization of the same query
     x_eval = ds.x[1200:4200]
     orig = execute_plan(_full_plan(q_far), x_eval)
     acc_cached = plan_accuracy(execute_plan(far_plan, x_eval), orig)
-    ref_plan = optimize(q_far, x, step=0.05, seed=0)
+    ref_plan = build_plan(q_far, x, OPTS)
     acc_uncached = plan_accuracy(execute_plan(ref_plan, x_eval), orig)
 
     return {
@@ -99,6 +111,47 @@ def bench_plan_cache(*, seed: int = 21) -> dict:
     }
 
 
+def bench_multidonor(*, seed: int = 21) -> dict:
+    """Distance-weighted multi-donor warm starts vs single-donor: seed
+    two caches (``k_donors=1`` and ``k_donors=3``) with the SAME three
+    donor entries — distinct same-arity queries over the same columns
+    (entries are digest-keyed, so multiple donors require multiple
+    queries) — then warm-optimize a similar probe query.  The blended
+    s* seed must not search more than the single-donor seed — averaging
+    nearby incumbents can only tighten the stale L-node bounds — and the
+    resulting plan must land on the same Eq. 3.1 cost."""
+    ds, udfs, _ = _workload(seed)
+    x = ds.x[:1200]
+    donors = [make_query(ds, udfs, columns=[0, 1, 2], seed=s)
+              for s in (seed + 10, seed + 11, seed + 12)]
+    probe_q = make_query(ds, udfs, columns=[0, 1, 2], seed=seed + 13)
+    out = {}
+    for k in (1, 3):
+        cache = PlanCache(k_donors=k)
+        for dq in donors:
+            cache.optimize_query(dq, x, OPTS)
+        plan, info = cache.optimize_query(probe_q, x, OPTS)
+        out[k] = {
+            "path": info["path"],
+            "donors": int(info.get("donors", 1)),
+            "nodes": int(info["trace"]["nodes_visited"])
+            if info.get("trace") else 0,
+            "cost": float(plan.est_total_cost),
+        }
+    cost_delta = (abs(out[3]["cost"] - out[1]["cost"])
+                  / max(out[1]["cost"], 1e-9))
+    return {
+        "single_donor_nodes": out[1]["nodes"],
+        "multi_donor_nodes": out[3]["nodes"],
+        "multi_donors_used": out[3]["donors"],
+        "single_path": out[1]["path"],
+        "multi_path": out[3]["path"],
+        "multi_le_single": out[3]["nodes"] <= out[1]["nodes"],
+        "cost_rel_delta": float(cost_delta),
+        "same_cost": bool(cost_delta <= 0.05),
+    }
+
+
 def _full_plan(q):
     """The unproxied original plan (every UDF, input order) — the oracle
     plan_accuracy measures A against."""
@@ -111,6 +164,7 @@ def run(quick: bool = True):
     from benchmarks.common import csv_row
 
     out = bench_plan_cache()
+    out["multidonor"] = bench_multidonor()
     csv_row(
         "plan_cache_warm_start", float(out["warm_nodes"]),
         (
@@ -118,7 +172,8 @@ def run(quick: bool = True):
             f"hit_ratio={out['hit_build_ratio']:.3f};"
             f"cost_delta={out['warm_cost_rel_delta']:.4f};"
             f"dissim_cold={int(out['dissimilar_cold'])};"
-            f"roundtrip={int(out['roundtrip_stable'])}"
+            f"roundtrip={int(out['roundtrip_stable'])};"
+            f"multidonor_nodes={out['multidonor']['multi_donor_nodes']}"
         ),
     )
     return out

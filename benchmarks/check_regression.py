@@ -1,7 +1,8 @@
 """CI regression gate for the fused proxy-scoring hot path, the adaptive
 serving loop, K=4 sharded serving, the fault-tolerance scenarios, the
-quantized packed cascade, the SLO-aware serving front end, and the
-cross-query plan cache.
+quantized packed cascade, the SLO-aware serving front end, the
+cross-query plan cache (including multi-donor warm-start blending), and
+the multi-query CoreSession.
 
 Runs the components benchmark's proxy-throughput measurement, the
 drifting-stream adaptive-serving benchmark, the K=4 quorum-swap fleet
@@ -40,7 +41,8 @@ are reported but do not fail the process.
 Env overrides: REGRESSION_MIN_ROWS_PER_S, REGRESSION_MIN_SPEEDUP,
 REGRESSION_MIN_MLP_SPEEDUP, REGRESSION_MIN_ADAPTIVE_SPEEDUP,
 REGRESSION_MIN_SHARDED_SPEEDUP, REGRESSION_MAX_CONSENSUS_MS,
-REGRESSION_MIN_QUANT_SPEEDUP, REGRESSION_MIN_GOODPUT_RATIO.
+REGRESSION_MIN_QUANT_SPEEDUP, REGRESSION_MIN_GOODPUT_RATIO,
+REGRESSION_MIN_MULTIQUERY_SPEEDUP.
 """
 from __future__ import annotations
 
@@ -60,7 +62,11 @@ from benchmarks.bench_components import (  # noqa: E402
     bench_proxy_throughput,
     write_bench_json,
 )
-from benchmarks.bench_plan_cache import bench_plan_cache  # noqa: E402
+from benchmarks.bench_multiquery import bench_multiquery  # noqa: E402
+from benchmarks.bench_plan_cache import (  # noqa: E402
+    bench_multidonor,
+    bench_plan_cache,
+)
 from benchmarks.bench_quant import SWEEP_JSON, bench_quant  # noqa: E402
 from benchmarks.bench_serving_frontend import (  # noqa: E402
     bench_frontend_goodput,
@@ -199,12 +205,17 @@ def main(argv=None) -> int:
     # fixed workload + seeds: node counts and costs deterministic per
     # environment, only the hit-ratio column is wall-clock
     pc = bench_plan_cache()
+    md = bench_multidonor()
+    # N=4 overlapping queries, one shared session vs 4 isolated servers;
+    # all gated quantities ride the cost-model clock
+    mq = bench_multiquery()
     sa = run_static_analysis()
     write_bench_json(throughput, adaptive, mlp, sharded, fault_tolerance=ft,
                      quant={k: v for k, v in quant.items()
                             if k != "sweep_rows"},
                      frontend={**fe, "sharded": fes},
-                     plan_cache=pc, static_analysis=sa)
+                     plan_cache={**pc, "multidonor": md},
+                     static_analysis=sa, multiquery=mq)
     print(f"wrote {BENCH_JSON}")
     SWEEP_JSON.parent.mkdir(parents=True, exist_ok=True)
     atomic_write_text(SWEEP_JSON, json.dumps(
@@ -235,6 +246,9 @@ def main(argv=None) -> int:
     max_goodput_nobp = float(base["max_goodput_ratio_nobp"])
     max_hit_ratio = float(base["max_plan_cache_hit_ratio"])
     min_protocol_states = float(base["recorded_protocol_states"])
+    min_multiquery = float(os.environ.get(
+        "REGRESSION_MIN_MULTIQUERY_SPEEDUP", base["min_multiquery_speedup"]))
+    min_mq_fairness = float(base["min_multiquery_fairness"])
 
     worst_consensus = max(sharded["consensus_ms_per_swap"] or [0.0])
     fo, strag, pooled = (ft["failover"], ft["straggler"], ft["pooled_kappa"])
@@ -377,6 +391,31 @@ def main(argv=None) -> int:
              1.0, 1.0, fmt="{:.0f}"),
         Gate("plan_cache_roundtrip_stable", float(pc["roundtrip_stable"]),
              1.0, 1.0, fmt="{:.0f}"),
+        # ----- multi-donor warm-start blending (bench_plan_cache.py) -----
+        Gate("multidonor_warm_le_single",
+             float(md["multi_le_single"] and md["same_cost"]
+                   and md["multi_path"] == "warm"), 1.0, 1.0, fmt="{:.0f}"),
+        Gate("multidonor_warm_nodes", float(md["multi_donor_nodes"]),
+             float(md["single_donor_nodes"]),
+             base.get("recorded_multidonor_warm_nodes"),
+             higher_is_better=False, fmt="{:.0f}",
+             record_key="recorded_multidonor_warm_nodes"),
+        Gate("multidonor_donors_used", float(md["multi_donors_used"]),
+             2.0, None, fmt="{:.0f}"),
+        # ----- multi-query session (see bench_multiquery.py) -----
+        Gate("multiquery_speedup", mq["speedup"], min_multiquery,
+             base.get("recorded_multiquery_speedup"),
+             record_key="recorded_multiquery_speedup"),
+        Gate("multiquery_conserved", float(mq["conserved"]), 1.0, 1.0,
+             fmt="{:.0f}"),
+        Gate("multiquery_emissions_match", float(mq["emissions_match"]),
+             1.0, 1.0, fmt="{:.0f}"),
+        Gate("multiquery_fairness", mq["fairness"], min_mq_fairness,
+             base.get("recorded_multiquery_fairness"), fmt="{:.3f}",
+             record_key="recorded_multiquery_fairness"),
+        Gate("multiquery_dedupe_rate", mq["dedupe_rate"], None,
+             base.get("recorded_multiquery_dedupe_rate"), fmt="{:.3f}",
+             record_key="recorded_multiquery_dedupe_rate"),
         # ----- static analysis & protocol checking (lint lane, gated) -----
         Gate("lint_violations", float(sa["lint_violations"]), 0.0, 0.0,
              higher_is_better=False, fmt="{:.0f}"),
@@ -431,7 +470,12 @@ def main(argv=None) -> int:
         f"{fes['swaps_committed']} conserved={fes['conserved']}; "
         f"plan cache warm {pc['warm_nodes']}/{pc['cold_nodes']} nodes, "
         f"hit ratio {pc['hit_build_ratio']:.4f}, "
-        f"roundtrip={int(pc['roundtrip_stable'])}"
+        f"roundtrip={int(pc['roundtrip_stable'])}; multidonor "
+        f"{md['multi_donor_nodes']}<={md['single_donor_nodes']} nodes "
+        f"({md['multi_donors_used']} donors); multiquery N="
+        f"{mq['n_queries']} {mq['speedup']:.2f}x, fairness "
+        f"{mq['fairness']:.3f}, dedupe {mq['dedupe_rate']:.3f}, "
+        f"conserved={int(mq['conserved'])}"
     )
     return 0
 

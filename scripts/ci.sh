@@ -2,7 +2,9 @@
 # Tiered CI lanes: tier-1 tests + regression gates (fused proxy scoring,
 # adaptive serving, K=4 sharded serving, fault-tolerance scenarios,
 # quantized cascade, SLO-aware serving front end with goodput gating,
-# cross-query plan cache with similarity warm-start).
+# cross-query plan cache with similarity warm-start + multi-donor
+# blending, multi-query CoreSession with shared fused scoring /
+# cross-query UDF dedupe / weighted-fair scheduling).
 #
 #   scripts/ci.sh                          default: lint + tier1 + bench
 #   scripts/ci.sh --lane fast              iteration lane (no @slow/@flaky)

@@ -523,6 +523,54 @@ def _check_print_in_protocol(ctx: FileContext) -> List[Tuple[int, str]]:
 
 
 # --------------------------------------------------------------------------
+# Rule: deprecated-entry-point
+# --------------------------------------------------------------------------
+
+#: The PR-10 API redesign left ``optimize`` / ``reoptimize`` /
+#: ``warm_optimize`` as DeprecationWarning shims for external callers;
+#: INTERNAL code must use the ``core.api`` surface.  ``optimize`` is only
+#: flagged as a bare name: the attribute form (``handle.optimize()``) is
+#: the NEW session API, while ``cache.warm_optimize()`` /
+#: ``x.reoptimize()`` have no non-deprecated reading.
+_DEPRECATED_BARE = frozenset({"optimize", "reoptimize", "warm_optimize"})
+_DEPRECATED_ATTR = frozenset({"reoptimize", "warm_optimize"})
+_API_REPLACEMENT = {
+    "optimize": "repro.core.api.build_plan(query, x, OptimizeOptions(...))",
+    "reoptimize": "repro.core.api.rebuild_plan(plan, x, options)",
+    "warm_optimize": "PlanCache.optimize_query(query, x, options)",
+}
+
+
+def _in_entry_point_scope(ctx: FileContext) -> bool:
+    """Decision-path modules plus the launch veneers (the CLI is where a
+    stray deprecated call would teach users the old surface)."""
+    return bool((DECISION_SEGMENTS | {"launch"}) & set(ctx.segments[:-1]))
+
+
+def _check_deprecated_entry_point(ctx: FileContext) -> List[Tuple[int, str]]:
+    out: List[Tuple[int, str]] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if isinstance(node.func, ast.Name) and node.func.id in _DEPRECATED_BARE:
+            leaf = node.func.id
+        elif (isinstance(node.func, ast.Attribute)
+              and node.func.attr in _DEPRECATED_ATTR):
+            leaf = node.func.attr
+        else:
+            continue
+        out.append(
+            (
+                node.lineno,
+                f"`{leaf}()` is a deprecated shim kept for external callers "
+                f"only; internal code must call "
+                f"{_API_REPLACEMENT[leaf]}",
+            )
+        )
+    return out
+
+
+# --------------------------------------------------------------------------
 # Rule registry
 # --------------------------------------------------------------------------
 
@@ -598,6 +646,15 @@ RULES: List[Rule] = [
         "debug print interleaved with a reply and desynced the channel",
         applies=lambda ctx: "distributed" in ctx.segments[:-1],
         check=_check_print_in_protocol,
+    ),
+    Rule(
+        id="deprecated-entry-point",
+        summary="internal code must not call the deprecated optimizer shims",
+        origin="PR 10: the api_redesign left optimize/reoptimize/warm_optimize as "
+        "DeprecationWarning shims; an internal caller silently keeps the old kwarg "
+        "surface alive and the shims can never be retired",
+        applies=_in_entry_point_scope,
+        check=_check_deprecated_entry_point,
     ),
 ]
 

@@ -3,6 +3,14 @@ from repro.core.proxy import ProxyModel, RCurve, build_r_curve, train_proxy
 from repro.core.builder import ProxyBuilder
 from repro.core.accuracy import accuracy_allocation, alpha_frontier
 from repro.core.bnb import BranchAndBound
+from repro.core.api import (
+    CoreSession,
+    OptimizeOptions,
+    QueryHandle,
+    ServeConfig,
+    build_plan,
+    rebuild_plan,
+)
 from repro.core.optimizer import optimize, reoptimize
 from repro.core.plan_cache import PlanCache, QueryFingerprint, WarmStart, fingerprint_query
 from repro.core.baselines import ns_plan, orig_plan, pp_plan
@@ -13,7 +21,10 @@ __all__ = [
     "MLUDF", "PhysicalPlan", "PlanStage", "Predicate", "Query",
     "ProxyModel", "RCurve", "build_r_curve", "train_proxy",
     "ProxyBuilder", "accuracy_allocation", "alpha_frontier",
-    "BranchAndBound", "optimize", "reoptimize",
+    "BranchAndBound",
+    "CoreSession", "OptimizeOptions", "QueryHandle", "ServeConfig",
+    "build_plan", "rebuild_plan",
+    "optimize", "reoptimize",
     "PlanCache", "QueryFingerprint", "WarmStart", "fingerprint_query",
     "ns_plan", "orig_plan", "pp_plan",
     "ExecResult", "execute_plan", "plan_accuracy",

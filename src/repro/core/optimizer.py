@@ -1,50 +1,22 @@
-"""CORE optimizer entry points.
+"""Deprecated optimizer entry points (PR 10 API redesign).
 
-``optimize(query, x_sample, ...)`` builds proxy models ONLINE on the k%
-optimization sample and returns a PhysicalPlan:
-
-* mode="core"    — branch-and-bound over orders (Alg. 2, fine-grained tree)
-                   + accuracy allocation (Alg. 1).           [the paper]
-* mode="core-a"  — input order, accuracy allocation only.    [§6.5 CORE-a]
-* mode="core-h"  — exhaustive order search.                  [§6.5 CORE-h]
-
-``reoptimize(plan, x_sample, ...)`` is the adaptive-serving entry point
-(DESIGN.md §4): it rebuilds the plan against fresh statistics — a cheap
-re-allocation on the incumbent order, or a warm-started branch-and-bound
-``resume`` that reuses the previous search tree — carrying the previous
-builder's trained-classifier cache forward so unchanged proxies are not
-retrained.
+``optimize`` and ``reoptimize`` moved to ``core/api.py`` as
+``build_plan`` / ``rebuild_plan`` with every knob collected into one
+``OptimizeOptions`` dataclass.  The functions here are thin
+back-compat shims: same signatures, same behavior, plus a
+``DeprecationWarning``.  New internal callers are kept off them by
+corelint's ``deprecated-entry-point`` rule.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.core.accuracy import Allocation, accuracy_allocation
-from repro.core.bnb import BranchAndBound, SearchTrace
+from repro.core.api import OptimizeOptions, build_plan, rebuild_plan
 from repro.core.builder import ProxyBuilder
-from repro.core.query import PhysicalPlan, PlanStage, Query, all_orders
-from repro.util import advisory_wall_ms
-
-
-
-def _plan_from_allocation(query: Query, alloc: Allocation, meta: dict) -> PhysicalPlan:
-    stages = []
-    for i, p in enumerate(alloc.order):
-        proxy = alloc.proxies[i]
-        stages.append(
-            PlanStage(
-                pred_idx=p,
-                proxy=proxy,
-                alpha=alloc.alphas[i],
-                threshold=proxy.r_curve.threshold_for(alloc.alphas[i]),
-                est_reduction=alloc.reductions[i],
-                est_selectivity=alloc.selectivities[i],
-                est_cost=alloc.stage_costs[i],
-            )
-        )
-    return PhysicalPlan(query=query, stages=stages, est_total_cost=alloc.total_cost, meta=meta)
+from repro.core.query import PhysicalPlan, Query
 
 
 def optimize(
@@ -63,80 +35,17 @@ def optimize(
     quant_dtype: Optional[str] = None,
     warm_start=None,
 ) -> PhysicalPlan:
-    """``keep_state=True`` attaches the live builder (and B&B tree for
-    mode="core") to ``plan.meta`` so a later ``reoptimize`` can warm-start
-    instead of cold-searching — the adaptive serving loop's path.
-
-    ``quant_dtype`` ("int8" | "fp8") stamps ``plan.meta["quant_dtype"]``:
-    every scorer compiled for the plan (executor, serving install, wire
-    artifact) then packs its cascade weights at that storage dtype.
-
-    ``warm_start`` is a cross-query donor state from the plan cache
-    (``plan_cache.WarmStart``: classifiers / s_stars / orders): the
-    builder adopts the donor's trained-classifier cache (re-validated by
-    the Eq.-4.7 eps test before any reuse), and mode="core" seeds the
-    branch-and-bound tree with the donor's stale L-node measurements and
-    surviving candidate set, then ``resume``s instead of cold-running."""
-    t_start = advisory_wall_ms()
-    A = query.accuracy_target
-    builder = builder or ProxyBuilder(query, x_sample, kind=kind, eps=eps, seed=seed)
-    if warm_start is not None and getattr(warm_start, "classifiers", None):
-        builder.adopt_classifiers(warm_start.classifiers)
-    trace: Optional[SearchTrace] = None
-    bb: Optional[BranchAndBound] = None
-    warmed = False
-    if mode == "core-a":
-        alloc = accuracy_allocation(builder, tuple(range(query.n)), A, step=step,
-                                    framework=framework)
-    elif mode == "core-h":
-        best = None
-        for order in all_orders(query.n):
-            alloc = accuracy_allocation(builder, order, A, step=step, framework=framework)
-            if best is None or alloc.total_cost < best.total_cost:
-                best = alloc
-        alloc = best
-    elif mode == "core":
-        bb = BranchAndBound(builder, A, step=step, fine_grained=fine_grained,
-                            framework=framework)
-        if warm_start is not None and getattr(warm_start, "s_stars", None):
-            bb.seed_from(warm_start.s_stars,
-                         orders=getattr(warm_start, "orders", None))
-            alloc, trace = bb.resume()
-            warmed = True
-        else:
-            alloc, trace = bb.run()
-    else:
-        raise ValueError(f"unknown mode {mode!r}")
-    meta = {
-        "mode": mode,
-        "stats": builder.stats.as_dict(),
-        "wall_ms": advisory_wall_ms() - t_start,
-        "plan_version": 0,
-    }
-    if warmed:
-        meta["warm_start"] = True
-    if quant_dtype is not None and quant_dtype != "float32":
-        from repro.core.proxy_family import QUANT_DTYPES
-
-        if quant_dtype not in QUANT_DTYPES:
-            raise ValueError(f"unknown quant_dtype {quant_dtype!r}")
-        meta["quant_dtype"] = quant_dtype
-    if trace is not None:
-        meta["trace"] = _trace_dict(trace)
-    if keep_state:
-        meta["builder"] = builder
-        if bb is not None:
-            meta["bnb"] = bb
-    return _plan_from_allocation(query, alloc, meta)
-
-
-def _trace_dict(trace: SearchTrace) -> dict:
-    return {
-        "nodes_total": trace.nodes_total,
-        "nodes_visited": trace.nodes_visited,
-        "nodes_pruned_frac": trace.nodes_pruned_frac,
-        "plans_pruned": trace.plans_pruned,
-    }
+    """Deprecated: use ``core.api.build_plan(query, x, OptimizeOptions(...))``."""
+    warnings.warn(
+        "optimize() is deprecated; use repro.core.api.build_plan(query, "
+        "x_sample, OptimizeOptions(...))", DeprecationWarning, stacklevel=2)
+    return build_plan(
+        query, x_sample,
+        OptimizeOptions(mode=mode, kind=kind, step=step, eps=eps,
+                        framework=framework, fine_grained=fine_grained,
+                        seed=seed, keep_state=keep_state,
+                        quant_dtype=quant_dtype),
+        builder=builder, warm_start=warm_start)
 
 
 def reoptimize(
@@ -152,69 +61,14 @@ def reoptimize(
     seed: int = 0,
     keep_state: bool = True,
 ) -> PhysicalPlan:
-    """Re-optimize ``plan`` against fresh statistics (adaptive serving).
-
-    ``x_sample`` is the new optimization sample (the serving reservoir);
-    ``known_sigma`` pre-seeds UDF labels the server already observed
-    (pred_idx -> (known_mask, sigma)).  ``mode="alloc"`` re-runs Algorithm 1
-    on the incumbent stage order — the cheap path for pure selectivity /
-    threshold drift.  ``mode="bnb"`` re-searches the order space, warm-
-    starting from the previous search tree when ``plan.meta["bnb"]`` is
-    present (``optimize(keep_state=True)`` or a previous reoptimize).
-    """
-    t_start = advisory_wall_ms()
-    query = plan.query
-    A = query.accuracy_target
-    prev_builder: Optional[ProxyBuilder] = plan.meta.get("builder")
-    prev_bnb: Optional[BranchAndBound] = plan.meta.get("bnb")
-    if prev_builder is None and prev_bnb is not None:
-        prev_builder = prev_bnb.builder
-    if prev_builder is not None:
-        builder = prev_builder.rebase(x_sample, known_sigma=known_sigma)
-    else:
-        # no carried builder: keep the incumbent plan's exact
-        # per-predicate family assignment rather than silently reverting
-        # to the default kind
-        fam_map = {s.pred_idx: s.proxy.family
-                   for s in plan.stages if s.proxy is not None}
-        builder = ProxyBuilder(query, x_sample, kind=fam_map or kind,
-                               eps=eps, seed=seed)
-        if known_sigma:
-            builder.seed_labels(known_sigma)
-    trace: Optional[SearchTrace] = None
-    warm = False
-    bb: Optional[BranchAndBound] = None
-    if mode == "alloc":
-        alloc = accuracy_allocation(builder, plan.order, A, step=step,
-                                    framework=framework)
-        bb = prev_bnb  # keep the tree for a later escalation
-    elif mode == "bnb":
-        if prev_bnb is not None:
-            bb = prev_bnb
-            alloc, trace = bb.resume(builder)
-            warm = True
-        else:
-            bb = BranchAndBound(builder, A, step=step, framework=framework)
-            alloc, trace = bb.run()
-    else:
-        raise ValueError(f"unknown reoptimize mode {mode!r}")
-    meta = {
-        "mode": f"reopt-{mode}",
-        "stats": builder.stats.as_dict(),
-        "wall_ms": advisory_wall_ms() - t_start,
-        "plan_version": int(plan.meta.get("plan_version", 0)) + 1,
-        "warm_start": warm,
-    }
-    # a quantized incumbent stays quantized across adaptive re-plans: the
-    # coordinator's reoptimize -> serialize -> quorum-swap path must ship
-    # the same storage dtype it was serving, or a hot-swap would silently
-    # de-quantize the fleet
-    if plan.meta.get("quant_dtype"):
-        meta["quant_dtype"] = plan.meta["quant_dtype"]
-    if trace is not None:
-        meta["trace"] = _trace_dict(trace)
-    if keep_state:
-        meta["builder"] = builder
-        if bb is not None:
-            meta["bnb"] = bb
-    return _plan_from_allocation(query, alloc, meta)
+    """Deprecated: use ``core.api.rebuild_plan(plan, x, OptimizeOptions(...))``."""
+    warnings.warn(
+        "reoptimize() is deprecated; use repro.core.api.rebuild_plan(plan, "
+        "x_sample, OptimizeOptions(reopt=...))", DeprecationWarning,
+        stacklevel=2)
+    return rebuild_plan(
+        plan, x_sample,
+        OptimizeOptions(reopt=mode, step=step, kind=kind, eps=eps,
+                        framework=framework, seed=seed,
+                        keep_state=keep_state),
+        known_sigma=known_sigma)

@@ -234,11 +234,17 @@ class PlanCache:
     def __init__(self, capacity: int = 32, *,
                  similarity_threshold: float = 0.15,
                  regret_tol: float = 0.1,
-                 exact_tol: float = 1e-3):
+                 exact_tol: float = 1e-3,
+                 k_donors: int = 3):
         self.capacity = int(capacity)
         self.similarity_threshold = float(similarity_threshold)
         self.regret_tol = float(regret_tol)
         self.exact_tol = float(exact_tol)
+        # distance-weighted multi-donor blending: a warm start merges the
+        # k nearest same-arity entries' s* maps instead of trusting the
+        # single nearest (k_donors=1 restores single-donor seeding); with
+        # one entry in range the behavior is identical by construction
+        self.k_donors = max(1, int(k_donors))
         self._entries: "OrderedDict[str, PlanCacheEntry]" = OrderedDict()
         self.stats = PlanCacheStats()
 
@@ -347,45 +353,86 @@ class PlanCache:
     def _drop(self, digest: str) -> None:
         self._entries.pop(digest, None)
 
+    def _neighbors(self, fp: QueryFingerprint, k: int
+                   ) -> List[Tuple[PlanCacheEntry, float]]:
+        """The k nearest same-arity entries within the similarity
+        threshold, nearest first.  Read-only: recency bookkeeping stays
+        with ``lookup`` (which already refreshed the nearest)."""
+        cands = []
+        for e in self._entries.values():
+            if e.n_predicates != fp.n_predicates:
+                continue
+            d = fp.distance(e.stat_vec)
+            if d <= self.similarity_threshold:
+                cands.append((e, d))
+        cands.sort(key=lambda ed: (ed[1], ed[0].digest))
+        return cands[:k]
+
+    @staticmethod
+    def _blend_donors(donors: List[Tuple[PlanCacheEntry, float]]
+                      ) -> Tuple[Dict[Tuple[int, ...], float],
+                                 List[Tuple[int, ...]]]:
+        """Distance-weighted merge of the donors' exported search state.
+
+        s* maps merge per prefix as an inverse-distance weighted mean
+        over the donors that measured that prefix — a far donor's stale
+        selectivity nudges, a near donor's dominates.  Candidate orders
+        union: every donor's surviving set stays alive, so the merged
+        seed can only widen (never wrongly narrow) the re-opened search.
+        """
+        num: Dict[Tuple[int, ...], float] = {}
+        den: Dict[Tuple[int, ...], float] = {}
+        orders: List[Tuple[int, ...]] = []
+        seen = set()
+        for entry, dist in donors:
+            w = 1.0 / (dist + 1e-6)
+            for key, s in entry.sidecar.get("s_stars", {}).items():
+                prefix = tuple(int(i) for i in key.split(","))
+                num[prefix] = num.get(prefix, 0.0) + w * float(s)
+                den[prefix] = den.get(prefix, 0.0) + w
+            for o in entry.sidecar.get("orders", []):
+                t = tuple(int(i) for i in o)
+                if t not in seen:
+                    seen.add(t)
+                    orders.append(t)
+        s_stars = {p: num[p] / den[p] for p in num}
+        return s_stars, orders
+
     # ----------------------------------------------------------- optimization
-    def warm_optimize(
+    def optimize_query(
         self,
         query: Query,
         x_sample: np.ndarray,
+        options=None,
         *,
         selectivities: Optional[Dict[int, float]] = None,
         correlations: Optional[Dict[Tuple[int, int], float]] = None,
-        mode: str = "core",
-        kind="svm",
-        step: float = 0.02,
-        eps: float = 0.1,
-        framework: str = "exhaustive",
-        fine_grained: bool = True,
-        seed: int = 0,
-        keep_state: bool = False,
-        quant_dtype: Optional[str] = None,
         accept_hit: bool = True,
     ) -> Tuple[PhysicalPlan, dict]:
-        """Cache-aware ``optimize``: exact HIT replays the cached plan
-        (no proxy training at all); a similar neighbor warm-starts the
-        builder + B&B; anything else cold-optimizes.  Every non-hit
-        result is written back.  Returns ``(plan, info)`` where ``info``
-        carries {path, distance, regret, build_ms, digest}.
+        """Cache-aware ``build_plan``: exact HIT replays the cached plan
+        (no proxy training at all); similar neighbors warm-start the
+        builder + B&B (distance-weighted blend of the ``k_donors``
+        nearest same-arity entries); anything else cold-optimizes.
+        Every non-hit result is written back.  Returns ``(plan, info)``
+        where ``info`` carries {path, distance, regret, donors,
+        build_ms, digest}.
 
         ``accept_hit=False`` forces a digest-identical match down the
         warm path — callers that need live builder/B&B state (adaptive
         serving wants ``keep_state``) cannot serve a wire-replayed plan.
         """
-        from repro.core.optimizer import optimize
+        from repro.core.api import OptimizeOptions, build_plan
         from repro.kernels.ops import WireFormatError, deserialize_scorer
         from repro.serving.stats import estimate_order_regret
 
-        fp = fingerprint_query(query, kind=kind,
+        opts = options or OptimizeOptions()
+        fp = fingerprint_query(query, kind=opts.kind,
                                selectivities=selectivities,
-                               correlations=correlations, step=step, eps=eps)
+                               correlations=correlations,
+                               step=opts.step, eps=opts.eps)
         match, entry, dist = self.lookup(fp)
         info = {"path": "cold", "digest": fp.digest,
-                "distance": dist, "regret": None}
+                "distance": dist, "regret": None, "donors": 0}
         if match == "exact" and accept_hit:
             t0 = advisory_wall_ms()
             try:
@@ -406,11 +453,13 @@ class PlanCache:
                 return plan, info
         warm: Optional[WarmStart] = None
         if match in ("exact", "warm") and entry is not None:
-            # price the neighbor's ORDER under the probe's fresh stats;
-            # high regret means the order optimum moved and the donor's
-            # candidate set would steer the search wrong — fall back cold
+            # price the nearest neighbor's ORDER under the probe's fresh
+            # stats; high regret means the order optimum moved and the
+            # donors' candidate sets would steer the search wrong — fall
+            # back cold
             regret = 0.0
             shim = _shim_plan(entry.sidecar)
+            best_order = None
             if shim is not None:
                 regret, best_order = estimate_order_regret(
                     shim, dict(selectivities or {}))
@@ -418,27 +467,26 @@ class PlanCache:
             if regret > self.regret_tol:
                 self.stats.fallbacks_regret += 1
             else:
-                s_stars = {
-                    tuple(int(i) for i in k.split(",")): float(v)
-                    for k, v in entry.sidecar.get("s_stars", {}).items()}
-                orders = [tuple(int(i) for i in o)
-                          for o in entry.sidecar.get("orders", [])]
+                donors = self._neighbors(fp, self.k_donors)
+                if not any(e is entry for e, _ in donors):
+                    # lookup's pick always participates (an exact-digest
+                    # match at drifted stats may sort behind strangers)
+                    donors = [(entry, dist)] + donors[:self.k_donors - 1]
+                s_stars, orders = self._blend_donors(donors)
                 if shim is not None and orders and best_order not in orders:
-                    # fresh stats prefer an order the donor search had
+                    # fresh stats prefer an order every donor search had
                     # pruned: keep the measurements, re-open the full
                     # candidate set
                     orders = []
+                info["donors"] = len(donors)
                 warm = WarmStart(classifiers=entry.classifiers,
                                  s_stars=s_stars or None,
                                  orders=orders or None)
         elif match is None and dist <= 1.0:
             self.stats.fallbacks_similarity += 1
         t0 = advisory_wall_ms()
-        plan = optimize(
-            query, x_sample, mode=mode, kind=kind, step=step, eps=eps,
-            framework=framework, fine_grained=fine_grained, seed=seed,
-            builder=None, keep_state=True, quant_dtype=quant_dtype,
-            warm_start=warm)
+        plan = build_plan(query, x_sample, opts.replace(keep_state=True),
+                          warm_start=warm)
         build_ms = advisory_wall_ms() - t0
         if warm is not None:
             self.stats.hits_warm += 1
@@ -446,7 +494,7 @@ class PlanCache:
         else:
             self.stats.misses += 1
         self.put(fp, plan)
-        if not keep_state:
+        if not opts.keep_state:
             plan.meta.pop("builder", None)
             plan.meta.pop("bnb", None)
         plan.meta["plan_cache"] = {
@@ -454,6 +502,40 @@ class PlanCache:
         info["build_ms"] = build_ms
         info["trace"] = plan.meta.get("trace")
         return plan, info
+
+    def warm_optimize(
+        self,
+        query: Query,
+        x_sample: np.ndarray,
+        *,
+        selectivities: Optional[Dict[int, float]] = None,
+        correlations: Optional[Dict[Tuple[int, int], float]] = None,
+        mode: str = "core",
+        kind="svm",
+        step: float = 0.02,
+        eps: float = 0.1,
+        framework: str = "exhaustive",
+        fine_grained: bool = True,
+        seed: int = 0,
+        keep_state: bool = False,
+        quant_dtype: Optional[str] = None,
+        accept_hit: bool = True,
+    ) -> Tuple[PhysicalPlan, dict]:
+        """Deprecated: use ``optimize_query(query, x, OptimizeOptions(...))``."""
+        from repro.core.api import OptimizeOptions
+
+        warnings.warn(
+            "PlanCache.warm_optimize() is deprecated; use "
+            "PlanCache.optimize_query(query, x_sample, OptimizeOptions(...))",
+            DeprecationWarning, stacklevel=2)
+        return self.optimize_query(
+            query, x_sample,
+            OptimizeOptions(mode=mode, kind=kind, step=step, eps=eps,
+                            framework=framework, fine_grained=fine_grained,
+                            seed=seed, keep_state=keep_state,
+                            quant_dtype=quant_dtype),
+            selectivities=selectivities, correlations=correlations,
+            accept_hit=accept_hit)
 
     # ------------------------------------------------------------- write-back
     def record_plan(self, plan: PhysicalPlan, *,

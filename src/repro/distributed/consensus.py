@@ -116,6 +116,9 @@ class DriftVote:
     # pooled coordinator-side so fleet-level correlation evidence exists
     # even when every per-shard kappa estimate is immature or sub-threshold
     kappa: Optional[KappaExport] = None
+    # which registered query this vote concerns (multi-tenant fleets route
+    # per-qid to independent epoch spaces; default 0 = single-query wire)
+    qid: int = 0
 
 
 @dataclass
@@ -133,6 +136,7 @@ class SwapPrepare:
     # fleet never committed (found by analysis/protocol_check.py).
     # Default 0 keeps the pre-nonce wire shape decodable.
     attempt: int = 0
+    qid: int = 0  # target query (per-query epoch spaces, DESIGN.md §10)
 
 
 @dataclass
@@ -142,6 +146,7 @@ class SwapAck:
     ok: bool
     error: str = ""
     attempt: int = 0  # echo of SwapPrepare.attempt (see there)
+    qid: int = 0      # echo of SwapPrepare.qid
 
 
 @dataclass
@@ -155,6 +160,7 @@ class SwapCommit:
     # late round-1 prepare overwrote round 2's), and an epoch-only match
     # would install a plan the fleet never committed
     attempt: int = 0
+    qid: int = 0  # target query (per-query epoch spaces)
 
 
 @dataclass
@@ -172,6 +178,7 @@ class StateDelta:
     host: Optional[int] = None
     artifact: Optional[bytes] = None
     attempt: int = 0  # prepare deltas carry the proposal nonce
+    qid: int = 0      # originating query (multi-tenant standby mirrors)
 
 
 @dataclass
@@ -221,7 +228,7 @@ class QuorumSwapCoordinator:
     B&B tree in ``plan.meta`` — hosts only ever hold deserialized
     artifacts, so re-optimization state never fans out).  ``reopt_fn``
     is injected: ``(plan, merged_sample, mode) -> new_plan`` — the
-    sharded server binds it to ``core.optimizer.reoptimize``; unit tests
+    sharded server binds it to ``core.api.rebuild_plan``; unit tests
     bind a stub.
     """
 
@@ -766,3 +773,105 @@ class StandbyCoordinator:
         if resolution == "idle" and behind:
             resolution = "resync"
         return coord, resolution
+
+
+class MultiQueryCoordinator:
+    """Routes swap-protocol traffic to per-query coordinators.
+
+    A multi-tenant fleet serves several registered queries through the
+    same hosts, but their plans drift (and swap) independently.  A
+    single ``QuorumSwapCoordinator`` would couple the tenants: it drops
+    votes while a prepare is in flight, so one tenant's slow two-phase
+    barrier would silently discard another tenant's drift evidence and
+    stall its swap.  This wrapper instead holds one full coordinator —
+    its own epoch space, vote set, kappa² pool, and pending barrier —
+    per ``qid`` and dispatches every inbound message by its ``qid``
+    field.  Outbound prepares/commits are stamped with the qid so the
+    transport can deliver them to the right per-query plan slot on each
+    host.
+
+    The isolation invariant (tested in tests/test_multiquery.py): any
+    interleaving of two tenants' vote → propose → ack → commit rounds
+    commits both, and neither tenant's epoch ever observes the other's
+    messages.
+    """
+
+    def __init__(self, plans: Dict[int, object], n_hosts: int, **kw):
+        """``plans`` maps qid -> authoritative plan; ``kw`` is forwarded
+        verbatim to every per-query ``QuorumSwapCoordinator`` (inject a
+        per-qid ``reopt_fn`` by closing over the qid if tenants need
+        different re-optimization policies)."""
+        self.n_hosts = int(n_hosts)
+        self._kw = dict(kw)
+        self.coords: Dict[int, QuorumSwapCoordinator] = {
+            int(qid): QuorumSwapCoordinator(plan, n_hosts, **kw)
+            for qid, plan in plans.items()
+        }
+
+    def coord(self, qid: int) -> QuorumSwapCoordinator:
+        return self.coords[int(qid)]
+
+    def add_query(self, qid: int, plan) -> QuorumSwapCoordinator:
+        """Register a tenant after construction (session-style API)."""
+        qid = int(qid)
+        if qid in self.coords:
+            raise ValueError(f"qid {qid} already registered")
+        self.coords[qid] = QuorumSwapCoordinator(
+            plan, self.n_hosts, **self._kw)
+        return self.coords[qid]
+
+    @property
+    def qids(self) -> List[int]:
+        return sorted(self.coords)
+
+    def epoch(self, qid: int) -> int:
+        return self.coords[int(qid)].epoch
+
+    # ------------------------------------------------------------- routing
+    def offer_vote(self, vote: DriftVote) -> bool:
+        """Route one host's vote to its query's coordinator.  A pending
+        prepare on one qid never discards a vote for another qid."""
+        return self.coords[vote.qid].offer_vote(vote)
+
+    def propose(self, qid: int,
+                extra_reservoirs: Optional[List[ReservoirSample]] = None
+                ) -> SwapPrepare:
+        prep = self.coords[int(qid)].propose(extra_reservoirs)
+        prep.qid = int(qid)
+        return prep
+
+    def propose_pooled(self, qid: int,
+                       reservoirs: List[ReservoirSample]) -> SwapPrepare:
+        prep = self.coords[int(qid)].propose_pooled(reservoirs)
+        prep.qid = int(qid)
+        return prep
+
+    def offer_ack(self, ack: SwapAck) -> Optional[SwapCommit]:
+        commit = self.coords[ack.qid].offer_ack(ack)
+        if commit is not None:
+            commit.qid = ack.qid
+        return commit
+
+    def resolve_prepare_deadline(self, qid: int, missing: List[int],
+                                 policy: str = "fence"
+                                 ) -> Optional[SwapCommit]:
+        commit = self.coords[int(qid)].resolve_prepare_deadline(
+            missing, policy)
+        if commit is not None:
+            commit.qid = int(qid)
+        return commit
+
+    # fencing is a HOST property, not a query property: a silent host is
+    # silent for every tenant it serves, so the fence fans out
+    def mark_fenced(self, host: int) -> None:
+        for c in self.coords.values():
+            c.mark_fenced(host)
+
+    def mark_rejoined(self, host: int) -> None:
+        for c in self.coords.values():
+            c.mark_rejoined(host)
+
+    def pending_qids(self) -> List[int]:
+        """Queries with a swap currently in flight (diagnostics)."""
+        return sorted(q for q, c in self.coords.items()
+                      if c.pending is not None)

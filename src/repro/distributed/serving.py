@@ -561,10 +561,12 @@ class ShardedCascadeServer:
 
     # ------------------------------------------------------ re-optimization
     def _reopt(self, plan: PhysicalPlan, merged, mode: str) -> PhysicalPlan:
-        from repro.core.optimizer import reoptimize
+        from repro.core.api import REBUILD_DEFAULTS, rebuild_plan
 
-        new_plan = reoptimize(plan, merged.x, known_sigma=merged.known_sigma,
-                              mode=mode, step=self.policy.step)
+        new_plan = rebuild_plan(
+            plan, merged.x,
+            REBUILD_DEFAULTS.replace(reopt=mode, step=self.policy.step),
+            known_sigma=merged.known_sigma)
         # stashed, not recorded: the cache write-back waits for the quorum
         # barrier to COMMIT this plan fleet-wide (_finish_swap)
         self._last_reopt_plan = new_plan

@@ -200,6 +200,56 @@ class CascadeScorer:
             if stage.proxy is not None
         )
 
+    @classmethod
+    def from_plans(cls, plans, **kw):
+        """Stack several plans' proxied stages into ONE packed cascade
+        (multi-query serving, DESIGN.md §10).  Returns
+        ``(scorer | None, col_maps)`` where ``col_maps[qi][si]`` is the
+        shared-scorer column for plan ``qi``'s stage ``si`` (None for
+        proxy-less stages).  Stages with byte-identical packed params AND
+        threshold — keyed on the content fingerprint, never ``id()`` —
+        share one column, so a predicate proxied identically by two
+        queries is scored once per record, not once per query.
+
+        Column masks are bit-identical to each plan's isolated scorer:
+        the readout is block-diagonal, so a column's score sums only its
+        own hidden block — every cross-block term is an exact float zero
+        and stacking more columns cannot perturb the per-column sums.
+
+        The weight storage dtype is the plans' common ``quant_dtype``
+        when they agree; disagreeing tenants fall back to float32 (a
+        shared launch must not silently quantize a tenant that asked for
+        full precision).  ``None`` scorer means no plan has any proxied
+        stage."""
+        params, thrs = [], []
+        col_of = {}
+        col_maps = []
+        for plan in plans:
+            cols = []
+            for stage in plan.stages:
+                if stage.proxy is None:
+                    cols.append(None)
+                    continue
+                key = (params_fingerprint(stage.proxy.params),
+                       float(stage.threshold))
+                col = col_of.get(key)
+                if col is None:
+                    col = len(params)
+                    col_of[key] = col
+                    params.append(stage.proxy.params)
+                    thrs.append(stage.threshold)
+                cols.append(col)
+            col_maps.append(cols)
+        if not params:
+            return None, col_maps
+        dtypes = {str(plan.meta.get("quant_dtype", "float32"))
+                  for plan in plans}
+        kw.setdefault("dtype",
+                      dtypes.pop() if len(dtypes) == 1 else "float32")
+        scorer = cls(params, thrs, **kw)
+        scorer.stage_cols = list(range(len(params)))
+        return scorer, col_maps
+
     def _bucket(self, n: int) -> int:
         for size in self.buckets:
             if n <= size:

@@ -245,7 +245,7 @@ def cascade_dryrun(proxy_kind: str, *, n: int = 6000, preds: int = 3,
 
         PYTHONPATH=src python -m repro.launch.dryrun --proxy-kind mixed
     """
-    from repro.core import execute_plan, optimize
+    from repro.core import OptimizeOptions, build_plan, execute_plan
     from repro.data.synthetic import make_dataset, make_query, make_udfs
     from repro.kernels.ops import cascade_scorer_for_plan
 
@@ -255,7 +255,9 @@ def cascade_dryrun(proxy_kind: str, *, n: int = 6000, preds: int = 3,
     q = make_query(ds, udfs, columns=list(range(preds)),
                    target_selectivity=0.5, accuracy_target=0.9, seed=seed + 1)
     k = max(800, n // 10)
-    plan = optimize(q, ds.x[:k], mode="core-a", step=0.05, kind=proxy_kind)
+    plan = build_plan(q, ds.x[:k],
+                      OptimizeOptions(mode="core-a", step=0.05,
+                                      kind=proxy_kind))
     print(plan.describe())
     scorer, _hit = cascade_scorer_for_plan(plan)
     packed = scorer.packed

@@ -9,13 +9,32 @@ rows; add ``--adaptive`` to let the server detect the drift and
 re-optimize mid-stream (DESIGN.md §4).  ``--hosts K`` (with K > 1) shards
 the stream across K simulated hosts with quorum-voted global plan swaps
 (DESIGN.md §6); per-shard drift magnitudes are skewed, so single-host
-detectors disagree and the quorum is load-bearing.
+detectors disagree and the quorum is load-bearing.  ``--queries
+spec.json`` registers SEVERAL concurrent queries in one ``CoreSession``
+(DESIGN.md §10): shared fused scoring, cross-query UDF dedupe, and
+weighted-fair device-time scheduling.
+
+Every CLI flag maps onto a typed config field via ``FLAG_MAP`` — the
+parser is a thin veneer over ``(WorkloadConfig, OptimizeOptions,
+ServeConfig)``, and tests/test_api.py round-trips every flag through
+``config_from_args`` so the CLI can never drift from the session API.
 """
 from __future__ import annotations
 
 import argparse
+from dataclasses import dataclass
+from typing import Optional
 
-from repro.core import execute_plan, ns_plan, optimize, orig_plan, pp_plan
+from repro.core import (
+    CoreSession,
+    OptimizeOptions,
+    ServeConfig,
+    build_plan,
+    execute_plan,
+    ns_plan,
+    orig_plan,
+    pp_plan,
+)
 from repro.data.synthetic import (
     make_dataset,
     make_drifting_stream,
@@ -26,7 +45,62 @@ from repro.data.synthetic import (
 from repro.serving.engine import CascadeServer
 
 
-def main():
+@dataclass
+class WorkloadConfig:
+    """Launch-local knobs: the synthetic dataset/query the launcher
+    builds (not part of the session API — a real deployment brings its
+    own records and UDFs)."""
+
+    n: int = 20_000
+    correlation: float = 0.9
+    accuracy: float = 0.9
+    preds: int = 2
+    udf_cost_ms: float = 20.0
+    mode: str = "core"  # includes the non-CORE baselines pp/ns/orig
+    seed: int = 0
+
+
+@dataclass
+class LaunchConfig:
+    workload: WorkloadConfig
+    optimize: OptimizeOptions
+    serve: ServeConfig
+
+
+# argparse dest -> (config section, field).  Golden-tested: every parser
+# action must appear here, and every non-default flag value must survive
+# the round trip into its config field (tests/test_api.py).
+FLAG_MAP = {
+    "n": ("workload", "n"),
+    "correlation": ("workload", "correlation"),
+    "accuracy": ("workload", "accuracy"),
+    "preds": ("workload", "preds"),
+    "udf_cost_ms": ("workload", "udf_cost_ms"),
+    "mode": ("workload", "mode"),
+    "proxy_kind": ("optimize", "kind"),
+    "quant_dtype": ("optimize", "quant_dtype"),
+    "tile": ("serve", "tile"),
+    "seed": ("serve", "seed"),
+    "adaptive": ("serve", "adaptive"),
+    "drift": ("serve", "drift"),
+    "hosts": ("serve", "hosts"),
+    "drift_skew": ("serve", "drift_skew"),
+    "transport": ("serve", "transport"),
+    "kill_coordinator_at": ("serve", "kill_coordinator_at"),
+    "straggler_host": ("serve", "straggler_host"),
+    "slo_ms": ("serve", "slo_ms"),
+    "arrival_rate": ("serve", "arrival_rate"),
+    "request_rows": ("serve", "request_rows"),
+    "no_backpressure": ("serve", "backpressure"),  # inverted, see below
+    "plan_cache": ("serve", "plan_cache_path"),
+    "queries": ("serve", "queries_path"),
+}
+
+# flags whose config field is the NEGATION of the CLI switch
+_INVERTED = {"no_backpressure"}
+
+
+def build_arg_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=20_000)
     ap.add_argument("--correlation", type=float, default=0.9)
@@ -93,49 +167,93 @@ def main():
                          "with no proxy training at all), and persist "
                          "every plan this run commits — including drift "
                          "re-optimizations — back to PATH for the next run")
-    args = ap.parse_args()
+    ap.add_argument("--queries", default=None, metavar="SPEC.JSON",
+                    help="multi-query session (DESIGN.md §10): JSON list "
+                         "of query specs ({columns, accuracy?, seed?, "
+                         "slo_ms?, quant_dtype?}) all registered in one "
+                         "CoreSession — shared fused scoring, cross-query "
+                         "UDF dedupe, weighted-fair scheduling.  Overrides "
+                         "--preds/--accuracy for the query shapes")
+    return ap
 
-    ds = make_dataset(n=args.n, correlation=args.correlation, seed=args.seed)
-    udfs = make_udfs(ds, hidden=64, depth=2, train_rows=3000, seed=args.seed,
-                     declared_cost_ms=args.udf_cost_ms)
-    q = make_query(ds, udfs, columns=list(range(args.preds)),
-                   target_selectivity=0.5, accuracy_target=args.accuracy,
-                   seed=args.seed + 1)
-    print("query:", " AND ".join(q.names()), f"A={args.accuracy}")
-    k = max(1000, int(0.05 * args.n))
+
+def config_from_args(args: argparse.Namespace) -> LaunchConfig:
+    """Fold the parsed namespace into the typed config triple.  The CLI
+    owns no state of its own: every dest routes through ``FLAG_MAP``."""
+    sections = {"workload": {}, "optimize": {}, "serve": {}}
+    for dest, (section, fld) in FLAG_MAP.items():
+        val = getattr(args, dest)
+        if dest in _INVERTED:
+            val = not val
+        sections[section][fld] = val
+    # normalize: "fp32" means full precision, i.e. no quantization pass
+    if sections["optimize"].get("quant_dtype") in ("fp32", "float32"):
+        sections["optimize"]["quant_dtype"] = None
+    # the optimizer only sees CORE modes; baselines stay workload-level
+    if sections["workload"]["mode"] in ("core", "core-a", "core-h"):
+        sections["optimize"]["mode"] = sections["workload"]["mode"]
+    # one --seed feeds all three sections (the golden test pins it to
+    # serve; workload/optimize inherit)
+    seed = sections["serve"]["seed"]
+    sections["workload"]["seed"] = seed
+    sections["optimize"]["seed"] = seed
+    return LaunchConfig(
+        workload=WorkloadConfig(**sections["workload"]),
+        optimize=OptimizeOptions(**sections["optimize"]),
+        serve=ServeConfig(**sections["serve"]),
+    )
+
+
+def main():
+    args = build_arg_parser().parse_args()
+    cfg = config_from_args(args)
+    wl, opt, sv = cfg.workload, cfg.optimize, cfg.serve
+
+    ds = make_dataset(n=wl.n, correlation=wl.correlation, seed=wl.seed)
+    udfs = make_udfs(ds, hidden=64, depth=2, train_rows=3000, seed=wl.seed,
+                     declared_cost_ms=wl.udf_cost_ms)
+    k = max(1000, int(0.05 * wl.n))
     cache = None
-    if args.plan_cache and args.mode in ("core", "core-a", "core-h"):
+    if sv.plan_cache_path and wl.mode in ("core", "core-a", "core-h"):
         import os
 
         from repro.core import PlanCache
 
-        cache = (PlanCache.load(args.plan_cache)
-                 if os.path.exists(args.plan_cache) else PlanCache())
-        print(f"plan cache: {args.plan_cache} ({len(cache)} entries)")
-    if args.mode == "orig":
+        cache = (PlanCache.load(sv.plan_cache_path)
+                 if os.path.exists(sv.plan_cache_path) else PlanCache())
+        print(f"plan cache: {sv.plan_cache_path} ({len(cache)} entries)")
+
+    if sv.queries_path is not None:
+        _serve_multiquery(cfg, ds, udfs, k, cache)
+        _save_cache(cache, sv)
+        return
+
+    q = make_query(ds, udfs, columns=list(range(wl.preds)),
+                   target_selectivity=0.5, accuracy_target=wl.accuracy,
+                   seed=wl.seed + 1)
+    print("query:", " AND ".join(q.names()), f"A={wl.accuracy}")
+    if wl.mode == "orig":
         plan = orig_plan(q)
-    elif args.mode == "ns":
-        plan = ns_plan(q, ds.x[:k], kind=args.proxy_kind)
-    elif args.mode == "pp":
-        plan = pp_plan(q, ds.x[:k], kind=args.proxy_kind)
+    elif wl.mode == "ns":
+        plan = ns_plan(q, ds.x[:k], kind=opt.kind)
+    elif wl.mode == "pp":
+        plan = pp_plan(q, ds.x[:k], kind=opt.kind)
     else:
         # K > 1 implies the adaptive loop: the coordinator's quorum
         # re-optimizations need the builder/B&B state to warm-start
-        keep = args.adaptive or args.hosts > 1
-        qd = None if args.quant_dtype == "fp32" else args.quant_dtype
+        keep = sv.adaptive or sv.hosts > 1
+        build_opts = opt.replace(keep_state=keep)
         if cache is not None:
             # adaptive/sharded serving needs a live builder/B&B on the
             # plan, which an exact-hit wire replay cannot carry — those
             # callers take the warm path instead of the HIT fast path
-            plan, info = cache.warm_optimize(
-                q, ds.x[:k], mode=args.mode, kind=args.proxy_kind,
-                keep_state=keep, quant_dtype=qd, accept_hit=not keep)
+            plan, info = cache.optimize_query(
+                q, ds.x[:k], build_opts, accept_hit=not keep)
             print(f"plan cache: {info['path'].upper()} "
                   f"(distance {info['distance']:.4f}, "
                   f"build {info['build_ms']:.0f} ms)")
         else:
-            plan = optimize(q, ds.x[:k], mode=args.mode, kind=args.proxy_kind,
-                            keep_state=keep, quant_dtype=qd)
+            plan = build_plan(q, ds.x[:k], build_opts)
     print(plan.describe())
     if plan.meta.get("quant_dtype"):
         print(f"packed cascade weights: {plan.meta['quant_dtype']}")
@@ -143,29 +261,29 @@ def main():
         print("proxy families:",
               " ".join(s.proxy.family for s in plan.stages if s.proxy is not None))
 
-    if args.hosts > 1:
-        _serve_sharded(args, ds, q, plan, cache)
-        _save_cache(cache, args)
+    if sv.hosts > 1:
+        _serve_sharded(cfg, ds, q, plan, cache)
+        _save_cache(cache, sv)
         return
 
-    if args.slo_ms is not None:
-        _serve_frontend(args, ds, plan, k, cache)
-        _save_cache(cache, args)
+    if sv.slo_ms is not None:
+        _serve_frontend(cfg, ds, plan, k, cache)
+        _save_cache(cache, sv)
         return
 
-    if args.drift:
+    if sv.drift:
         stream = make_drifting_stream(
-            ds, max(args.n // 4, 2000), args.n - k,
-            shift_targets={c: (2.8 if c != 1 else -2.6) for c in range(args.preds)},
-            corr_gain=2.5, seed=args.seed,
+            ds, max(wl.n // 4, 2000), wl.n - k,
+            shift_targets={c: (2.8 if c != 1 else -2.6) for c in range(wl.preds)},
+            corr_gain=2.5, seed=wl.seed,
         )
         x_serve = stream.x
         print(f"drifting stream: {stream.n} records, boundary at "
               f"{stream.boundary}")
     else:
         x_serve = ds.x[k:]
-    server = CascadeServer(plan, tile=args.tile, use_kernel=True,
-                           adaptive=args.adaptive, seed=args.seed,
+    server = CascadeServer(plan, tile=sv.tile, use_kernel=sv.use_kernel,
+                           adaptive=sv.adaptive, seed=sv.seed,
                            plan_cache=cache)
     stats = server.run_stream(x_serve)
     orig_res = execute_plan(orig_plan(q), x_serve)
@@ -176,7 +294,7 @@ def main():
                   / max(len(orig_set), 1))
     print(f"\nserved {len(x_serve)} records in {stats.wall_ms:.0f} ms wall; "
           f"emitted {stats.emitted} (+{stats.rejected} rejected)")
-    if args.adaptive:
+    if sv.adaptive:
         print(f"adaptive: {stats.plan_swaps} plan swap(s), "
               f"{stats.audit_records} audit records "
               f"({stats.audit_cost_ms:.0f} ms cost), reopt "
@@ -190,22 +308,89 @@ def main():
     print(f"cost model: {stats.model_cost_ms / len(x_serve):.3f} ms/rec "
           f"(ORIG {orig_res.cost_per_record(len(x_serve)):.3f}); "
           f"served accuracy {served_acc:.3f}")
-    _save_cache(cache, args)
+    _save_cache(cache, sv)
 
 
-def _save_cache(cache, args):
+def _save_cache(cache, sv: ServeConfig):
     """Persist the plan cache (COREPLNC container) with this run's
     write-backs so the next ``--plan-cache`` run warm-starts from them."""
     if cache is None:
         return
-    cache.save(args.plan_cache)
+    cache.save(sv.plan_cache_path)
     st = cache.stats
-    print(f"plan cache saved: {len(cache)} entries -> {args.plan_cache} "
+    print(f"plan cache saved: {len(cache)} entries -> {sv.plan_cache_path} "
           f"({st.hits_exact} exact / {st.hits_warm} warm hits, "
           f"{st.writes} writes)")
 
 
-def _serve_frontend(args, ds, plan, k, cache=None):
+def _load_query_specs(path: str):
+    import json
+
+    with open(path) as f:
+        specs = json.load(f)
+    if not isinstance(specs, list) or not specs:
+        raise SystemExit(f"--queries {path}: expected a non-empty JSON "
+                         f"list of query specs")
+    for i, spec in enumerate(specs):
+        if "columns" not in spec:
+            raise SystemExit(f"--queries {path}: spec #{i} missing "
+                             f"'columns'")
+    return specs
+
+
+def _serve_multiquery(cfg: LaunchConfig, ds, udfs, k: int, cache=None):
+    """N concurrent queries through one CoreSession (DESIGN.md §10):
+    shared block-diagonal fused scoring, cross-query UDF dedupe, and
+    Eq. 3.1-weighted fair scheduling across the tenants."""
+    wl, opt, sv = cfg.workload, cfg.optimize, cfg.serve
+    specs = _load_query_specs(sv.queries_path)
+    session = CoreSession(options=opt, plan_cache=cache, seed=sv.seed)
+    queries = []
+    for i, spec in enumerate(specs):
+        q = make_query(ds, udfs, columns=[int(c) for c in spec["columns"]],
+                       target_selectivity=float(spec.get("selectivity", 0.5)),
+                       accuracy_target=float(spec.get("accuracy", wl.accuracy)),
+                       seed=int(spec.get("seed", wl.seed + 1 + i)))
+        h = session.register_query(
+            q, ds.x[:k],
+            quant_dtype=spec.get("quant_dtype", opt.quant_dtype),
+            slo=spec.get("slo_ms"))
+        queries.append(q)
+        print(f"q{h.qid}: {' AND '.join(q.names())} "
+              f"A={spec.get('accuracy', wl.accuracy)}")
+    eng = session.serve(config=sv)
+    x_serve = ds.x[k:]
+    session.run_stream(x_serve)
+    st = eng.session_stats()
+    ok, msg = eng.conserved()
+    ded = st["dedupe"]
+    print(f"\nsession: {st['queries']} queries over {len(x_serve)} records; "
+          f"conservation {'OK' if ok else 'VIOLATED: ' + msg}")
+    print(f"shared scorer: {st['shared_cols']} packed columns "
+          f"({st['stacked_cols_saved']} deduped), {st['restacks']} "
+          f"restack(s)")
+    print(f"UDF dedupe: {ded['hits']} hits / {ded['misses']} misses "
+          f"(rate {ded['hit_rate']:.3f}), {ded['saved_cost_ms']:.0f} ms "
+          f"cost saved")
+    sched = st["scheduler"]
+    for h in session.handles:
+        qs = eng.query_stats(h.qid)
+        print(f"  q{h.qid}: emitted {qs['emitted']} "
+              f"(+{qs['rejected']} rejected), cost "
+              f"{qs['model_cost_ms']:.0f} ms, weight {qs['weight']:.2f}, "
+              f"served {qs['served_cost_ms']:.0f} ms device time")
+    # served-accuracy audit per tenant, same recipe as the 1-query path
+    for h, q in zip(session.handles, queries):
+        orig_set = set(execute_plan(orig_plan(q), x_serve).passed.tolist())
+        srv = eng.servers[h.qid]
+        acc = (sum(1 for i in srv.emitted if i in orig_set)
+               / max(len(orig_set), 1))
+        print(f"  q{h.qid} served accuracy {acc:.3f}")
+    print(f"scheduler: {sched['grants']} service quanta, "
+          f"total {st['model_cost_ms']:.0f} ms model cost")
+
+
+def _serve_frontend(cfg: LaunchConfig, ds, plan, k, cache=None):
     """Single-host serving through the SLO-aware request front end: the
     held-out stream arrives as Poisson requests with per-request
     deadlines; goodput is reported next to raw throughput (DESIGN.md
@@ -215,8 +400,9 @@ def _serve_frontend(args, ds, plan, k, cache=None):
 
     from repro.serving.frontend import ServingFrontEnd, SLOPolicy
 
+    sv = cfg.serve
     held = ds.x[k:]
-    rows_per = max(1, args.request_rows)
+    rows_per = max(1, sv.request_rows)
     n_req = len(held) // rows_per
     if n_req == 0:
         raise SystemExit(f"--request-rows {rows_per} larger than the "
@@ -224,23 +410,23 @@ def _serve_frontend(args, ds, plan, k, cache=None):
     # capacity on the cost-model clock: the plan's Eq. 3.1 estimate says
     # one request costs est_total_cost * rows_per ms at the full plan
     req_ms = plan.est_total_cost * rows_per
-    rate = args.arrival_rate or 1.3 / (req_ms / 1e3)
-    rng = np.random.RandomState(args.seed)
+    rate = sv.arrival_rate or 1.3 / (req_ms / 1e3)
+    rng = np.random.RandomState(sv.seed)
     arrivals = np.cumsum(rng.exponential(1e3 / rate, n_req))
-    bp = not args.no_backpressure
-    server = CascadeServer(plan, tile=args.tile, use_kernel=True,
-                           seed=args.seed, plan_cache=cache)
+    bp = sv.backpressure
+    server = CascadeServer(plan, tile=sv.tile, use_kernel=sv.use_kernel,
+                           seed=sv.seed, plan_cache=cache)
     fe = ServingFrontEnd(server, policy=SLOPolicy(degrade=bp,
                                                   shed_expired=bp))
     for r in range(n_req):
         idx = np.arange(k + r * rows_per, k + (r + 1) * rows_per)
-        fe.submit_request(idx, ds.x[idx], deadline_ms=args.slo_ms,
+        fe.submit_request(idx, ds.x[idx], deadline_ms=sv.slo_ms,
                           arrival_ms=float(arrivals[r]))
     st = fe.run()
     ok, msg = fe.conserved()
     lat = [r.latency_ms for r in fe.requests.values() if r.done]
     print(f"\nfront end: {st.requests_total} requests x {rows_per} rows, "
-          f"SLO {args.slo_ms:.0f} ms, arrivals {rate:.2f} req/s "
+          f"SLO {sv.slo_ms:.0f} ms, arrivals {rate:.2f} req/s "
           f"(backpressure {'on' if bp else 'OFF'})")
     print(f"goodput {st.goodput_rps:.2f} req/s vs throughput "
           f"{st.throughput_rps:.2f} req/s (ratio {st.goodput_ratio:.3f}); "
@@ -255,33 +441,34 @@ def _serve_frontend(args, ds, plan, k, cache=None):
           f"rejected; conservation {'OK' if ok else 'VIOLATED: ' + msg}")
 
 
-def _serve_sharded(args, ds, q, plan, cache=None):
+def _serve_sharded(cfg: LaunchConfig, ds, q, plan, cache=None):
     """K-host sharded serving with quorum-voted swaps (DESIGN.md §6)."""
     import numpy as np
 
     from repro.distributed.serving import ShardedCascadeServer
 
+    wl, sv = cfg.workload, cfg.serve
     if not any(s.proxy is not None for s in plan.stages):
         raise SystemExit(
-            f"--hosts {args.hosts} needs a proxied plan: quorum swaps "
+            f"--hosts {sv.hosts} needs a proxied plan: quorum swaps "
             f"broadcast the packed scorer artifact, which mode="
-            f"{args.mode!r} does not produce")
+            f"{wl.mode!r} does not produce")
 
-    K = args.hosts
-    per_host = max(args.n // (2 * K), 1500)
-    if args.drift:
+    K = sv.hosts
+    per_host = max(wl.n // (2 * K), 1500)
+    if sv.drift:
         streams = make_sharded_drifting_streams(
             ds, K, max(per_host // 4, 500), per_host,
             shift_targets={c: (2.8 if c != 1 else -2.6)
-                           for c in range(args.preds)},
-            corr_gain=2.5, drift_skew=args.drift_skew, seed=args.seed,
+                           for c in range(wl.preds)},
+            corr_gain=2.5, drift_skew=sv.drift_skew, seed=sv.seed,
         )
         xs = [s.x for s in streams]
         print(f"{K} drifting shards x {[s.n for s in streams]} records, "
               f"drift scales "
               f"{[round(s.meta['drift_scale'], 2) for s in streams]}")
     else:
-        k0 = max(1000, int(0.05 * args.n))
+        k0 = max(1000, int(0.05 * wl.n))
         held = ds.x[k0:]
         xs = [held[i::K] for i in range(K)]
         print(f"{K} shards x {[len(x) for x in xs]} held-out records")
@@ -293,27 +480,27 @@ def _serve_sharded(args, ds, q, plan, cache=None):
     policy = AdaptivePolicy(audit_rate=0.03, threshold=50.0,
                             min_reservoir=128, cooldown_records=1024,
                             reservoir_capacity=512)
-    kill_at = args.kill_coordinator_at
+    kill_at = sv.kill_coordinator_at
     if kill_at is not None and kill_at not in ("prepare", "commit",
                                                "mid-commit"):
         kill_at = int(kill_at)
     worker_spec = None
-    if args.transport == "process":
+    if sv.transport == "process":
         worker_spec = {
-            "dataset": dict(n=args.n, correlation=args.correlation,
-                            seed=args.seed),
+            "dataset": dict(n=wl.n, correlation=wl.correlation,
+                            seed=wl.seed),
             "udfs": dict(hidden=64, depth=2, train_rows=3000,
-                         seed=args.seed, declared_cost_ms=args.udf_cost_ms),
-            "query": dict(columns=list(range(args.preds)),
+                         seed=wl.seed, declared_cost_ms=wl.udf_cost_ms),
+            "query": dict(columns=list(range(wl.preds)),
                           target_selectivity=0.5,
-                          accuracy_target=args.accuracy, seed=args.seed + 1),
+                          accuracy_target=wl.accuracy, seed=wl.seed + 1),
         }
-    srv = ShardedCascadeServer(plan, K, tile=args.tile, seed=args.seed,
-                               policy=policy, transport=args.transport,
+    srv = ShardedCascadeServer(plan, K, tile=sv.tile, seed=sv.seed,
+                               policy=policy, transport=sv.transport,
                                kill_coordinator_at=kill_at,
-                               straggler_host=args.straggler_host,
+                               straggler_host=sv.straggler_host,
                                worker_spec=worker_spec,
-                               slo_ms=args.slo_ms,
+                               slo_ms=sv.slo_ms,
                                plan_cache=cache)
     stats = srv.run_streams(xs)
     x_all = np.concatenate(xs)
@@ -333,7 +520,7 @@ def _serve_sharded(args, ds, q, plan, cache=None):
     if stats.frontend_stats:
         shed = sum(f.records_shed for f in stats.frontend_stats)
         print(f"request front end: fleet goodput ratio "
-              f"{stats.fleet_goodput_ratio:.3f} at SLO {args.slo_ms:.0f} ms "
+              f"{stats.fleet_goodput_ratio:.3f} at SLO {sv.slo_ms:.0f} ms "
               f"(shed-only backpressure; {shed} record(s) shed)")
     if stats.failovers or stats.fences or stats.resyncs or stats.pooled_swaps:
         print(f"fault tolerance: {stats.failovers} failover(s) "

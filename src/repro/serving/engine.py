@@ -171,7 +171,7 @@ class CascadeServer:
                  use_kernel: bool = True, fused: bool = True,
                  adaptive: bool = False,
                  policy: Optional[AdaptivePolicy] = None, seed: int = 0,
-                 plan_cache=None):
+                 plan_cache=None, scorer=None):
         self.query = plan.query
         self.tile = tile
         self.use_kernel = use_kernel
@@ -200,8 +200,14 @@ class CascadeServer:
             except ImportError:  # pragma: no cover - kernel optional
                 proxy_score_batch = None
             self._scorer = proxy_score_batch
+        # cross-query UDF evaluation hook (serving/multiquery.py): when a
+        # session installs a runner, ``_eval_udf`` routes every stage and
+        # audit UDF call through it — fn(pred, idxs, x) -> (labels,
+        # cost_ms) — so identical (udf, record) evaluations dedupe across
+        # the session's queries and only fresh work is charged
+        self.udf_runner = None
         self._states: List[_PlanState] = []
-        self._install(plan)
+        self._install(plan, scorer=scorer)
         self._record_to_cache(plan)
         # adaptive machinery
         self._rng = np.random.RandomState(seed)
@@ -311,6 +317,17 @@ class CascadeServer:
         escalates at the fleet level (DESIGN.md §6)."""
         return {pair: k.export() for pair, k in self._kappa.items()}
 
+    def has_ready_batch(self, *, drain: bool = False) -> bool:
+        """Whether ``pump_one(drain=drain)`` would find work: a
+        superseded version with anything queued, a full tile at the
+        current version, or (under ``drain``) anything at all."""
+        for st in self._states[:-1]:
+            if not st.empty():
+                return True
+        if drain:
+            return not self._states[-1].empty()
+        return any(len(q) >= self.tile for q in self._states[-1].queues)
+
     def in_flight(self) -> int:
         """Records sitting in ANY plan version's stage queues — zero after
         a full drain, or something was lost in the pipe (the falsifiable
@@ -335,7 +352,15 @@ class CascadeServer:
         for fn in self._finalize_hooks:
             fn(emitted, rejected, version)
 
-    def submit(self, indices: np.ndarray, rows: np.ndarray):
+    def submit(self, indices: np.ndarray, rows: np.ndarray, *,
+               masks: Optional[np.ndarray] = None,
+               margins: Optional[np.ndarray] = None):
+        """``masks`` (N, P in THIS plan's column layout) short-circuits
+        the fused scoring pass — the multi-query session scores one
+        stacked launch for every tenant and hands each engine its own
+        column slice.  Mask rows are versioned exactly like locally
+        scored ones: they ride the current state's queues and are only
+        read through its ``stage_cols``."""
         if len(rows) == 0:
             # short-circuit: the front end's batching loop ticks on every
             # arrival-poll, so idle ticks would otherwise still walk the
@@ -345,8 +370,11 @@ class CascadeServer:
             return
         cur = self._states[-1]
         rows = np.asarray(rows, np.float32)
-        margins = None
-        if cur.cascade is not None and len(rows):
+        if masks is not None:
+            masks = np.asarray(masks, bool)
+            for i, r, m in zip(indices, rows, masks):
+                cur.queues[0].append((int(i), r, m))
+        elif cur.cascade is not None and len(rows):
             t0 = advisory_wall_ms()
             if self.adaptive and self.policy.audit_importance:
                 # the importance-audit weights need score-to-threshold
@@ -364,6 +392,15 @@ class CascadeServer:
         if self.adaptive and len(rows):
             self._observe_chunk(np.asarray(indices), rows, margins)
         self._records_submitted += len(rows)
+
+    def _eval_udf(self, pred, idxs: np.ndarray, x: np.ndarray):
+        """Run ``pred``'s UDF over ``x`` and return (labels, cost_ms).
+        The default path runs and charges everything; a session-installed
+        ``udf_runner`` dedupes repeat (udf, record) evaluations across
+        queries and charges only the fresh ones."""
+        if self.udf_runner is not None:
+            return self.udf_runner(pred, idxs, x)
+        return pred.udf(x), len(x) * pred.udf.cost
 
     def _observe_chunk(self, indices: np.ndarray, rows: np.ndarray,
                        margins: Optional[np.ndarray] = None):
@@ -391,10 +428,9 @@ class CascadeServer:
             self._reservoir.add(int(i), r, force=True)
         labels_by_pred = {}
         for p, pred in enumerate(self.query.predicates):
-            labels = pred.udf(xa)
+            labels, cost = self._eval_udf(pred, ia, xa)
             labels_by_pred[p] = labels
             sigma = pred.evaluate(labels)
-            cost = len(xa) * pred.udf.cost
             self.stats.audit_cost_ms += cost
             self.stats.model_cost_ms += cost
             for idx, s, w in zip(ia, sigma, ipw):
@@ -455,8 +491,8 @@ class CascadeServer:
             self._notify_finalized([], rejected_ids, state.version)
             return
         pred = state.plan.query.predicates[stage.pred_idx]
-        labels = pred.udf(x)
-        self.stats.model_cost_ms += len(x) * pred.udf.cost
+        labels, udf_cost = self._eval_udf(pred, idxs, x)
+        self.stats.model_cost_ms += udf_cost
         self.stats.stage_udf_batches[si] += 1
         passed = pred.evaluate(labels)
         self.stats.stage_kept[si] += int(passed.sum())
@@ -514,6 +550,29 @@ class CascadeServer:
                         if s is self._states[-1] or not s.empty()]
         self._pump_state(self._states[-1], drain=drain)
 
+    def pump_one(self, *, drain: bool = False) -> bool:
+        """Run AT MOST one stage batch — the multi-query scheduler's
+        service quantum: it charges the cost-model delta of exactly one
+        batch to the tenant it picked.  Superseded versions still take
+        precedence (same ordering as ``pump``); returns False when no
+        batch was ready (nothing >= a tile, or nothing at all under
+        ``drain``)."""
+        self._states = [s for s in self._states
+                        if s is self._states[-1] or not s.empty()]
+        for state in self._states:
+            is_cur = state is self._states[-1]
+            flush = drain or not is_cur
+            n = len(state.plan.stages)
+            order = range(n) if flush else reversed(range(n))
+            for si in order:
+                q = state.queues[si]
+                if len(q) >= self.tile or (flush and q):
+                    take = min(self.tile, len(q))
+                    batch = [q.popleft() for _ in range(take)]
+                    self._run_stage_batch(state, si, batch)
+                    return True
+        return False
+
     # ----------------------------------------------------------- adaptivity
     def _escalate(self) -> Tuple[str, bool]:
         """Decide re-optimization depth from the stale plan's estimated
@@ -562,7 +621,7 @@ class CascadeServer:
         any batch boundary."""
         if not (self.adaptive and self._drift):
             return False
-        from repro.core.optimizer import reoptimize
+        from repro.core.api import REBUILD_DEFAULTS, rebuild_plan
 
         signal, observed, expected = self._drift
         # the triggering deviation is recorded in the DriftEvent below; the
@@ -571,8 +630,10 @@ class CascadeServer:
         old = self._states[-1]
         t0 = advisory_wall_ms()
         x_s, known_sigma = self._reservoir.sample()
-        new_plan = reoptimize(old.plan, x_s, known_sigma=known_sigma,
-                              mode=mode, step=self.policy.step)
+        new_plan = rebuild_plan(
+            old.plan, x_s,
+            REBUILD_DEFAULTS.replace(reopt=mode, step=self.policy.step),
+            known_sigma=known_sigma)
         reopt_ms = advisory_wall_ms() - t0
         self.stats.reopt_ms += reopt_ms
         # the builder's UDF labeling on reservoir rows is real model work

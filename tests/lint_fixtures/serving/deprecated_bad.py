@@ -1,0 +1,6 @@
+"""Fixture: internal decision-path code calling a deprecated shim."""
+from repro.core.optimizer import reoptimize
+
+
+def refresh(plan, x):
+    return reoptimize(plan, x, mode="alloc")

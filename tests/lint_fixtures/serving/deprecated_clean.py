@@ -1,0 +1,9 @@
+"""Fixture: the redesigned core.api surface (and the session handle's
+``.optimize`` attribute, which the rule must NOT confuse with the
+deprecated bare ``optimize`` shim)."""
+from repro.core.api import REBUILD_DEFAULTS, rebuild_plan
+
+
+def refresh(handle, plan, x):
+    handle.optimize(x)
+    return rebuild_plan(plan, x, REBUILD_DEFAULTS)

@@ -1,0 +1,7 @@
+"""Fixture: justified suppression on a deprecated shim call."""
+from repro.core.optimizer import reoptimize
+
+
+def refresh(plan, x):
+    # corelint: disable=deprecated-entry-point
+    return reoptimize(plan, x, mode="alloc")

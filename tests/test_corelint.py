@@ -33,6 +33,7 @@ EXPECTED = {
     "wire-pack-outside-ops": ("generic/wire_pack_bad.py", 5),
     "wire-minor-exhaustive": ("generic/wire_minor_bad.py", 7),
     "weights-travel": ("generic/weights_bad.py", 6),
+    "deprecated-entry-point": ("serving/deprecated_bad.py", 6),
 }
 
 
@@ -83,7 +84,7 @@ def test_clean_twin_is_silent(rule_id):
 
 def test_run_corelint_over_fixture_tree():
     report = run_corelint([FIXTURES], root=FIXTURES.parent.parent)
-    assert report.files_scanned == 27
+    assert report.files_scanned == 30
     assert report.parse_errors == []
     got = {(v.path.split("lint_fixtures/")[1], v.rule) for v in report.violations}
     assert got == {(rel, rid) for rid, (rel, _l) in EXPECTED.items()}

@@ -1,0 +1,287 @@
+"""Multi-query session serving (DESIGN.md §10): bit-identical per-query
+emissions vs isolated servers (including across a mid-stream hot-swap of
+one tenant only), cross-query UDF dedupe, conservation through the
+shared scheduler, the WFQ starvation bound, and per-query epoch spaces
+in the quorum-swap coordinator."""
+import numpy as np
+import pytest
+
+from repro.core import CoreSession, OptimizeOptions, build_plan
+from repro.data.synthetic import make_dataset, make_query, make_udfs
+from repro.distributed.consensus import (
+    DriftEvent,
+    DriftVote,
+    MultiQueryCoordinator,
+    ReservoirSample,
+    SwapAck,
+)
+from repro.serving.engine import CascadeServer
+from repro.serving.multiquery import (
+    FairScheduler,
+    MultiQueryEngine,
+    eq31_benefit,
+    udf_fingerprint,
+)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    ds = make_dataset(n=7000, correlation=0.9, seed=31)
+    udfs = make_udfs(ds, hidden=16, depth=1, train_rows=1000, seed=31,
+                     declared_cost_ms=10.0)
+    return ds, udfs
+
+
+@pytest.fixture(scope="module")
+def session_run(workload):
+    """One shared session (Q1 on cols [0,1], Q2 on [1,2] — they share
+    column 1's UDF) driven in lockstep with two isolated twins, with a
+    hot-swap of ONLY Q1's plan at a mid-stream chunk boundary."""
+    ds, udfs = workload
+    x_sample = ds.x[:1000]
+    x_serve = ds.x[1000:4600]
+    q1 = make_query(ds, udfs, columns=[0, 1], seed=33)
+    q2 = make_query(ds, udfs, columns=[1, 2], seed=34)
+    opts = OptimizeOptions(step=0.05, seed=31)
+
+    session = CoreSession(options=opts)
+    h1 = session.register_query(q1, x_sample)
+    h2 = session.register_query(q2, x_sample)
+    eng = session.serve()
+    assert isinstance(eng, MultiQueryEngine)
+
+    # a genuinely different Q1 plan (coarser allocation grid) so the swap
+    # changes thresholds, not just the version number
+    alt = build_plan(q1, x_sample, OptimizeOptions(mode="core-a", step=0.1,
+                                                   seed=31))
+    iso = [CascadeServer(h.plan, tile=1024, use_kernel=True, seed=31)
+           for h in (h1, h2)]
+
+    chunk, swap_at = 512, 2048
+    q2_version_at_swap = None
+    q2_swaps_at_swap = None
+    for s0 in range(0, len(x_serve), chunk):
+        if s0 == swap_at:
+            q2_version_at_swap = eng.servers[1].plan_version
+            q2_swaps_at_swap = eng.servers[1].stats.plan_swaps
+            eng.install_plan(0, alt)
+            iso[0].install_plan(alt)
+        idx = np.arange(s0, min(s0 + chunk, len(x_serve)))
+        eng.submit(idx, x_serve[idx])
+        eng.pump()
+        for srv in iso:
+            srv.submit(idx, x_serve[idx])
+            srv.pump()
+    eng.drain()
+    for srv in iso:
+        while srv.in_flight():
+            srv.pump(drain=True)
+    return {"eng": eng, "iso": iso, "handles": (h1, h2),
+            "q2_version_at_swap": q2_version_at_swap,
+            "q2_swaps_at_swap": q2_swaps_at_swap,
+            "n_serve": len(x_serve)}
+
+
+# ------------------------------------------------- shared-mask property test
+def test_emissions_bit_identical_to_isolated(session_run):
+    """Stacked scoring rides the block-diagonal packed readout: a
+    column's score has exact-zero cross-query terms, so every tenant's
+    emitted-id multiset matches its isolated twin bit-for-bit — across
+    the mid-stream swap of Q1's plan too (in-flight entries finish under
+    the version that scored them, in both drivers)."""
+    eng, iso = session_run["eng"], session_run["iso"]
+    for qid in (0, 1):
+        assert sorted(eng.servers[qid].emitted) == sorted(iso[qid].emitted)
+
+
+def test_hot_swap_touches_only_target_tenant(session_run):
+    eng = session_run["eng"]
+    # Q1 swapped exactly once; Q2's plan version never moved
+    assert eng.servers[0].stats.plan_swaps == 1
+    assert eng.servers[1].stats.plan_swaps == session_run["q2_swaps_at_swap"]
+    assert eng.servers[1].plan_version == session_run["q2_version_at_swap"]
+    # the shared scorer restacked for the swap
+    assert eng.stats.restacks >= 1
+
+
+def test_conservation_and_dedupe(session_run):
+    eng, n = session_run["eng"], session_run["n_serve"]
+    ok, msg = eng.conserved()
+    assert ok, msg
+    st = eng.session_stats()
+    # every submitted record was finalized exactly once per tenant
+    assert st["finalized_per_query"] == [n, n]
+    for qid in (0, 1):
+        qs = eng.query_stats(qid)
+        assert qs["in_flight"] == 0
+        assert qs["emitted"] == len(eng.servers[qid].emitted)
+    # Q1 and Q2 share column 1's UDF: identical (udf, record) evaluations
+    # on the cascade tails are served from the session's result cache
+    ded = st["dedupe"]
+    assert ded["hits"] > 0
+    assert ded["saved_cost_ms"] > 0.0
+    assert 0.0 < ded["hit_rate"] < 1.0
+
+
+def test_shared_udf_fingerprint_is_content_keyed(workload):
+    ds, udfs = workload
+    q1 = make_query(ds, udfs, columns=[0, 1], seed=33)
+    q2 = make_query(ds, udfs, columns=[1, 2], seed=34)
+    # both queries name column 1's UDF -> same fingerprint (dedupe key);
+    # different columns' UDFs -> different fingerprints.  Predicates sit
+    # in the order of the columns= list.
+    fp1 = [udf_fingerprint(p.udf) for p in q1.predicates]
+    fp2 = [udf_fingerprint(p.udf) for p in q2.predicates]
+    assert fp1[1] == fp2[0]          # column 1 shared
+    assert fp1[0] != fp2[1]          # column 0 vs column 2
+
+
+# --------------------------------------------------------- WFQ starvation bound
+def test_wfq_service_tracks_weights():
+    """Both tenants continuously backlogged: per-prefix virtual times
+    stay within one service quantum of each other (the classic WFQ
+    bound), and cumulative service converges to the weight ratio."""
+    w = {0: 1.0, 1: 4.0}
+    sched = FairScheduler(w)
+    quantum = 10.0
+    for _ in range(200):
+        q = sched.pick([0, 1])
+        sched.charge(q, quantum)
+    v = {0: 0.0, 1: 0.0}
+    bound = quantum / min(w.values())
+    for qid, cost in sched.service_log:
+        v[qid] += cost / w[qid]
+        assert abs(v[0] - v[1]) <= bound + 1e-9
+    assert sched.served_cost[1] / sched.served_cost[0] == \
+        pytest.approx(4.0, rel=0.15)
+
+
+def test_wfq_no_banked_credit_on_reentry():
+    """A tenant that sat idle while another was served re-enters at the
+    incumbents' v-time floor: it may NOT burn its stale low clock as
+    banked credit and monopolize the device (the starvation bound)."""
+    sched = FairScheduler({0: 1.0, 1: 1.0})
+    for _ in range(50):
+        assert sched.pick([0]) == 0
+        sched.charge(0, 10.0)
+    grants = []
+    for _ in range(10):
+        q = sched.pick([0, 1])
+        sched.charge(q, 10.0)
+        grants.append(q)
+    # equal weights -> near-alternation from the re-entry point on; the
+    # newcomer must not take a run of grants proportional to idle time
+    assert grants.count(1) <= 6
+    assert 0 in grants[:2]
+
+
+def test_wfq_pick_prefers_min_vtime_then_weight():
+    sched = FairScheduler({0: 1.0, 1: 2.0, 2: 2.0})
+    # fresh backlog, all clocks 0: tie broken to the heavier weight,
+    # then the lower qid
+    assert sched.pick([0, 1, 2]) == 1
+    sched.charge(1, 4.0)   # vtime[1] = 2.0
+    assert sched.pick([0, 1, 2]) == 2
+    sched.charge(2, 4.0)   # vtime[2] = 2.0
+    assert sched.pick([0, 1, 2]) == 0
+
+
+def test_eq31_benefit_clipped_and_monotone(session_run):
+    h1, h2 = session_run["handles"]
+    for h in (h1, h2):
+        b = eq31_benefit(h.plan)
+        assert 0.1 <= b <= 100.0
+        # a cascade that saves more cost gets more weight
+        orig = sum(p.udf.cost for p in h.plan.query.predicates)
+        assert b == pytest.approx(
+            np.clip((orig - h.plan.est_total_cost)
+                    / h.plan.est_total_cost, 0.1, 100.0))
+
+
+# ----------------------------------------------- per-query epoch spaces (§10)
+@pytest.fixture(scope="module")
+def two_plans(workload):
+    ds, udfs = workload
+    x = ds.x[:1000]
+    opts = OptimizeOptions(mode="core-a", step=0.05, kind="mixed", seed=31)
+    qa = make_query(ds, udfs, columns=[0, 1], seed=51)
+    qb = make_query(ds, udfs, columns=[1, 2], seed=52)
+    return build_plan(qa, x, opts), build_plan(qb, x, opts)
+
+
+def _vote(host, *, qid=0, epoch=0, escalated=False, n_rows=4):
+    rng = np.random.default_rng(7 + host)
+    return DriftVote(
+        host=host, epoch=epoch,
+        event=DriftEvent(at_record=100, signal="stage0:keep",
+                         observed=0.1, expected=0.5, escalated=escalated),
+        reservoir=ReservoirSample(
+            indices=np.arange(n_rows) + 1000 * host,
+            x=rng.standard_normal((n_rows, 3)).astype(np.float32),
+            known_sigma={0: (np.ones(n_rows, bool),
+                             rng.random(n_rows) < 0.5)},
+            weights=np.ones(n_rows)),
+        qid=qid)
+
+
+def test_multiquery_coordinator_isolates_tenants(two_plans):
+    """A pending prepare on one tenant's qid must not stall another
+    tenant's full vote -> propose -> ack -> commit cycle: epochs live in
+    per-query spaces and every outbound message is stamped with its
+    qid."""
+    pa, pb = two_plans
+    mc = MultiQueryCoordinator({0: pa, 1: pb}, n_hosts=3,
+                               reopt_fn=lambda plan, merged, mode: plan)
+    assert mc.qids == [0, 1]
+
+    # qid 0 reaches quorum and proposes -> its prepare is pending
+    # (offer_vote returns True on the vote that COMPLETES the quorum)
+    assert [mc.offer_vote(_vote(h, qid=0)) for h in range(2)] == [False, True]
+    prep0 = mc.propose(0)
+    assert prep0.qid == 0 and prep0.epoch == 1
+    assert 0 in mc.pending_qids()
+    # further qid-0 votes are dropped while ITS prepare is pending...
+    assert not mc.offer_vote(_vote(2, qid=0))
+
+    # ...but qid 1 runs a complete swap meanwhile
+    assert [mc.offer_vote(_vote(h, qid=1)) for h in range(2)] == [False, True]
+    prep1 = mc.propose(1)
+    assert prep1.qid == 1 and prep1.epoch == 1
+    commit1 = None
+    for h in range(3):
+        c = mc.offer_ack(SwapAck(host=h, epoch=prep1.epoch, ok=True,
+                                 attempt=mc.coord(1).pending.attempt,
+                                 qid=1))
+        commit1 = c or commit1
+    assert commit1 is not None and commit1.qid == 1
+    assert mc.epoch(1) == 1
+    assert mc.epoch(0) == 0          # qid 0 untouched by qid 1's commit
+    assert 0 in mc.pending_qids() and 1 not in mc.pending_qids()
+
+    # qid 0's own swap completes afterwards in its own epoch space
+    commit0 = None
+    for h in range(3):
+        c = mc.offer_ack(SwapAck(host=h, epoch=prep0.epoch, ok=True,
+                                 attempt=mc.coord(0).pending.attempt,
+                                 qid=0))
+        commit0 = c or commit0
+    assert commit0 is not None and commit0.qid == 0
+    assert mc.epoch(0) == 1 and mc.epoch(1) == 1
+
+
+def test_multiquery_coordinator_routes_by_qid(two_plans):
+    pa, pb = two_plans
+    mc = MultiQueryCoordinator({0: pa, 1: pb}, n_hosts=3,
+                               reopt_fn=lambda plan, merged, mode: plan)
+    # a qid-1 vote lands on qid 1's coordinator only (not yet a quorum)
+    assert not mc.offer_vote(_vote(0, qid=1))
+    assert mc.coord(1).votes_pending == 1
+    assert mc.coord(0).votes_pending == 0
+    # fencing is a host property: it fans out to every tenant
+    mc.mark_fenced(2)
+    assert 2 in mc.coord(0).fenced and 2 in mc.coord(1).fenced
+    mc.mark_rejoined(2)
+    assert 2 not in mc.coord(0).fenced and 2 not in mc.coord(1).fenced
+    # duplicate registration is rejected
+    with pytest.raises(ValueError):
+        mc.add_query(1, pb)
